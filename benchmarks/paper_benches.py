@@ -1,0 +1,197 @@
+"""One benchmark per paper figure/table (CRRM 2025).
+
+Each function returns (name, us_per_call, derived) where ``derived`` is the
+figure's headline quantity.  ``python -m benchmarks.run`` prints them as CSV.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.crrm import CRRM
+from repro.core.params import CRRM_parameters
+from repro.sim.mobility import random_moves
+
+
+def _timeit(fn, reps=3):
+    fn()  # warm-up / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.tree_util.tree_map(
+        lambda x: x.block_until_ready() if hasattr(x, "block_until_ready")
+        else x, out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+# -- Figure 2: throughput vs distance per propagation model --------------------
+def fig2_pathloss_throughput():
+    distances = np.array([100, 250, 500, 1000, 2000, 4000], np.float32)
+    rows = {}
+    for model, h_bs in [("RMa", 35.0), ("UMa", 25.0), ("UMi", 10.0),
+                        ("power_law", 25.0)]:
+        tput = []
+        for d in distances:
+            kw = {"fc_GHz": 2.0} if model != "power_law" else {}
+            sim = CRRM(CRRM_parameters(
+                n_ues=1, ue_positions=np.array([[d, 0.0, 1.5]], np.float32),
+                cell_positions=np.array([[0.0, 0.0, h_bs]], np.float32),
+                pathloss_model_name=model, pathloss_params=kw,
+                power_W=160.0, bandwidth_Hz=20e6))
+            tput.append(float(np.asarray(sim.get_UE_throughputs())[0]))
+        rows[model] = tput
+    print("# fig2: distance_m," + ",".join(rows))
+    for i, d in enumerate(distances):
+        print(f"# fig2: {d:.0f},"
+              + ",".join(f"{rows[m][i]/1e6:.1f}" for m in rows))
+    us = _timeit(lambda: CRRM(CRRM_parameters(
+        n_ues=1, ue_positions=np.array([[2000.0, 0.0, 1.5]], np.float32),
+        cell_positions=np.array([[0.0, 0.0, 35.0]], np.float32),
+        pathloss_model_name="RMa",
+        power_W=160.0)).get_UE_throughputs())
+    ratio = rows["RMa"][4] / max(rows["UMa"][4], 1.0)
+    return "fig2_rma_over_uma_at_2km", us, ratio
+
+
+# -- Figure 3: 1-sector vs 3-sector angular throughput --------------------------
+def fig3_sectors():
+    angles = np.linspace(-np.pi, np.pi, 73)
+    ue = np.column_stack([800 * np.cos(angles), 800 * np.sin(angles),
+                          np.full(angles.size, 1.5)]).astype(np.float32)
+
+    def gains(n_sectors):
+        cells = np.array([[0.0, 0.0, 25.0]] * n_sectors, np.float32)
+        sim = CRRM(CRRM_parameters(
+            n_ues=angles.size, ue_positions=ue, cell_positions=cells,
+            n_sectors=n_sectors, pathloss_model_name="UMa", power_W=10.0))
+        return np.asarray(sim.get_pathgains()).max(axis=1)
+
+    g3 = gains(3)
+    us = _timeit(lambda: gains(3))
+    lobe_ratio = float(g3.max() / g3.min())
+    return "fig3_sector_lobe_ratio", us, lobe_ratio
+
+
+# -- Figure 4: fairness parameter sweep -----------------------------------------
+def fig4_fairness():
+    rng = np.random.default_rng(5)
+    ue = np.column_stack([rng.uniform(50, 1500, 12),
+                          rng.uniform(50, 1500, 12),
+                          np.full(12, 1.5)]).astype(np.float32)
+
+    def spread(p):
+        sim = CRRM(CRRM_parameters(
+            n_ues=12, ue_positions=ue,
+            cell_positions=np.array([[0.0, 0.0, 25.0]], np.float32),
+            pathloss_model_name="UMa", power_W=10.0, fairness_p=p))
+        t = np.asarray(sim.get_UE_throughputs())
+        t = t[t > 0]
+        return float(t.max() / max(t.min(), 1.0))
+
+    ps = [0.0, 0.25, 0.5, 0.75, 1.0]
+    spreads = [spread(p) for p in ps]
+    print("# fig4: p=" + ",".join(map(str, ps)))
+    print("# fig4: max/min=" + ",".join(f"{s:.2f}" for s in spreads))
+    us = _timeit(lambda: spread(0.5))
+    return "fig4_equalization_at_p1", us, spreads[-1]
+
+
+# -- Figure 5: PPP SIR CCDF vs analytic theory ------------------------------------
+def fig5_ppp_validation():
+    import sys
+    sys.path.insert(0, "tests")
+    from test_ppp_theory import ppp_sir_ccdf_theory, simulate_sir
+
+    t0 = time.perf_counter()
+    sir = simulate_sir(n_bs=4000, n_ue=800)
+    us = (time.perf_counter() - t0) * 1e6
+    thetas = 10 ** (np.array([-5.0, 0.0, 5.0, 10.0]) / 10)
+    emp = np.array([(sir > t).mean() for t in thetas])
+    theo = ppp_sir_ccdf_theory(thetas)
+    print("# fig5: theta_dB=-5,0,5,10")
+    print("# fig5: empirical=" + ",".join(f"{e:.3f}" for e in emp))
+    print("# fig5: theory=   " + ",".join(f"{t:.3f}" for t in theo))
+    return "fig5_ppp_ccdf_max_err", us, float(np.abs(emp - theo).max())
+
+
+# -- example 13 / §4.2: the smart-update speed-up ---------------------------------
+def tab_smart_update(n_ues=5000, n_cells=500, frac=0.10, n_steps=12):
+    def run(smart):
+        sim = CRRM(CRRM_parameters(
+            n_ues=n_ues, n_cells=n_cells, n_sectors=1, seed=3, smart=smart,
+            pathloss_model_name="UMa", power_W=10.0))
+        sim.get_UE_throughputs()
+        key = jax.random.PRNGKey(42)
+        moves = []
+        for _ in range(n_steps + 2):
+            key, k = jax.random.split(key)
+            i, x = random_moves(k, n_ues, int(frac * n_ues), 3000.0)
+            moves.append((np.asarray(i), np.asarray(x)))
+        for i, x in moves[:2]:
+            sim.move_UEs(i, x)
+            sim.get_UE_throughputs().block_until_ready()
+        t0 = time.perf_counter()
+        for i, x in moves[2:]:
+            sim.move_UEs(i, x)
+            out = sim.get_UE_throughputs()
+        out.block_until_ready()
+        return (time.perf_counter() - t0) / n_steps, np.asarray(out)
+
+    t_smart, o1 = run(True)
+    t_full, o2 = run(False)
+    assert np.allclose(o1, o2, rtol=1e-4), "smart != full"
+    print(f"# smart_update: smart {t_smart*1e3:.1f} ms/step, "
+          f"full {t_full*1e3:.1f} ms/step (identical results verified)")
+    return "tab_smart_update_speedup", t_smart * 1e6, t_full / t_smart
+
+
+def tab_mobility_sweep():
+    """The design's operational boundary: speed-up vs mobility fraction."""
+    factors = []
+    for frac in (0.01, 0.10, 0.5, 1.0):
+        _, us, spd = _speedup_at(frac)
+        factors.append((frac, spd))
+    print("# mobility_sweep: " + ", ".join(
+        f"{f:.0%}->x{s:.2f}" for f, s in factors))
+    return "tab_speedup_at_full_mobility", 0.0, factors[-1][1]
+
+
+def _speedup_at(frac):
+    name, us, spd = tab_smart_update(n_ues=2500, n_cells=250, frac=frac,
+                                     n_steps=6)
+    return name, us, spd
+
+
+# -- kernels: fused pipeline vs materialised reference ------------------------------
+def kernel_fused_sinr():
+    from repro.kernels import ops, ref
+    from repro.sim.pathloss import make_pathloss
+
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    n, m, k = 512, 256, 2
+    U = jnp.concatenate([jax.random.uniform(k1, (n, 2), maxval=5000.0),
+                         jnp.full((n, 1), 1.5)], 1)
+    C = jnp.concatenate([jax.random.uniform(k2, (m, 2), maxval=5000.0),
+                         jnp.full((m, 1), 25.0)], 1)
+    Pw = jnp.full((m, k), 5.0)
+    pm = make_pathloss("UMa")
+
+    ref_fn = jax.jit(lambda: ref.fused_sinr_ref(U, C, Pw, pm.get_pathgain,
+                                                1e-12))
+    us = _timeit(lambda: ref_fn())
+    g_a, a_a, _, _ = ops.fused_sinr(U, C, Pw, pathgain_fn=pm.get_pathgain,
+                                    noise_w=1e-12)
+    g_r, a_r, _, _ = ref_fn()
+    err = float((jnp.abs(g_a - g_r) / jnp.maximum(jnp.abs(g_r),
+                                                  1e-30)).max())
+    assert bool((a_a == a_r).all())
+    return "kernel_fused_sinr_max_rel_err", us, err
+
+
+ALL = [fig2_pathloss_throughput, fig3_sectors, fig4_fairness,
+       fig5_ppp_validation, tab_smart_update, tab_mobility_sweep,
+       kernel_fused_sinr]

@@ -1,0 +1,40 @@
+"""Benchmark harness: one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (plus commented detail lines).
+Run:  PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import paper_benches
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for bench in paper_benches.ALL:
+        try:
+            name, us, derived = bench()
+            print(f"{name},{us:.1f},{derived}")
+            sys.stdout.flush()
+        except Exception:
+            failures += 1
+            print(f"{bench.__name__},FAILED,-")
+            traceback.print_exc()
+    # roofline summary from dry-run artifacts, if present
+    try:
+        import os
+        if os.path.isdir("artifacts/dryrun"):
+            from repro.analysis import roofline
+            print("# --- roofline table (artifacts/dryrun) ---")
+            roofline.main("artifacts/dryrun")
+    except Exception:
+        traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} benchmarks failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Batched serving example: slot-based continuous batching over a small LM.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.models.registry import make_arch  # noqa: E402
+from repro.parallel.mesh import make_host_mesh  # noqa: E402
+from repro.serve.engine import ServeEngine  # noqa: E402
+
+cfg = get_config("qwen1.5-0.5b", reduced=True)
+arch = make_arch(cfg)
+engine = ServeEngine(arch, make_host_mesh(1, 1), batch_slots=4, max_len=96)
+
+rng = np.random.default_rng(7)
+requests = []
+for i in range(10):
+    prompt = rng.integers(0, cfg.vocab_size, rng.integers(4, 32))
+    requests.append(engine.submit(prompt, max_new_tokens=12))
+
+out = engine.run()
+print(f"served {len(out['results'])} requests | {out['n_tokens']} tokens | "
+      f"{out['tokens_per_s']:.1f} tok/s")
+for rid in sorted(out["results"])[:3]:
+    print(f"  request {rid} -> {out['results'][rid]}")
+print("decode reuses the KV cache per step -- the LM-side smart update "
+      "(one dirty row instead of a full recompute).")

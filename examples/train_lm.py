@@ -1,0 +1,50 @@
+"""End-to-end training driver: a ~100M-param qwen-family model for a few
+hundred steps on the deterministic synthetic stream, with checkpointing.
+
+(The assignment's end-to-end requirement; sized to be CPU-feasible by
+default -- pass --full100m on a real machine for the 100M config.)
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300] [--full100m]
+"""
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.models.registry import make_arch  # noqa: E402
+from repro.models.transformer import param_count  # noqa: E402
+from repro.parallel.mesh import make_host_mesh  # noqa: E402
+from repro.train import optim  # noqa: E402
+from repro.train.data import SyntheticLM  # noqa: E402
+from repro.train.loop import train  # noqa: E402
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--full100m", action="store_true",
+                help="12L x 768d x 32k-vocab (~100M params); default is a "
+                     "CPU-sized model")
+ap.add_argument("--ckpt-dir", default="ckpts/train_lm_example")
+args = ap.parse_args()
+
+cfg = get_config("qwen1.5-0.5b", reduced=True)
+if args.full100m:
+    cfg = dataclasses.replace(
+        cfg, n_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
+        head_dim=64, d_ff=2048, vocab_size=32000)
+arch = make_arch(cfg)
+n = param_count(jax.eval_shape(lambda: arch.init(jax.random.PRNGKey(0))))
+print(f"# training {cfg.name}: {n/1e6:.1f}M params, {args.steps} steps")
+
+data = SyntheticLM(cfg.vocab_size, batch=8, seq_len=64, seed=0)
+optimizer = optim.adamw(
+    optim.warmup_cosine(3e-3, args.steps // 20 + 1, args.steps),
+    weight_decay=0.0)
+state, history = train(arch, optimizer, make_host_mesh(1, 1), data,
+                       steps=args.steps, ckpt_dir=args.ckpt_dir,
+                       ckpt_every=100, log_every=10)
+print(f"# done: loss {history[0]:.3f} -> {history[-1]:.3f} "
+      f"(checkpoints in {args.ckpt_dir}; rerun resumes automatically)")

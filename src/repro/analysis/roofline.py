@@ -1,0 +1,117 @@
+"""Roofline model: the three-term analysis over dry-run artifacts.
+
+Hardware constants (TPU v5e-class target, per assignment):
+    peak bf16 compute   197 TFLOP/s / chip
+    HBM bandwidth       819 GB/s / chip
+    ICI link bandwidth  ~50 GB/s / link
+
+    compute term    = HLO_FLOPs / (chips * peak)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = wire_bytes_per_device / link_bw
+                      (wire bytes are already per-device -- see hlo.py)
+
+The dominant term is the projected step time's lower bound; the roofline
+fraction we report for the hillclimb is useful_model_flops / (dominant_term *
+chips * peak).  Run as a module to print the table from artifacts/dryrun:
+
+    PYTHONPATH=src python -m repro.analysis.roofline [--dir artifacts/dryrun]
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs: how much compiled compute is useful."""
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful model FLOPs over what the chips could do in the bound
+        time -- the score we hillclimb."""
+        cap = self.bound_s * self.chips * PEAK_FLOPS
+        return self.model_flops / cap if cap > 0 else 0.0
+
+
+def model_flops_train(n_params_active: float, tokens: float) -> float:
+    return 6.0 * n_params_active * tokens
+
+
+def model_flops_decode(n_params_active: float, tokens: float) -> float:
+    return 2.0 * n_params_active * tokens
+
+
+def from_artifact(art: dict) -> Roofline:
+    """Prefers the analytic executed-FLOPs/bytes model (exact per-layer
+    formulas; XLA cost_analysis counts loop bodies once -- see
+    analysis/flops.py) and falls back to raw cost_analysis numbers."""
+    chips = art["n_devices"]
+    flops = art.get("analytic_flops") or art["hlo_flops"]
+    bytes_ = art.get("analytic_bytes") or art["hlo_bytes"]
+    return Roofline(
+        compute_s=flops / (chips * PEAK_FLOPS),
+        memory_s=bytes_ / (chips * HBM_BW),
+        collective_s=art["collective_wire_bytes"] / ICI_BW,
+        model_flops=art["model_flops"],
+        hlo_flops=flops,
+        chips=chips,
+    )
+
+
+def format_row(name: str, art: dict) -> str:
+    r = from_artifact(art)
+    return (f"| {name} | {r.compute_s*1e3:.1f} | {r.memory_s*1e3:.1f} | "
+            f"{r.collective_s*1e3:.1f} | {r.dominant} | "
+            f"{r.useful_flops_ratio:.2f} | {r.roofline_fraction:.3f} |")
+
+
+def main(art_dir: str = "artifacts/dryrun"):
+    print("| cell | compute ms | memory ms | collective ms | dominant | "
+          "useful/HLO | roofline frac |")
+    print("|---|---|---|---|---|---|---|")
+    for root, _, files in sorted(os.walk(art_dir)):
+        for f in sorted(files):
+            if not f.endswith(".json"):
+                continue
+            with open(os.path.join(root, f)) as fh:
+                art = json.load(fh)
+            if art.get("skipped"):
+                name = os.path.relpath(os.path.join(root, f), art_dir)
+                print(f"| {name} | - | - | - | skipped: "
+                      f"{art['reason'][:40]} | - | - |")
+                continue
+            name = os.path.relpath(os.path.join(root, f),
+                                   art_dir).replace(".json", "")
+            print(format_row(name, art))
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[sys.argv.index("--dir") + 1]
+         if "--dir" in sys.argv else "artifacts/dryrun")

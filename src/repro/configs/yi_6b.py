@@ -1,0 +1,15 @@
+"""yi-6b [dense]: llama arch GQA kv=4.
+
+32L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000 [arXiv:2403.04652; hf].
+"""
+from repro.models.config import ModelConfig
+
+ARCH_ID = "yi-6b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="dense",
+        n_layers=32, d_model=4096, n_heads=32, n_kv_heads=4,
+        d_ff=11008, vocab_size=64000,
+    )

@@ -1,0 +1,392 @@
+"""Concrete CRRM computational blocks (the boxes of the paper's Figure 1).
+
+Each node's full recompute and row-local patch are single jitted calls.  Row
+patches write into the node's existing device buffer with ``donate_argnums``
+so XLA updates in place -- without donation every row update would copy the
+whole (n_ue, n_cell) matrix and erase the smart-update win.
+
+Block list (paper §2): U, C, P roots -> D -> G -> R(SRP) -> a -> w, u ->
+gamma (SINR) -> CQI -> MCS -> SE -> Shannon, and the allocation/throughput
+terminal.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import ALL, Node, RootNode
+from repro.sim import phy
+from repro.sim.antenna import Antenna_gain
+
+
+# ---------------------------------------------------------------------------
+# jitted math helpers (module level so compilations are shared across sims)
+# ---------------------------------------------------------------------------
+@jax.jit
+def _geometry(U, C):
+    """(d2d, d3d, az): 2-D/3-D distances and the cell->UE bearing."""
+    dx = U[:, None, 0] - C[None, :, 0]
+    dy = U[:, None, 1] - C[None, :, 1]
+    dz = U[:, None, 2] - C[None, :, 2]
+    d2d = jnp.sqrt(dx * dx + dy * dy)
+    d3d = jnp.sqrt(d2d * d2d + dz * dz)
+    az = jnp.arctan2(dy, dx)
+    return d2d, d3d, az
+
+
+@partial(jax.jit, donate_argnums=(3, 4, 5))
+def _geometry_rows(U, C, idx, d2d, d3d, az):
+    r2d, r3d, raz = _geometry(U[idx], C)
+    return (d2d.at[idx].set(r2d), d3d.at[idx].set(r3d), az.at[idx].set(raz))
+
+
+@jax.jit
+def _rsrp(G, P):
+    """R[i, j, k] = p_jk * G_ij  (stacked per-subband blocks of Fig. 1)."""
+    return G[:, :, None] * P[None, :, :]
+
+
+@partial(jax.jit, donate_argnums=(3,))
+def _rsrp_rows(G, P, idx, R):
+    return R.at[idx].set(G[idx][:, :, None] * P[None, :, :])
+
+
+@jax.jit
+def _attach(R):
+    """Serve each UE from the cell with the largest wideband RSRP."""
+    return jnp.argmax(R.sum(axis=2), axis=1).astype(jnp.int32)
+
+
+@partial(jax.jit, donate_argnums=(2,))
+def _attach_rows(R, idx, a):
+    return a.at[idx].set(jnp.argmax(R[idx].sum(axis=2), axis=1).astype(jnp.int32))
+
+
+@jax.jit
+def _wanted(R, a):
+    return jnp.take_along_axis(R, a[:, None, None], axis=1)[:, 0, :]
+
+
+@partial(jax.jit, donate_argnums=(3,))
+def _wanted_rows(R, a, idx, w):
+    rows = jnp.take_along_axis(R[idx], a[idx][:, None, None], axis=1)[:, 0, :]
+    return w.at[idx].set(rows)
+
+
+@jax.jit
+def _interference(R, w):
+    """u[i, k] = sum_j R[i, j, k] - w[i, k]."""
+    return R.sum(axis=1) - w
+
+
+@partial(jax.jit, donate_argnums=(3,))
+def _interference_rows(R, w, idx, u):
+    return u.at[idx].set(R[idx].sum(axis=1) - w[idx])
+
+
+def _sinr_fn(noise_w):
+    @jax.jit
+    def f(w, u):
+        return w / (noise_w + u)
+
+    @partial(jax.jit, donate_argnums=(3,))
+    def f_rows(w, u, idx, g):
+        return g.at[idx].set(w[idx] / (noise_w + u[idx]))
+
+    return f, f_rows
+
+
+@jax.jit
+def _cqi(gamma):
+    return phy.sinr_db_to_cqi(phy.sinr_to_db(gamma))
+
+
+@partial(jax.jit, donate_argnums=(2,))
+def _cqi_rows(gamma, idx, cqi):
+    return cqi.at[idx].set(_cqi(gamma[idx]))
+
+
+@jax.jit
+def _mcs(cqi):
+    return phy.cqi_to_mcs(cqi)
+
+
+@partial(jax.jit, donate_argnums=(2,))
+def _mcs_rows(cqi, idx, mcs):
+    return mcs.at[idx].set(phy.cqi_to_mcs(cqi[idx]))
+
+
+@jax.jit
+def _se(mcs, cqi):
+    return jnp.where(cqi > 0, phy.mcs_to_efficiency(mcs), 0.0)
+
+
+@partial(jax.jit, donate_argnums=(3,))
+def _se_rows(mcs, cqi, idx, se):
+    return se.at[idx].set(_se(mcs[idx], cqi[idx]))
+
+
+def _shannon_fn(subband_bw, streams):
+    @jax.jit
+    def f(gamma):
+        return streams * subband_bw * jnp.log2(1.0 + jnp.maximum(gamma, 0.0))
+
+    @partial(jax.jit, donate_argnums=(2,))
+    def f_rows(gamma, idx, cap):
+        return cap.at[idx].set(f(gamma[idx]))
+
+    return f, f_rows
+
+
+def _throughput_fn(n_cells, subband_bw, p):
+    @jax.jit
+    def f(se, a):
+        """T_i = a_cell * S_i^(1-p), a_cell = B_k / sum_j S_j^-p (per subband).
+
+        Equivalent to sharing each serving cell's subband airtime with weights
+        S^-p: p=0 -> equal airtime (T proportional to S); p=1 -> equal T.
+        """
+        active = se > 0.0
+        wgt = jnp.where(active, jnp.power(jnp.maximum(se, 1e-12), -p), 0.0)
+        denom = jnp.zeros((n_cells, se.shape[1]), se.dtype).at[a].add(wgt)
+        denom_i = denom[a]  # (n_ue, n_subbands)
+        share = jnp.where(denom_i > 0.0, wgt / jnp.maximum(denom_i, 1e-30), 0.0)
+        # bits/s on each subband = airtime share * bandwidth * spectral eff.
+        return share * subband_bw * se
+
+    return f
+
+
+# ---------------------------------------------------------------------------
+# node classes
+# ---------------------------------------------------------------------------
+class DistanceNode(Node):
+    """D: 2-D/3-D distance matrices + bearing angles (one geometry pass)."""
+
+    supports_row_update = True
+
+    def __init__(self, U: RootNode, C: RootNode):
+        super().__init__("D")
+        self.watch(U, C)
+        self.U, self.C = U, C
+
+    def update_data(self):
+        return _geometry(self.U._data, self.C._data)
+
+    def update_rows(self, idx):
+        d2d, d3d, az = self._data
+        return _geometry_rows(self.U._data, self.C._data, jnp.asarray(idx),
+                              d2d, d3d, az)
+
+
+class GainNode(Node):
+    """G = pathgain(D) * antenna(az) * fading; 0 <= G < 1 (pre-fading)."""
+
+    supports_row_update = True
+
+    def __init__(self, D: DistanceNode, U: RootNode, C: RootNode,
+                 boresight: RootNode, fading: RootNode,
+                 pathgain_function, antenna: Antenna_gain, n_sectors: int):
+        super().__init__("G")
+        self.watch(D, boresight, fading)
+        self.D, self.U, self.C = D, U, C
+        self.boresight, self.fading = boresight, fading
+
+        def gain(d2d, d3d, az, h_ut, h_bs, bore, fad):
+            g = pathgain_function(d2d, d3d, h_bs[None, :], h_ut[:, None])
+            if n_sectors > 1:
+                g = g * antenna.gain_linear(az, bore)
+            return g * fad
+
+        self._full = jax.jit(
+            lambda U, C, d2d, d3d, az, bore, fad:
+            gain(d2d, d3d, az, U[:, 2], C[:, 2], bore, fad))
+        self._rows = jax.jit(
+            lambda U, C, d2d, d3d, az, bore, fad, idx, G:
+            G.at[idx].set(gain(d2d[idx], d3d[idx], az[idx], U[idx, 2],
+                               C[:, 2], bore, fad[idx])),
+            donate_argnums=(8,))
+
+    def update_data(self):
+        d2d, d3d, az = self.D._data
+        return self._full(self.U._data, self.C._data, d2d, d3d, az,
+                          self.boresight._data, self.fading._data)
+
+    def update_rows(self, idx):
+        d2d, d3d, az = self.D._data
+        return self._rows(self.U._data, self.C._data, d2d, d3d, az,
+                          self.boresight._data, self.fading._data,
+                          jnp.asarray(idx), self._data)
+
+
+class RSRPNode(Node):
+    supports_row_update = True
+
+    def __init__(self, G: GainNode, P: RootNode):
+        super().__init__("RSRP")
+        self.watch(G, P)
+        self.G, self.P = G, P
+
+    def update_data(self):
+        return _rsrp(self.G._data, self.P._data)
+
+    def update_rows(self, idx):
+        return _rsrp_rows(self.G._data, self.P._data, jnp.asarray(idx),
+                          self._data)
+
+
+class AttachmentNode(Node):
+    """a: serving-cell index per UE (strongest wideband RSRP)."""
+
+    supports_row_update = True
+
+    def __init__(self, R: RSRPNode):
+        super().__init__("a")
+        self.watch(R)
+        self.R = R
+
+    def update_data(self):
+        return _attach(self.R._data)
+
+    def update_rows(self, idx):
+        return _attach_rows(self.R._data, jnp.asarray(idx), self._data)
+
+
+class WantedNode(Node):
+    supports_row_update = True
+
+    def __init__(self, R: RSRPNode, a: AttachmentNode):
+        super().__init__("w")
+        self.watch(R, a)
+        self.R, self.a = R, a
+
+    def update_data(self):
+        return _wanted(self.R._data, self.a._data)
+
+    def update_rows(self, idx):
+        return _wanted_rows(self.R._data, self.a._data, jnp.asarray(idx),
+                            self._data)
+
+
+class InterferenceNode(Node):
+    supports_row_update = True
+
+    def __init__(self, R: RSRPNode, w: WantedNode):
+        super().__init__("u")
+        self.watch(R, w)
+        self.R, self.w = R, w
+
+    def update_data(self):
+        return _interference(self.R._data, self.w._data)
+
+    def update_rows(self, idx):
+        return _interference_rows(self.R._data, self.w._data,
+                                  jnp.asarray(idx), self._data)
+
+
+class SINRNode(Node):
+    supports_row_update = True
+
+    def __init__(self, w: WantedNode, u: InterferenceNode, noise_w: float):
+        super().__init__("gamma")
+        self.watch(w, u)
+        self.w, self.u = w, u
+        self._full, self._rows = _sinr_fn(noise_w)
+
+    def update_data(self):
+        return self._full(self.w._data, self.u._data)
+
+    def update_rows(self, idx):
+        return self._rows(self.w._data, self.u._data, jnp.asarray(idx),
+                          self._data)
+
+
+class CQINode(Node):
+    supports_row_update = True
+
+    def __init__(self, gamma: SINRNode):
+        super().__init__("CQI")
+        self.watch(gamma)
+        self.gamma = gamma
+
+    def update_data(self):
+        return _cqi(self.gamma._data)
+
+    def update_rows(self, idx):
+        return _cqi_rows(self.gamma._data, jnp.asarray(idx), self._data)
+
+
+class MCSNode(Node):
+    supports_row_update = True
+
+    def __init__(self, cqi: CQINode):
+        super().__init__("MCS")
+        self.watch(cqi)
+        self.cqi = cqi
+
+    def update_data(self):
+        return _mcs(self.cqi._data)
+
+    def update_rows(self, idx):
+        return _mcs_rows(self.cqi._data, jnp.asarray(idx), self._data)
+
+
+class SpectralEfficiencyNode(Node):
+    supports_row_update = True
+
+    def __init__(self, mcs: MCSNode, cqi: CQINode):
+        super().__init__("SE")
+        self.watch(mcs, cqi)
+        self.mcs, self.cqi = mcs, cqi
+
+    def update_data(self):
+        return _se(self.mcs._data, self.cqi._data)
+
+    def update_rows(self, idx):
+        return _se_rows(self.mcs._data, self.cqi._data, jnp.asarray(idx),
+                        self._data)
+
+
+class ShannonNode(Node):
+    """Information-theoretic capacity bound (incl. MIMO multiplexing)."""
+
+    supports_row_update = True
+
+    def __init__(self, gamma: SINRNode, subband_bw: float, n_tx: int, n_rx: int):
+        super().__init__("Shannon")
+        self.watch(gamma)
+        self.gamma = gamma
+        self._full, self._rows = _shannon_fn(subband_bw, min(n_tx, n_rx))
+
+    def update_data(self):
+        return self._full(self.gamma._data)
+
+    def update_rows(self, idx):
+        return self._rows(self.gamma._data, jnp.asarray(idx), self._data)
+
+
+class ThroughputNode(Node):
+    """Terminal block: fairness-weighted airtime share x MCS rate.
+
+    NOT row-local: one UE's move changes its serving cell's load and hence
+    every co-served UE's throughput, so this node always recomputes in full
+    (it is O(n_ue + n_cell) vector math -- cheap by design).
+    """
+
+    supports_row_update = False
+
+    def __init__(self, se: SpectralEfficiencyNode, a: AttachmentNode,
+                 n_cells: int, subband_bw: float, p: float):
+        super().__init__("T")
+        self.watch(se, a)
+        self.se, self.a = se, a
+        self._full = _throughput_fn(n_cells, subband_bw, p)
+
+    def propagate_rows(self, rows):
+        return ALL  # cell loads mix rows
+
+    def update_data(self):
+        return self._full(self.se._data, self.a._data)

@@ -1,0 +1,180 @@
+"""CRRM -- the main simulator class (the paper's public API).
+
+Wires the Figure-1 dependency graph, binds the pluggable pathloss strategy,
+and exposes the mutation / query API.  Queries trigger the recursive update
+phase; mutations trigger the invalidation phase only.
+
+>>> from repro.core.params import CRRM_parameters
+>>> from repro.core.crrm import CRRM
+>>> sim = CRRM(CRRM_parameters(n_ues=50, pathloss_model_name="UMa", seed=1))
+>>> tput = sim.get_UE_throughputs()          # full evaluation
+>>> sim.move_UE(3, (100.0, 200.0, 1.5))      # invalidates row 3 only
+>>> tput2 = sim.get_UE_throughputs()         # row-local smart update
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import blocks
+from repro.core.graph import Graph, RootNode
+from repro.core.params import CRRM_parameters
+from repro.sim import deploy, fading
+from repro.sim.antenna import Antenna_gain, sector_boresights
+from repro.sim.pathloss import make_pathloss
+
+
+class CRRM:
+    def __init__(self, params: CRRM_parameters):
+        self.params = params
+        p = params
+        key = jax.random.PRNGKey(p.seed)
+        k_ue, k_cell, k_fad = jax.random.split(key, 3)
+
+        # -- topology roots -------------------------------------------------
+        if p.ue_positions is not None:
+            U0 = jnp.asarray(p.ue_positions, dtype=jnp.float32)
+        else:
+            xy = jax.random.uniform(k_ue, (p.n_ues, 2), minval=0.0,
+                                    maxval=p.extent_m)
+            U0 = jnp.concatenate(
+                [xy, jnp.full((p.n_ues, 1), p.h_ut_m)], axis=1)
+        if p.cell_positions is not None:
+            C0 = jnp.asarray(p.cell_positions, dtype=jnp.float32)
+        else:
+            n_cells = p.n_cells or 7
+            n_sites = max(1, n_cells // p.n_sectors)
+            rings = 0
+            while 1 + 3 * rings * (rings + 1) < n_sites:
+                rings += 1
+            sites = deploy.hex_sites(rings, isd_m=p.extent_m / (2 * rings + 1)
+                                     if rings else p.extent_m, z=p.h_bs_m)
+            sites = sites[:n_sites] + jnp.asarray(
+                [p.extent_m / 2, p.extent_m / 2, 0.0])
+            C0 = deploy.replicate_sectors(sites, p.n_sectors)
+        self.n_cells = int(C0.shape[0])
+        self.n_ues = int(U0.shape[0])
+
+        if p.power_matrix is not None:
+            P0 = jnp.asarray(p.power_matrix, dtype=jnp.float32)
+        else:
+            P0 = jnp.full((self.n_cells, p.n_subbands),
+                          p.power_W / p.n_subbands, dtype=jnp.float32)
+
+        bore0 = sector_boresights(self.n_cells // p.n_sectors, p.n_sectors)
+        if p.rayleigh_fading:
+            F0 = fading.rayleigh_power(k_fad, (self.n_ues, self.n_cells))
+        else:
+            F0 = jnp.ones((self.n_ues, self.n_cells), dtype=jnp.float32)
+
+        # -- graph ------------------------------------------------------------
+        g = Graph(smart=p.smart)
+        self.graph = g
+        self.U = g.add(RootNode("U", U0))
+        self.C = g.add(RootNode("C", C0))
+        self.P = g.add(RootNode("P", P0))
+        self.boresight = g.add(RootNode("boresight", bore0))
+        self.fading = g.add(RootNode("fading", F0))
+
+        # the strategy pattern: model name -> class -> bound pathgain_function
+        self.pathloss_model = make_pathloss(p.pathloss_model_name,
+                                            **p.pathloss_params)
+        self.pathgain_function = self.pathloss_model.get_pathgain
+        antenna = Antenna_gain(phi_3dB_deg=p.antenna_phi_3dB_deg,
+                               A_max_dB=p.antenna_A_max_dB)
+
+        self.D = g.add(blocks.DistanceNode(self.U, self.C))
+        self.G = g.add(blocks.GainNode(
+            self.D, self.U, self.C, self.boresight, self.fading,
+            self.pathgain_function, antenna, p.n_sectors))
+        self.R = g.add(blocks.RSRPNode(self.G, self.P))
+        if p.rayleigh_fading and p.attach_ignores_fading:
+            # association on the long-term mean: a parallel unfaded branch
+            self.ones = g.add(RootNode(
+                "ones", jnp.ones((self.n_ues, self.n_cells))))
+            self.G_mean = g.add(blocks.GainNode(
+                self.D, self.U, self.C, self.boresight, self.ones,
+                self.pathgain_function, antenna, p.n_sectors))
+            self.G_mean.name = "G_mean"
+            self.R_mean = g.add(blocks.RSRPNode(self.G_mean, self.P))
+            self.R_mean.name = "RSRP_mean"
+            g.nodes["G_mean"] = g.nodes.pop("G")  # fix registry keys
+            g.nodes["G"] = self.G
+            g.nodes["RSRP_mean"] = g.nodes.pop("RSRP")
+            g.nodes["RSRP"] = self.R
+            self.a = g.add(blocks.AttachmentNode(self.R_mean))
+        else:
+            self.a = g.add(blocks.AttachmentNode(self.R))
+        self.w = g.add(blocks.WantedNode(self.R, self.a))
+        self.u = g.add(blocks.InterferenceNode(self.R, self.w))
+        self.gamma = g.add(blocks.SINRNode(self.w, self.u, p.subband_noise_W))
+        self.cqi = g.add(blocks.CQINode(self.gamma))
+        self.mcs = g.add(blocks.MCSNode(self.cqi))
+        self.se = g.add(blocks.SpectralEfficiencyNode(self.mcs, self.cqi))
+        self.shannon = g.add(blocks.ShannonNode(
+            self.gamma, p.subband_bandwidth_Hz, p.n_tx, p.n_rx))
+        self.throughput = g.add(blocks.ThroughputNode(
+            self.se, self.a, self.n_cells, p.subband_bandwidth_Hz,
+            p.fairness_p))
+
+    # ---------------------------------------------------------------- mutations
+    def move_UE(self, i: int, xyz) -> None:
+        self.U.set_rows(np.asarray([i]), np.asarray(xyz, np.float32)[None, :])
+
+    def move_UEs(self, idx, xyz) -> None:
+        self.U.set_rows(np.asarray(idx), np.asarray(xyz, np.float32))
+
+    def set_UE_positions(self, U) -> None:
+        self.U.set(jnp.asarray(U, dtype=jnp.float32))
+
+    def set_power_matrix(self, P) -> None:
+        self.P.set(jnp.asarray(P, dtype=jnp.float32))
+
+    def set_cell_power(self, j: int, k: int, watts: float) -> None:
+        self.P.set(self.P._data.at[j, k].set(watts))
+
+    def resample_fading(self, key) -> None:
+        self.fading.set(fading.rayleigh_power(
+            key, (self.n_ues, self.n_cells)))
+
+    # ------------------------------------------------------------------- queries
+    def get_distances(self):
+        return self.D.update()
+
+    def get_pathgains(self):
+        return self.G.update()
+
+    def get_RSRP(self):
+        return self.R.update()
+
+    def get_attachment(self):
+        return self.a.update()
+
+    def get_SINR(self):
+        """(n_ue, n_subbands) linear SINR."""
+        return self.gamma.update()
+
+    def get_SINR_dB(self):
+        return 10.0 * jnp.log10(jnp.maximum(self.get_SINR(), 1e-12))
+
+    def get_CQI(self):
+        return self.cqi.update()
+
+    def get_MCS(self):
+        return self.mcs.update()
+
+    def get_spectral_efficiency(self):
+        return self.se.update()
+
+    def get_shannon_capacities(self):
+        """(n_ue, n_subbands) bits/s upper bound."""
+        return self.shannon.update()
+
+    def get_UE_throughputs(self):
+        """(n_ue,) bits/s: fairness-weighted share summed over subbands."""
+        return self.throughput.update().sum(axis=1)
+
+    # -------------------------------------------------------------- introspection
+    def update_counts(self):
+        return self.graph.stats()

@@ -1,0 +1,211 @@
+"""The CRRM compute-on-demand dependency graph ("smart update").
+
+This module reproduces the paper's ``_Node`` protocol exactly:
+
+* every computational block is a node holding a device array (JAX, where the
+  paper holds NumPy);
+* ``watchers`` are downstream dependents, ``watchees`` upstream dependencies;
+* mutating a root floods ``up_to_date = False`` downstream
+  (:meth:`Node.flood_out_of_date`) -- the *invalidation phase*;
+* requesting a terminal output walks ``update()`` upstream and recomputes only
+  stale nodes -- the *recursive update phase*.
+
+Beyond the boolean flag, nodes track *which UE rows* are dirty (the paper's
+Figure-1 "red stripe").  A node that supports row-local recomputation patches
+just those rows with one vectorised advanced-indexing operation; nodes whose
+outputs are not row-local (e.g. per-cell resource allocation) override
+:meth:`Node.propagate_rows` to widen the dirt to ``ALL``.
+
+JAX adaptation (see DESIGN.md §2): XLA needs static shapes, so dirty row index
+vectors are padded up to the next power of two with duplicate indices --
+row recomputation is idempotent, so duplicated writes are harmless and each
+power-of-two bucket compiles exactly once.
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class _AllRows:
+    """Sentinel: every row is dirty (or row tracking is not applicable)."""
+
+    def __repr__(self):  # pragma: no cover
+        return "ALL"
+
+
+ALL = _AllRows()
+
+
+def pad_indices(rows: Iterable[int]) -> np.ndarray:
+    """Pad a dirty-row index set to the next power-of-two bucket.
+
+    Padding repeats the first index, which makes the padded recompute
+    idempotent while keeping the number of distinct jit specialisations
+    logarithmic in the row count.
+    """
+    idx = np.asarray(sorted(rows), dtype=np.int32)
+    n = len(idx)
+    bucket = 1 << max(0, (n - 1).bit_length())
+    if bucket > n:
+        idx = np.concatenate([idx, np.full(bucket - n, idx[0], np.int32)])
+    return idx
+
+
+class Node:
+    """Base class for all computational blocks (the paper's ``_Node``)."""
+
+    #: subclasses that implement :meth:`update_rows` set this True
+    supports_row_update = False
+
+    def __init__(self, name: str):
+        self.name = name
+        self.watchers: list[Node] = []   # downstream dependents
+        self.watchees: list[Node] = []   # upstream dependencies
+        self.up_to_date = False
+        self.dirty_rows: set | _AllRows = ALL
+        self._data = None
+        # instrumentation for the speed-up experiments
+        self.n_full_updates = 0
+        self.n_row_updates = 0
+
+    # -- graph wiring --------------------------------------------------------
+    def watch(self, *nodes: "Node") -> "Node":
+        for n in nodes:
+            self.watchees.append(n)
+            n.watchers.append(self)
+        return self
+
+    # -- invalidation phase ---------------------------------------------------
+    def flood_out_of_date(self, rows=ALL) -> None:
+        """Mark this node and everything downstream stale (no math here)."""
+        changed = False
+        if rows is ALL:
+            if self.dirty_rows is not ALL:
+                self.dirty_rows = ALL
+                changed = True
+        elif self.dirty_rows is not ALL:
+            new_rows = self.dirty_rows | set(rows)
+            if len(new_rows) != len(self.dirty_rows):
+                self.dirty_rows = new_rows
+                changed = True
+        if self.up_to_date:
+            self.up_to_date = False
+            changed = True
+        if changed:
+            prop = self.propagate_rows(self.dirty_rows)
+            for w in self.watchers:
+                w.flood_out_of_date(prop)
+
+    def propagate_rows(self, rows):
+        """How this node's dirt maps onto its dependents' rows.
+
+        Default: row-local (a dirty UE row only dirties the same UE row
+        downstream).  Nodes that mix rows (attachment-driven allocation)
+        return ``ALL``.
+        """
+        return rows
+
+    # -- recursive update phase ------------------------------------------------
+    def update(self):
+        """Bring this node up to date (recursively) and return its data."""
+        if self.up_to_date:
+            return self._data
+        for w in self.watchees:
+            w.update()
+        rows = self.dirty_rows
+        if (rows is ALL or self._data is None
+                or not self.supports_row_update):
+            self._data = self.update_data()
+            self.n_full_updates += 1
+        else:
+            self._data = self.update_rows(pad_indices(rows))
+            self.n_row_updates += 1
+        self.up_to_date = True
+        self.dirty_rows = set()
+        return self._data
+
+    # -- subclass hooks ---------------------------------------------------------
+    def update_data(self):
+        raise NotImplementedError(f"{self.name}.update_data")
+
+    def update_rows(self, idx: np.ndarray):
+        raise NotImplementedError(f"{self.name}.update_rows")
+
+    # -- conveniences -------------------------------------------------------------
+    @property
+    def data(self):
+        return self.update()
+
+    def __repr__(self):  # pragma: no cover
+        state = "fresh" if self.up_to_date else f"stale({self.dirty_rows})"
+        return f"<{type(self).__name__} {self.name} {state}>"
+
+
+class RootNode(Node):
+    """An input node: its data is set from outside, never computed."""
+
+    def __init__(self, name: str, value=None):
+        super().__init__(name)
+        if value is not None:
+            self._data = jnp.asarray(value)
+        self.up_to_date = self._data is not None
+        self.dirty_rows = set()
+
+    def set(self, value) -> None:
+        """Replace the whole array -> flood ALL rows downstream."""
+        self._data = jnp.asarray(value)
+        self.up_to_date = True
+        for w in self.watchers:
+            w.flood_out_of_date(ALL)
+
+    def set_rows(self, idx, values) -> None:
+        """Patch selected rows -> flood only those rows downstream."""
+        idx = np.asarray(idx, dtype=np.int32)
+        self._data = self._data.at[jnp.asarray(idx)].set(jnp.asarray(values))
+        rows = set(int(i) for i in idx)
+        for w in self.watchers:
+            w.flood_out_of_date(rows)
+
+    def update(self):
+        if self._data is None:
+            raise RuntimeError(f"root node {self.name} was never set")
+        return self._data
+
+    def update_data(self):  # pragma: no cover - roots are never recomputed
+        return self._data
+
+
+class Graph:
+    """Bookkeeping for a set of nodes + the global smart-update switch.
+
+    ``smart=False`` reproduces the paper's control experiment: every
+    invalidation is widened to ALL rows, forcing full recomputation of every
+    stale node (numerically identical results, no lazy row reuse).
+    """
+
+    def __init__(self, smart: bool = True):
+        self.smart = smart
+        self.nodes: dict[str, Node] = {}
+
+    def add(self, node: Node) -> Node:
+        self.nodes[node.name] = node
+        if not self.smart:
+            # control experiment: no row locality anywhere -> every stale
+            # node recomputes in full, downstream dirt always widens to ALL.
+            node.propagate_rows = lambda rows: ALL  # type: ignore[assignment]
+            node.supports_row_update = False
+        return node
+
+    def stats(self) -> dict[str, tuple[int, int]]:
+        """{name: (full_updates, row_updates)} instrumentation snapshot."""
+        return {k: (n.n_full_updates, n.n_row_updates)
+                for k, n in self.nodes.items()}
+
+    def invalidate_all(self) -> None:
+        for n in self.nodes.values():
+            if not isinstance(n, RootNode):
+                n.up_to_date = False
+                n.dirty_rows = ALL

@@ -1,0 +1,91 @@
+"""CRRM_parameters -- the single configuration object for a simulation.
+
+Mirrors the paper's ``CRRM_parameters`` class: the pathloss model is selected
+by *name* (strategy pattern); the main simulator binds the corresponding
+``get_pathgain`` to a generic ``pathgain_function`` callable at init.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import numpy as np
+
+BOLTZMANN = 1.380649e-23
+T0_KELVIN = 290.0
+
+
+def thermal_noise_W(bandwidth_hz: float, noise_figure_dB: float = 9.0) -> float:
+    """kTB thermal noise power + UE noise figure, in watts."""
+    return BOLTZMANN * T0_KELVIN * bandwidth_hz * 10 ** (noise_figure_dB / 10)
+
+
+@dataclasses.dataclass
+class CRRM_parameters:
+    # topology -----------------------------------------------------------------
+    n_ues: int = 100
+    n_cells: Optional[int] = None          # derived from cell_positions if None
+    ue_positions: Optional[Any] = None     # (n_ues, 3); random uniform if None
+    cell_positions: Optional[Any] = None   # (n_cells, 3); hex grid if None
+    extent_m: float = 3000.0               # square deployment region side
+    h_ut_m: float = 1.5                    # default UE height
+    h_bs_m: float = 25.0                   # default BS height (z of generated cells)
+
+    # radio ----------------------------------------------------------------------
+    pathloss_model_name: str = "UMa"       # key into sim.pathloss.PATHLOSS_MODELS
+    pathloss_params: dict = dataclasses.field(default_factory=dict)
+    fc_GHz: float = 3.5
+    bandwidth_Hz: float = 20e6
+    n_subbands: int = 1
+    power_W: float = 1.0                   # per-cell tx power if power_matrix None
+    power_matrix: Optional[Any] = None     # (n_cells, n_subbands) watts
+    noise_power_W: Optional[float] = None  # sigma^2 over full band; kTB if None
+    rayleigh_fading: bool = False
+    #: associate on long-term (unfaded) RSRP -- what real cells do, and what
+    #: the PPP analytic SIR result assumes (association ignores fast fading)
+    attach_ignores_fading: bool = True
+
+    # antennas ---------------------------------------------------------------------
+    n_sectors: int = 1                     # 1 = omni, 3 = 3GPP tri-sector
+    antenna_phi_3dB_deg: float = 65.0
+    antenna_A_max_dB: float = 30.0
+
+    # MAC / scheduling ----------------------------------------------------------------
+    fairness_p: float = 0.0                # T_i = a * S_i^(1-p)
+    n_tx: int = 1
+    n_rx: int = 1
+
+    # engine -------------------------------------------------------------------------
+    smart: bool = True                     # the compute-on-demand switch
+    max_moves: Optional[int] = None        # cap on dirty-row bucket (None = n_ues)
+    seed: int = 0
+    dtype: Any = np.float32
+
+    def __post_init__(self):
+        if self.n_subbands < 1:
+            raise ValueError("n_subbands must be >= 1")
+        if not 0.0 <= self.fairness_p <= 1.0:
+            raise ValueError("fairness_p must be in [0, 1]")
+        if self.power_matrix is not None:
+            pm = np.asarray(self.power_matrix)
+            if pm.ndim != 2 or pm.shape[1] != self.n_subbands:
+                raise ValueError(
+                    f"power_matrix must be (n_cells, n_subbands); got {pm.shape}")
+            if self.n_cells is None:
+                self.n_cells = pm.shape[0]
+        if self.cell_positions is not None:
+            cp = np.asarray(self.cell_positions)
+            if self.n_cells is None:
+                self.n_cells = cp.shape[0]
+            elif self.n_cells != cp.shape[0]:
+                raise ValueError("n_cells inconsistent with cell_positions")
+        if self.noise_power_W is None:
+            self.noise_power_W = thermal_noise_W(self.bandwidth_Hz)
+
+    @property
+    def subband_bandwidth_Hz(self) -> float:
+        return self.bandwidth_Hz / self.n_subbands
+
+    @property
+    def subband_noise_W(self) -> float:
+        return self.noise_power_W / self.n_subbands

@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness references)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_dist_ref(U, C):
+    """(d2d, d3d) for UE rows x cell columns; plain broadcasting."""
+    dx = U[:, None, 0] - C[None, :, 0]
+    dy = U[:, None, 1] - C[None, :, 1]
+    dz = U[:, None, 2] - C[None, :, 2]
+    d2d = jnp.sqrt(dx * dx + dy * dy)
+    d3d = jnp.sqrt(d2d * d2d + dz * dz)
+    return d2d, d3d
+
+
+def fused_sinr_ref(U, C, Pw, pathgain_fn, noise_w):
+    """Materialised reference for the fused pipeline.
+
+    Returns (gamma, a, w, u): per-UE-per-subband SINR, serving cell,
+    wanted and unwanted power.  Attachment = argmax of wideband RSRP,
+    ties broken toward the lowest cell index (matches jnp.argmax).
+    """
+    d2d, d3d = pairwise_dist_ref(U, C)
+    g = pathgain_fn(d2d, d3d, C[None, :, 2], U[:, None, 2])
+    r = g[:, :, None] * Pw[None, :, :]            # (N, M, K)
+    total = r.sum(axis=1)                          # (N, K)
+    wide = r.sum(axis=2)                           # (N, M)
+    a = jnp.argmax(wide, axis=1).astype(jnp.int32)
+    w = jnp.take_along_axis(r, a[:, None, None], axis=1)[:, 0, :]
+    u = total - w
+    gamma = w / (noise_w + u)
+    return gamma, a, w, u

@@ -1,0 +1,353 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Optional local-testing override -- must still precede any jax import.
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces artifacts/dryrun/<mesh>/<arch>/<shape>.json with:
+  * memory_analysis (bytes/device -- proves the cell fits),
+  * cost_analysis FLOPs/bytes (per device and global),
+  * collective wire bytes parsed from the partitioned HLO,
+  * MODEL_FLOPS (6*N_active*D train / 2*N_active*D decode) for §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k --mesh pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # every cell
+  PYTHONPATH=src python -m repro.launch.dryrun --arch crrm-ppp  # paper engine
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.hlo import collective_stats
+from repro.configs import LM_ARCH_IDS, get_config
+from repro.launch.mesh import make_named_mesh
+from repro.models.registry import SHAPES, input_specs, make_arch, \
+    shape_applicable
+from repro.parallel import sharding as shd
+from repro.parallel.mesh import axis_size, batch_axes
+from repro.train import optim
+from repro.train.step import jit_train_step, state_specs
+
+
+def _param_counts(cfg) -> dict:
+    """Total/active/non-embedding parameter counts from eval_shape."""
+    arch = make_arch(cfg)
+    shapes = jax.eval_shape(lambda: arch.init(jax.random.PRNGKey(0)))
+    flat, _ = jax.tree_util.tree_flatten_with_path(shapes)
+    total = emb = routed = 0
+    for path, leaf in flat:
+        names = [str(getattr(p, "key", p)) for p in path]
+        n = int(np.prod(leaf.shape))
+        total += n
+        if names[-1] in ("embedding", "kernel"):
+            emb += n
+        if ("moe" in names and names[-1] in ("wi_gate", "wi_up", "wo")
+                and len(leaf.shape) >= 3):
+            routed += n
+    n_body = total - emb
+    if cfg.n_experts:
+        active = (n_body - routed
+                  + routed * cfg.n_experts_per_token / cfg.n_experts)
+    else:
+        active = n_body
+    return {"total": total, "non_embedding": n_body, "active": active}
+
+
+def _model_flops(cfg, shape_name: str) -> float:
+    sh = SHAPES[shape_name]
+    tokens = sh["global_batch"] * (1 if sh["kind"] == "decode"
+                                   else sh["seq_len"])
+    n_active = _param_counts(cfg)["active"]
+    if sh["kind"] == "train":
+        return 6.0 * n_active * tokens
+    return 2.0 * n_active * tokens   # fwd-only (prefill / decode)
+
+
+def _lower_cell(cfg, shape_name, mesh):
+    """Build + lower the right step function for this cell."""
+    from repro.parallel import act_sharding
+    from repro.parallel.mesh import set_strategy
+    kind = SHAPES[shape_name]["kind"]
+    # train cells for <=8B non-MoE archs: ZeRO-3 full data parallelism
+    # (batch 256 covers the whole mesh; per-layer bf16 weight gathers beat
+    # TP's activation reshards at 1M-token batches: yi-6b 507->140 GB/dev).
+    # MoE and the 67-72B giants keep the 2-D layout: under pure dp GSPMD
+    # replicated the expert einsums / head matmuls (measured 138x per-dev
+    # FLOPs, 310 GiB/dev) -- hypothesis refuted there, see §Perf.
+    n_total = _param_counts(cfg)["total"] if cfg else 0
+    # hybrid excluded too: the shared-block/x0 pattern replicates under dp
+    # (200 GiB/dev measured) -- 2d keeps it at 13.5 GiB.  dp also requires
+    # the global batch to cover every device (on the 512-chip multipod
+    # mesh batch 256 < 512 -> 2-D layout there).
+    use_dp = (kind == "train" and cfg.family not in ("moe", "hybrid")
+              and n_total <= 8e9
+              and SHAPES[shape_name]["global_batch"] % mesh.devices.size == 0)
+    set_strategy("dp" if use_dp else "2d")
+    act_sharding.set_mesh_shardings(mesh)
+    arch = make_arch(cfg)
+    batch_shapes, cache_shapes = input_specs(cfg, shape_name)
+
+    if kind == "train":
+        opt = optim.adafactor(optim.constant_lr(1e-4))
+        # microbatch accumulation for the widest models: shrinks the live
+        # activation set per pass (production memory lever, recorded here)
+        accum = 4 if cfg.d_ff >= 24000 else (
+            2 if (cfg.d_model >= 8192 or cfg.family in ("hybrid", "moe"))
+            else 1)
+        fn, shapes, state_sh, batch_sh = jit_train_step(
+            arch, opt, mesh, batch_shapes, accum_steps=accum)
+        state_shapes = {"params": shapes["params"], "opt": shapes["opt"],
+                        "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        return fn.lower(state_shapes, batch_shapes)
+
+    # serving runs in bf16 params (production dtype): halves the FSDP
+    # weight-gather wire and the parameter footprint
+    import dataclasses as _dc
+    cfg = _dc.replace(cfg, param_dtype="bfloat16")
+    arch = make_arch(cfg)
+    batch_shapes, cache_shapes = input_specs(cfg, shape_name)
+    params_shape = jax.eval_shape(lambda: arch.init(jax.random.PRNGKey(0)))
+    param_sh = shd.named(mesh, shd.infer_param_specs(params_shape, mesh))
+    batch_sh = shd.named(mesh, shd.batch_specs(cfg, batch_shapes, mesh))
+
+    if kind == "prefill":
+        S = SHAPES[shape_name]["seq_len"]
+
+        def prefill_fn(params, batch):
+            return arch.prefill(params, batch, S)
+
+        cache_shape = jax.eval_shape(prefill_fn, params_shape,
+                                     batch_shapes)[1]
+        cache_sh = shd.named(mesh, shd.cache_specs(cfg, cache_shape, mesh))
+        fn = jax.jit(prefill_fn, in_shardings=(param_sh, batch_sh),
+                     out_shardings=(None, cache_sh))
+        return fn.lower(params_shape, batch_shapes)
+
+    # decode: one token against a full cache
+    cache_sh = shd.named(mesh, shd.cache_specs(cfg, cache_shapes, mesh))
+
+    def decode_fn(params, batch, caches, pos):
+        return arch.decode_step(params, batch, caches, pos)
+
+    fn = jax.jit(decode_fn,
+                 in_shardings=(param_sh, batch_sh, cache_sh, None),
+                 out_shardings=(None, cache_sh),
+                 donate_argnums=(2,))
+    pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    return fn.lower(params_shape, batch_shapes, cache_shapes, pos_spec)
+
+
+def _analyse(lowered, mesh, model_flops: float) -> dict:
+    n_dev = mesh.devices.size
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    compile_s = time.perf_counter() - t0
+
+    cost = compiled.cost_analysis() or {}
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+                mem[k] = int(getattr(ma, k, 0))
+            mem["total_bytes_per_device"] = (
+                mem.get("argument_size_in_bytes", 0)
+                + mem.get("temp_size_in_bytes", 0)
+                + mem.get("output_size_in_bytes", 0)
+                - mem.get("alias_size_in_bytes", 0))
+    except Exception as e:  # CPU backend may not support it
+        mem["error"] = str(e)
+
+    text = compiled.as_text()
+    col = collective_stats(text, default_group=axis_size(mesh, ("model",)))
+
+    return {
+        "n_devices": int(n_dev),
+        "compile_seconds": compile_s,
+        "hlo_flops_per_device": flops_dev,
+        "hlo_flops": flops_dev * n_dev,
+        "hlo_bytes_per_device": bytes_dev,
+        "hlo_bytes": bytes_dev * n_dev,
+        "collective_wire_bytes": col.total_wire_bytes,
+        "collective_counts": col.counts,
+        "collective_bytes_by_kind": col.bytes_by_kind,
+        "memory_analysis": mem,
+        "model_flops": model_flops,
+    }
+
+
+def run_lm_cell(arch_id: str, shape_name: str, mesh, mesh_name: str,
+                out_dir: str, force: bool = False) -> dict:
+    os.makedirs(f"{out_dir}/{mesh_name}/{arch_id}", exist_ok=True)
+    path = f"{out_dir}/{mesh_name}/{arch_id}/{shape_name}.json"
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    cfg = get_config(arch_id)
+    ok, reason = shape_applicable(cfg, shape_name)
+    if not ok:
+        art = {"skipped": True, "reason": reason, "arch": arch_id,
+               "shape": shape_name, "mesh": mesh_name}
+    else:
+        try:
+            from repro.analysis.flops import step_bytes, step_flops
+            lowered = _lower_cell(cfg, shape_name, mesh)
+            art = _analyse(lowered, mesh, _model_flops(cfg, shape_name))
+            counts = _param_counts(cfg)
+            fl = step_flops(cfg, shape_name)
+            by = step_bytes(cfg, shape_name, counts["total"])
+            art.update({"arch": arch_id, "shape": shape_name,
+                        "mesh": mesh_name, "param_counts": counts,
+                        "analytic_flops": fl["total"],
+                        "analytic_flops_fwd": fl["fwd"],
+                        "analytic_bytes": by["total"],
+                        "analytic_bytes_breakdown": by})
+        except Exception as e:
+            art = {"failed": True, "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:],
+                   "arch": arch_id, "shape": shape_name, "mesh": mesh_name}
+    with open(path, "w") as f:
+        json.dump(art, f, indent=1, default=float)
+    return art
+
+
+# ---------------------------------------------------------------------------
+# the paper's own engine as a dry-run workload
+# ---------------------------------------------------------------------------
+def run_crrm_cell(shape_name: str, mesh, mesh_name: str, out_dir: str,
+                  force: bool = False) -> dict:
+    from repro.configs.crrm_ppp import SHAPES as CRRM_SHAPES
+    from repro.core import distributed as dcrrm
+    from repro.sim.pathloss import make_pathloss
+    from jax.sharding import PartitionSpec as P
+
+    os.makedirs(f"{out_dir}/{mesh_name}/crrm-ppp", exist_ok=True)
+    path = f"{out_dir}/{mesh_name}/crrm-ppp/{shape_name}.json"
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    sh = CRRM_SHAPES[shape_name]
+    N, M, K = sh["n_ues"], sh["n_cells"], sh["n_subbands"]
+    ba = batch_axes(mesh)
+    pl_model = make_pathloss("power_law", alpha=3.5)
+    common = dict(mesh=mesh, pathgain_fn=pl_model.get_pathgain,
+                  noise_w=1e-15, n_cells=M, subband_bw=1e7 / K,
+                  fairness_p=0.0, ue_axis=ba, cell_axis=("model",))
+    f = jax.ShapeDtypeStruct
+    U = f((N, 3), jnp.float32)
+    C = f((M, 3), jnp.float32)
+    Pw = f((M, K), jnp.float32)
+    try:
+        if sh["variant"] == "materialized":
+            fn = dcrrm.make_materialized_step(**common)
+            lowered = jax.jit(fn).lower(U, C, Pw)
+        elif sh["variant"] == "streaming":
+            fn = dcrrm.make_streaming_step(**common)
+            lowered = jax.jit(fn).lower(U, C, Pw)
+        else:
+            fn = dcrrm.make_incremental_rows_step(**common)
+            m = sh["max_moves"]
+            lowered = jax.jit(fn).lower(
+                U, C, Pw, f((N, K), jnp.float32), f((N, K), jnp.float32),
+                f((N,), jnp.int32), f((N,), jnp.float32),
+                f((m,), jnp.int32), f((m, 3), jnp.float32))
+        # analytic model: ~60 executed flops per (ue, cell) pair (distance
+        # 10, power-law pathgain ~15, RSRP/argmax/accum ~35), K subbands
+        # fold into the accumulation; bytes: materialized variant writes/
+        # reads the (N, M) D/G/R matrices (the paper's layout), streaming
+        # touches O(N + M) per cell tile pass.
+        rows = sh.get("max_moves", N)
+        pair_flops = 60.0
+        work = rows * M * pair_flops + rows * K * 30.0
+        if sh["variant"] == "materialized":
+            byts = rows * M * 4.0 * (3 + 2 + 2 * K) + rows * K * 4.0 * 8
+        else:
+            tiles = max(1, M // 512)
+            byts = (rows * 3 * 4.0 * tiles      # U re-read per cell tile
+                    + M * (3 + K) * 4.0         # C, P once
+                    + rows * K * 4.0 * 10)      # O(N) state rw
+        art = _analyse(lowered, mesh, work)
+        art.update({"arch": "crrm-ppp", "shape": shape_name,
+                    "mesh": mesh_name, "variant": sh["variant"],
+                    "analytic_flops": work, "analytic_bytes": byts})
+    except Exception as e:
+        art = {"failed": True, "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:],
+               "arch": "crrm-ppp", "shape": shape_name, "mesh": mesh_name}
+    with open(path, "w") as f2:
+        json.dump(art, f2, indent=1, default=float)
+    return art
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod",
+                    choices=["pod", "multipod", "tiny", "tinypod"])
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch x shape) on --mesh (or both prod "
+                         "meshes with --both-meshes)")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["pod", "multipod"] if args.both_meshes else [args.mesh]
+    for mesh_name in meshes:
+        mesh = make_named_mesh(mesh_name)
+        archs = ([args.arch] if args.arch else
+                 (LM_ARCH_IDS + ["crrm-ppp"] if args.all else []))
+        for arch_id in archs:
+            if arch_id == "crrm-ppp":
+                from repro.configs.crrm_ppp import SHAPES as CRRM_SHAPES
+                shapes = ([args.shape] if args.shape
+                          else list(CRRM_SHAPES))
+                for s in shapes:
+                    t0 = time.perf_counter()
+                    art = run_crrm_cell(s, mesh, mesh_name, args.out,
+                                        args.force)
+                    _report(arch_id, s, mesh_name, art, t0)
+            else:
+                shapes = [args.shape] if args.shape else list(SHAPES)
+                for s in shapes:
+                    t0 = time.perf_counter()
+                    art = run_lm_cell(arch_id, s, mesh, mesh_name,
+                                      args.out, args.force)
+                    _report(arch_id, s, mesh_name, art, t0)
+
+
+def _report(arch_id, shape, mesh_name, art, t0):
+    dt = time.perf_counter() - t0
+    if art.get("skipped"):
+        print(f"[dryrun] {mesh_name}/{arch_id}/{shape}: SKIP "
+              f"({art['reason'][:60]})", flush=True)
+    elif art.get("failed"):
+        print(f"[dryrun] {mesh_name}/{arch_id}/{shape}: FAIL "
+              f"{art['error'][:120]}", flush=True)
+    else:
+        mem = art["memory_analysis"].get("total_bytes_per_device")
+        mem_s = f"{mem/2**30:.2f} GiB/dev" if mem else "?"
+        print(f"[dryrun] {mesh_name}/{arch_id}/{shape}: OK "
+              f"flops/dev={art['hlo_flops_per_device']:.3e} "
+              f"wire={art['collective_wire_bytes']/1e9:.3f}GB {mem_s} "
+              f"compile={art['compile_seconds']:.1f}s wall={dt:.1f}s",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

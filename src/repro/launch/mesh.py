@@ -1,0 +1,25 @@
+"""Production mesh definition (a FUNCTION, so importing this module never
+touches jax device state -- the dry-run sets device-count flags first)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_named_mesh(name: str):
+    """Mesh presets: 'pod' (16x16), 'multipod' (2x16x16), plus tiny local
+    variants for CPU-device testing of the same code paths."""
+    if name == "pod":
+        return make_production_mesh(multi_pod=False)
+    if name == "multipod":
+        return make_production_mesh(multi_pod=True)
+    if name == "tiny":
+        return jax.make_mesh((2, 4), ("data", "model"))
+    if name == "tinypod":
+        return jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    raise ValueError(f"unknown mesh {name!r}")

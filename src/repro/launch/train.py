@@ -1,0 +1,74 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+        --reduced --steps 300 --ckpt-dir ckpts/q05
+
+On the CPU container use --reduced (a ~small-M-param same-family config);
+on real hardware drop it and pick --mesh.  Fault tolerance: --resume picks
+up the latest atomic checkpoint; SIGTERM triggers a final save.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "adafactor", "sgdm"])
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--no-resume", action="store_true")
+    ap.add_argument("--data", default=None,
+                    help="path to an int32 .bin token file (memmap); "
+                         "synthetic stream if omitted")
+    ap.add_argument("--mesh", default="host",
+                    help="host | host:<data>x<model>")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models.registry import make_arch
+    from repro.parallel.mesh import make_host_mesh
+    from repro.train import optim
+    from repro.train.data import MemmapLM, SyntheticLM
+    from repro.train.loop import train
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    arch = make_arch(cfg)
+    if args.mesh.startswith("host:"):
+        d, m = args.mesh.split(":")[1].split("x")
+        mesh = make_host_mesh(int(d), int(m))
+    else:
+        mesh = make_host_mesh(1, 1)
+
+    lr = optim.warmup_cosine(args.lr, max(args.steps // 20, 5), args.steps)
+    optimizer = optim.OPTIMIZERS[args.optimizer](lr)
+    if args.data:
+        data = MemmapLM(args.data, args.batch, args.seq_len)
+    else:
+        data = SyntheticLM(cfg.vocab_size, args.batch, args.seq_len,
+                           seed=args.seed)
+
+    from repro.models.transformer import param_count
+    n = param_count(jax.eval_shape(lambda: arch.init(jax.random.PRNGKey(0))))
+    print(f"# arch={cfg.name} params={n/1e6:.1f}M mesh={mesh.shape} "
+          f"optimizer={args.optimizer}")
+    train(arch, optimizer, mesh, data, steps=args.steps,
+          ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+          accum_steps=args.accum, seed=args.seed,
+          resume=not args.no_resume)
+
+
+if __name__ == "__main__":
+    main()

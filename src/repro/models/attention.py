@@ -1,0 +1,181 @@
+"""Attention: GQA with flash-style chunked softmax, KV caches, M-RoPE.
+
+The chunked implementation (``chunked_attention``) is the default for
+training and prefill: queries are processed in blocks with an online-softmax
+accumulator scanned over KV blocks, so the (S x S) score matrix never
+materialises -- required for the 32k-seq dry-run cells to fit HBM.
+
+Decode (``decode_attention``) scores one new token against the whole cache;
+with batch-1 long-context the cache is sequence-sharded and combined with the
+partial-softmax trick in ``repro.parallel.collectives``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.parallel.act_sharding import constrain_heads
+
+NEG_INF = -2.0e38
+
+
+def attention_init(key, cfg, dtype=jnp.float32, d_kv_model: int | None = None):
+    """QKV/O projection params.  d_kv_model: source dim for K/V (cross-attn)."""
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dk = d_kv_model or d
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": layers.dense_init(ks[0], (d, h, hd), d, dtype),
+        "wk": layers.dense_init(ks[1], (dk, kv, hd), dk, dtype),
+        "wv": layers.dense_init(ks[2], (dk, kv, hd), dk, dtype),
+        "wo": layers.dense_init(ks[3], (h, hd, d), h * hd, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((kv, hd), dtype)
+        p["bv"] = jnp.zeros((kv, hd), dtype)
+    return p
+
+
+def qkv_project(params, x, x_kv, cfg, compute_dtype):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(compute_dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x_kv, params["wk"].astype(compute_dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x_kv, params["wv"].astype(compute_dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(compute_dtype)
+        k = k + params["bk"].astype(compute_dtype)
+        v = v + params["bv"].astype(compute_dtype)
+    return q, k, v
+
+
+def _repeat_kv(k, n_heads):
+    """Broadcast kv heads up to n_heads for grouped-query attention."""
+    kv = k.shape[2]
+    if kv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // kv, axis=2)
+
+
+def chunked_attention(q, k, v, *, causal: bool, chunk_q: int, chunk_kv: int,
+                      q_offset: int = 0):
+    """Flash attention with a memory-exact custom-VJP backward
+    (repro.models.flash); O(S) residuals instead of stacked score blocks."""
+    from repro.models.flash import flash_attention
+    return flash_attention(q, k, v, causal=causal, chunk_q=chunk_q,
+                           chunk_kv=chunk_kv, q_offset=q_offset)
+
+
+def chunked_attention_naive_grad(q, k, v, *, causal: bool, chunk_q: int,
+                                 chunk_kv: int, q_offset: int = 0):
+    """The pre-flash implementation (autodiff saves score blocks); kept as
+    the oracle for flash-gradient tests and for ablation."""
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    k = _repeat_kv(k, h)
+    v = _repeat_kv(v, h)
+    # explicit head parallelism: after the GQA repeat every tensor has
+    # n_heads heads, so sharding them over 'model' keeps the whole score/
+    # context computation local (no K/V resharding inside the scan).
+    q = constrain_heads(q)
+    k = constrain_heads(k)
+    v = constrain_heads(v)
+    scale = hd ** -0.5
+
+    cq = min(chunk_q, sq)
+    ckv = min(chunk_kv, skv)
+    nq, nkv = -(-sq // cq), -(-skv // ckv)
+    pad_q, pad_kv = nq * cq - sq, nkv * ckv - skv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+
+    # (nq, b, h, cq, hd) query blocks; scan over kv blocks inside
+    qb = jnp.moveaxis(q.reshape(b, nq, cq, h, hd), (1, 3), (0, 2))
+    kb = jnp.moveaxis(k.reshape(b, nkv, ckv, h, hd), (1, 3), (0, 2))
+    vb = jnp.moveaxis(v.reshape(b, nkv, ckv, h, hd), (1, 3), (0, 2))
+
+    q_pos = (q_offset + jnp.arange(nq * cq)).reshape(nq, cq)
+    kv_pos = jnp.arange(nkv * ckv).reshape(nkv, ckv)
+    kv_valid = (jnp.arange(nkv * ckv) < skv).reshape(nkv, ckv)
+
+    def per_qblock(qi, qpos):
+        # online softmax over kv blocks
+        def body(carry, xs):
+            m, l, acc = carry
+            kj, vj, kpos, valid = xs
+            s = jnp.einsum("bhqd,bhkd->bhqk", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            mask = valid[None, None, None, :]
+            if causal:
+                mask = mask & (kpos[None, None, None, :]
+                               <= qpos[None, None, :, None])
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(vj.dtype), vj,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, cq), jnp.float32)
+        a0 = jnp.zeros((b, h, cq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                      (kb, vb, kv_pos, kv_valid))
+        return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+    out = jax.lax.map(lambda xs: per_qblock(*xs), (qb, q_pos))
+    out = jnp.moveaxis(out, (0, 2), (1, 3)).reshape(b, nq * cq, h, hd)
+    return out[:, :sq]
+
+
+def naive_attention(q, k, v, *, causal: bool, q_offset: int = 0):
+    """Reference O(S^2)-memory attention (tests/small shapes only)."""
+    h = q.shape[2]
+    k = _repeat_kv(k, h)
+    v = _repeat_kv(v, h)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * (q.shape[-1] ** -0.5)
+    if causal:
+        qp = q_offset + jnp.arange(q.shape[1])
+        kp = jnp.arange(k.shape[1])
+        s = jnp.where(kp[None, None, None, :] <= qp[None, None, :, None],
+                      s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len):
+    """One-token decode: q (b, 1, h, hd) vs cache (b, S, kvh, hd).
+
+    GQA is computed *grouped* -- the cache is never repeated to h heads.
+    Repeating would reshard the multi-TB cache across the model axis every
+    layer (the dry-run showed 201 GB/device of all-gather on deepseek-67b
+    decode); grouped einsums keep the cache in place and only the (b, h, S)
+    score tensor crosses shards (psum over the contracted head_dim).
+
+    ``cache_len``: number of valid cache entries (the new token's K/V must
+    already be written at position cache_len - 1).
+    """
+    b, _, h, hd = q.shape
+    S, g = k_cache.shape[1], k_cache.shape[2]
+    rep = h // g
+    qg = q.reshape(b, g, rep, hd)
+    s = jnp.einsum("bgrd,bkgd->bgrk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    valid = jnp.arange(S)[None, None, None, :] < cache_len
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bgrk,bkgd->bgrd", p.astype(v_cache.dtype), v_cache)
+    return ctx.reshape(b, 1, h, hd)
+
+
+def attn_output(params, ctx, compute_dtype):
+    return jnp.einsum("bshk,hkd->bsd", ctx, params["wo"].astype(compute_dtype))

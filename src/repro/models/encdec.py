@@ -1,0 +1,213 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The modality frontend is a stub per the assignment: ``batch["src_embeds"]``
+carries precomputed speech-frame embeddings (b, s_src, d_model).  The text
+decoder is a standard causal transformer with cross-attention; its KV caches
+split into self-attention caches (grow during decode) and cross-attention
+K/V (computed once from the encoder output -- the CRRM analogy: the encoder
+is an up-to-date upstream node that decode steps never dirty).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers
+from repro.models.config import ModelConfig
+from repro.models.transformer import _cdt, _pdt, scan_layers_remat
+from repro.parallel.act_sharding import constrain, gather_layer_params
+
+
+def _enc_layer_init(key, cfg, pdt):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": layers.rmsnorm_init(cfg.d_model, pdt),
+        "attn": attention.attention_init(ks[0], cfg, pdt),
+        "ln2": layers.rmsnorm_init(cfg.d_model, pdt),
+        "mlp": layers.mlp_init(ks[1], cfg.d_model, cfg.d_ff, pdt),
+    }
+
+
+def _dec_layer_init(key, cfg, pdt):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": layers.rmsnorm_init(cfg.d_model, pdt),
+        "self_attn": attention.attention_init(ks[0], cfg, pdt),
+        "ln_x": layers.rmsnorm_init(cfg.d_model, pdt),
+        "cross_attn": attention.attention_init(ks[1], cfg, pdt),
+        "ln2": layers.rmsnorm_init(cfg.d_model, pdt),
+        "mlp": layers.mlp_init(ks[2], cfg.d_model, cfg.d_ff, pdt),
+    }
+
+
+def init_params(key, cfg: ModelConfig):
+    pdt = _pdt(cfg)
+    k_enc, k_dec, k_emb, k_head = jax.random.split(key, 4)
+    enc_keys = jax.random.split(k_enc, cfg.n_encoder_layers)
+    dec_keys = jax.random.split(k_dec, cfg.n_layers)
+    return {
+        "encoder": jax.vmap(lambda k: _enc_layer_init(k, cfg, pdt))(enc_keys),
+        "enc_norm": layers.rmsnorm_init(cfg.d_model, pdt),
+        "decoder": jax.vmap(lambda k: _dec_layer_init(k, cfg, pdt))(dec_keys),
+        "final_norm": layers.rmsnorm_init(cfg.d_model, pdt),
+        "embed": layers.embed_init(k_emb, cfg.vocab_size, cfg.d_model, pdt),
+        "lm_head": layers.lm_head_init(k_head, cfg.d_model, cfg.vocab_size,
+                                       pdt),
+    }
+
+
+def encode(params, src_embeds, cfg: ModelConfig):
+    """Bidirectional encoder over stub frame embeddings."""
+    cdt = _cdt(cfg)
+    x = src_embeds.astype(cdt)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
+    remat = jax.checkpoint if cfg.remat else (lambda f: f)
+
+    def body(h, lp):
+        h = constrain(h)
+        lp = gather_layer_params(lp)
+        z = layers.rmsnorm(lp["ln1"], h, cfg.norm_eps)
+        q, k, v = attention.qkv_project(lp["attn"], z, z, cfg, cdt)
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+        ctx = attention.chunked_attention(
+            q, k, v, causal=False, chunk_q=cfg.attn_chunk_q,
+            chunk_kv=cfg.attn_chunk_kv)
+        h = h + attention.attn_output(lp["attn"], ctx.astype(cdt), cdt)
+        z = layers.rmsnorm(lp["ln2"], h, cfg.norm_eps)
+        return h + layers.mlp(lp["mlp"], z, cdt)
+
+    x = scan_layers_remat(body, x, params["encoder"], cfg)
+    return layers.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _dec_block(lp, h, enc_out, cfg, cdt, positions, *, self_cache=None,
+               cross_kv=None, pos=None):
+    # self attention (causal)
+    z = layers.rmsnorm(lp["ln1"], h, cfg.norm_eps)
+    q, k, v = attention.qkv_project(lp["self_attn"], z, z, cfg, cdt)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    new_cache = None
+    if self_cache is None:
+        ctx = attention.chunked_attention(
+            q, k, v, causal=True, chunk_q=cfg.attn_chunk_q,
+            chunk_kv=cfg.attn_chunk_kv)
+    else:
+        kc, vc = self_cache
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, 1)
+        if q.shape[1] == 1:
+            ctx = attention.decode_attention(q, kc, vc, pos + 1)
+        else:
+            ctx = attention.chunked_attention(
+                q, k, v, causal=True, chunk_q=cfg.attn_chunk_q,
+                chunk_kv=cfg.attn_chunk_kv)
+        new_cache = (kc, vc)
+    h = h + attention.attn_output(lp["self_attn"], ctx.astype(cdt), cdt)
+
+    # cross attention (not causal, encoder length fixed)
+    z = layers.rmsnorm(lp["ln_x"], h, cfg.norm_eps)
+    qx = jnp.einsum("bsd,dhk->bshk", z,
+                    lp["cross_attn"]["wq"].astype(cdt))
+    if cross_kv is None:
+        kx = jnp.einsum("bsd,dhk->bshk", enc_out,
+                        lp["cross_attn"]["wk"].astype(cdt))
+        vx = jnp.einsum("bsd,dhk->bshk", enc_out,
+                        lp["cross_attn"]["wv"].astype(cdt))
+    else:
+        kx, vx = cross_kv
+    ctx = attention.chunked_attention(
+        qx, kx, vx, causal=False, chunk_q=cfg.attn_chunk_q,
+        chunk_kv=cfg.attn_chunk_kv)
+    h = h + attention.attn_output(lp["cross_attn"], ctx.astype(cdt), cdt)
+
+    z = layers.rmsnorm(lp["ln2"], h, cfg.norm_eps)
+    h = h + layers.mlp(lp["mlp"], z, cdt)
+    return h, new_cache
+
+
+def forward_features(params, batch, cfg: ModelConfig):
+    cdt = _cdt(cfg)
+    enc_out = encode(params, batch["src_embeds"], cfg)
+    x = layers.embed(params["embed"], batch["tokens"], cdt)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
+    remat = jax.checkpoint if cfg.remat else (lambda f: f)
+
+    def body(h, lp):
+        h = constrain(h)
+        lp = gather_layer_params(lp)
+        h, _ = _dec_block(lp, h, enc_out, cfg, cdt, positions)
+        return h
+
+    x = scan_layers_remat(body, x, params["decoder"], cfg)
+    return layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def head(params, x, cfg: ModelConfig):
+    return layers.lm_head(params["lm_head"], x)
+
+
+def forward(params, batch, cfg: ModelConfig):
+    """Training: batch = {src_embeds (b, ss, d), tokens (b, st)} -> logits."""
+    return head(params, forward_features(params, batch, cfg), cfg)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int, enc_len: int):
+    cdt = _cdt(cfg)
+    L, kvh, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((L, batch_size, max_len, kvh, hd), cdt),
+        "v": jnp.zeros((L, batch_size, max_len, kvh, hd), cdt),
+        "xk": jnp.zeros((L, batch_size, enc_len, kvh, hd), cdt),
+        "xv": jnp.zeros((L, batch_size, enc_len, kvh, hd), cdt),
+    }
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len: int):
+    """Encode + decoder prompt pass.  Returns (last logits, caches)."""
+    cdt = _cdt(cfg)
+    enc_out = encode(params, batch["src_embeds"], cfg)
+    x = layers.embed(params["embed"], batch["tokens"], cdt)
+    b, st = x.shape[0], x.shape[1]
+    caches = init_cache(cfg, b, max_len, enc_out.shape[1])
+
+    def body(h, xs):
+        lp, kc, vc = xs
+        h = constrain(h)
+        kx = jnp.einsum("bsd,dhk->bshk", enc_out,
+                        lp["cross_attn"]["wk"].astype(cdt))
+        vx = jnp.einsum("bsd,dhk->bshk", enc_out,
+                        lp["cross_attn"]["wv"].astype(cdt))
+        positions = jnp.broadcast_to(jnp.arange(st)[None], (b, st))
+        h, (kc, vc) = _dec_block(lp, h, enc_out, cfg, cdt, positions,
+                                 self_cache=(kc, vc), cross_kv=(kx, vx),
+                                 pos=0)
+        return h, (kc, vc, kx.astype(cdt), vx.astype(cdt))
+
+    x, (kn, vn, xk, xv) = jax.lax.scan(
+        body, x, (params["decoder"], caches["k"], caches["v"]))
+    caches = {"k": kn, "v": vn, "xk": xk, "xv": xv}
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return layers.lm_head(params["lm_head"], x[:, -1:]), caches
+
+
+def decode_step(params, batch, caches, pos, cfg: ModelConfig):
+    cdt = _cdt(cfg)
+    x = layers.embed(params["embed"], batch["tokens"], cdt)
+    positions = jnp.broadcast_to(
+        jnp.asarray(pos)[None, None], x.shape[:2]).astype(jnp.int32)
+
+    def body(h, xs):
+        lp, kc, vc, kx, vx = xs
+        h, (kc, vc) = _dec_block(lp, h, None, cfg, cdt, positions,
+                                 self_cache=(kc, vc), cross_kv=(kx, vx),
+                                 pos=pos)
+        return h, (kc, vc)
+
+    x, (kn, vn) = jax.lax.scan(
+        body, x, (params["decoder"], caches["k"], caches["v"],
+                  caches["xk"], caches["xv"]))
+    caches = dict(caches, k=kn, v=vn)
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return layers.lm_head(params["lm_head"], x), caches

@@ -1,0 +1,178 @@
+"""Flash attention with a custom VJP (memory-exact backward).
+
+JAX autodiff through the online-softmax scan saves every block's probability
+matrix for the backward -- reintroducing the O(S^2) memory that chunking was
+supposed to remove (observed directly in the deepseek-67b dry-run: stacked
+f32[q_blocks, ..., cq, ckv] buffers dominated HBM).  This module implements
+the standard flash-attention gradient: save only (q, k, v, out, lse), and
+recompute score blocks inside the backward loops.
+
+All tensors are (b, s, h, hd) with kv heads already repeated to h and head
+sharding applied by the caller.  Layout inside: (b, h, s, hd).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def _blocks(x, n, c):
+    # (b, h, s, hd) -> (n, b, h, c, hd)
+    b, h, s, hd = x.shape
+    return jnp.moveaxis(x.reshape(b, h, n, c, hd), 2, 0)
+
+
+def _mask_for(qpos, kpos, kv_valid, causal):
+    m = kv_valid[None, :]
+    if causal:
+        m = m & (kpos[None, :] <= qpos[:, None])
+    return m[None, None]                      # (1, 1, cq, ckv)
+
+
+def _fwd_impl(q, k, v, causal, cq, ckv, q_offset, skv_valid):
+    b, h, sq, hd = q.shape
+    skv = k.shape[2]
+    nq, nkv = sq // cq, skv // ckv
+    scale = hd ** -0.5
+    qb = _blocks(q, nq, cq)
+    kb = _blocks(k, nkv, ckv)
+    vb = _blocks(v, nkv, ckv)
+    q_pos = (q_offset + jnp.arange(nq * cq)).reshape(nq, cq)
+    kv_pos = jnp.arange(nkv * ckv).reshape(nkv, ckv)
+    kv_ok = (jnp.arange(nkv * ckv) < skv_valid).reshape(nkv, ckv)
+
+    def per_q(qi, qpos):
+        def body(carry, xs):
+            m, l, acc = carry
+            kj, vj, kpos, ok = xs
+            s = jnp.einsum("bhqd,bhkd->bhqk", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            s = jnp.where(_mask_for(qpos, kpos, ok, causal), s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(vj.dtype), vj,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, cq), jnp.float32)
+        a0 = jnp.zeros((b, h, cq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                      (kb, vb, kv_pos, kv_ok))
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        return out, lse
+
+    outs, lses = jax.lax.map(lambda xs: per_q(*xs), (qb, q_pos))
+    out = jnp.moveaxis(outs, 0, 2).reshape(b, h, sq, hd)
+    lse = jnp.moveaxis(lses, 0, 2).reshape(b, h, sq)
+    return out, lse
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, causal, cq, ckv, q_offset, skv_valid):
+    out, _ = _fwd_impl(q, k, v, causal, cq, ckv, q_offset, skv_valid)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, cq, ckv, q_offset, skv_valid):
+    out, lse = _fwd_impl(q, k, v, causal, cq, ckv, q_offset, skv_valid)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, cq, ckv, q_offset, skv_valid, res, dout):
+    q, k, v, out, lse = res
+    b, h, sq, hd = q.shape
+    skv = k.shape[2]
+    nq, nkv = sq // cq, skv // ckv
+    scale = hd ** -0.5
+    qb = _blocks(q, nq, cq)
+    dob = _blocks(dout.astype(jnp.float32), nq, cq)
+    lseb = jnp.moveaxis(lse.reshape(b, h, nq, cq), 2, 0)
+    delta = jnp.einsum("bhqd,bhqd->bhq", dout.astype(jnp.float32),
+                       out.astype(jnp.float32))
+    deltab = jnp.moveaxis(delta.reshape(b, h, nq, cq), 2, 0)
+    kb = _blocks(k, nkv, ckv)
+    vb = _blocks(v, nkv, ckv)
+    q_pos = (q_offset + jnp.arange(nq * cq)).reshape(nq, cq)
+    kv_pos = jnp.arange(nkv * ckv).reshape(nkv, ckv)
+    kv_ok = (jnp.arange(nkv * ckv) < skv_valid).reshape(nkv, ckv)
+
+    def per_q(carry, xs):
+        dk_acc, dv_acc = carry                  # (b, h, skv, hd) f32
+        qi, doi, lsei, di, qpos = xs
+
+        def inner(c2, xs2):
+            dq_acc, dk_acc, dv_acc, j = c2
+            kj, vj, kpos, ok = xs2
+            s = jnp.einsum("bhqd,bhkd->bhqk", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            s = jnp.where(_mask_for(qpos, kpos, ok, causal), s, NEG_INF)
+            p = jnp.exp(s - lsei[..., None])    # (b, h, cq, ckv)
+            dv_blk = jnp.einsum("bhqk,bhqd->bhkd", p, doi)
+            dp = jnp.einsum("bhqd,bhkd->bhqk", doi, vj.astype(jnp.float32))
+            ds = p * (dp - di[..., None]) * scale
+            dq_acc = dq_acc + jnp.einsum("bhqk,bhkd->bhqd", ds,
+                                         kj.astype(jnp.float32))
+            dk_blk = jnp.einsum("bhqk,bhqd->bhkd", ds, qi.astype(jnp.float32))
+            dk_acc = jax.lax.dynamic_update_slice_in_dim(
+                dk_acc, jax.lax.dynamic_slice_in_dim(dk_acc, j * ckv, ckv, 2)
+                + dk_blk, j * ckv, axis=2)
+            dv_acc = jax.lax.dynamic_update_slice_in_dim(
+                dv_acc, jax.lax.dynamic_slice_in_dim(dv_acc, j * ckv, ckv, 2)
+                + dv_blk, j * ckv, axis=2)
+            return (dq_acc, dk_acc, dv_acc, j + 1), None
+
+        dq0 = jnp.zeros((b, h, cq, hd), jnp.float32)
+        (dqi, dk_acc, dv_acc, _), _ = jax.lax.scan(
+            inner, (dq0, dk_acc, dv_acc, jnp.int32(0)),
+            (kb, vb, kv_pos, kv_ok))
+        return (dk_acc, dv_acc), dqi
+
+    dk0 = jnp.zeros((b, h, skv, hd), jnp.float32)
+    dv0 = jnp.zeros((b, h, skv, hd), jnp.float32)
+    (dk, dv), dqs = jax.lax.scan(per_q, (dk0, dv0),
+                                 (qb, dob, lseb, deltab, q_pos))
+    dq = jnp.moveaxis(dqs, 0, 2).reshape(b, h, sq, hd)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal: bool, chunk_q: int, chunk_kv: int,
+                    q_offset: int = 0):
+    """Public API, (b, s, h, hd) layout, kv heads may be < h (repeated
+    here).  Pads s to chunk multiples; invalid kv masked out."""
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    if k.shape[2] != h:
+        rep = h // k.shape[2]
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    from repro.parallel.act_sharding import constrain_heads
+    q = constrain_heads(q)
+    k = constrain_heads(k)
+    v = constrain_heads(v)
+    cq = min(chunk_q, sq)
+    ckv = min(chunk_kv, skv)
+    nq, nkv = -(-sq // cq), -(-skv // ckv)
+    pq, pkv = nq * cq - sq, nkv * ckv - skv
+    qt = jnp.moveaxis(q, 2, 1)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if pq:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pkv:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pkv), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pkv), (0, 0)))
+    out = _flash(qt, kt, vt, causal, cq, ckv, q_offset, skv)
+    out = jnp.moveaxis(out, 1, 2)[:, :sq]
+    return out

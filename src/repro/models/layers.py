@@ -1,0 +1,119 @@
+"""Shared neural blocks: norms, rotary embeddings, projections, MLPs.
+
+Parameters are plain nested dicts of jnp arrays (no framework dependency).
+Init functions return pytrees; apply functions are pure.  Weight layouts are
+chosen so the logical-axis sharding rules in ``repro.parallel.sharding`` can
+map them by path name (see that module).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+def dense_init(key, shape, in_axis_size, dtype=jnp.float32):
+    """Truncated-normal fan-in init (the MaxText/T5 default)."""
+    std = 1.0 / math.sqrt(in_axis_size)
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)
+            ).astype(dtype)
+
+
+# -- RMSNorm ------------------------------------------------------------------
+def rmsnorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# -- Rotary position embeddings ---------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (b, s, h, hd); positions: (b, s) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (b, s, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections):
+    """Qwen2-VL multimodal RoPE.
+
+    positions3: (3, b, s) -- temporal / height / width position ids.
+    ``sections`` (e.g. (16, 24, 24), summing to head_dim/2) assigns rotary
+    frequency channels to the three components.
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    # per-frequency-channel component selector: 0=t, 1=h, 2=w
+    sel = jnp.concatenate([jnp.full((s,), i, jnp.int32)
+                           for i, s in enumerate(sections)])   # (hd/2,)
+    pos = positions3[sel]                                # (hd/2, b, s)
+    pos = jnp.moveaxis(pos, 0, -1).astype(jnp.float32)   # (b, s, hd/2)
+    angles = pos * freqs                                 # (b, s, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# -- dense MLP (SwiGLU) ---------------------------------------------------------
+def mlp_init(key, d_model, d_ff, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(k1, (d_model, d_ff), d_model, dtype),
+        "wi_up": dense_init(k2, (d_model, d_ff), d_model, dtype),
+        "wo": dense_init(k3, (d_ff, d_model), d_ff, dtype),
+    }
+
+
+def mlp(params, x, compute_dtype):
+    h = jax.nn.silu(x @ params["wi_gate"].astype(compute_dtype))
+    h = h * (x @ params["wi_up"].astype(compute_dtype))
+    return h @ params["wo"].astype(compute_dtype)
+
+
+# -- embeddings --------------------------------------------------------------------
+def embed_init(key, vocab, d_model, dtype=jnp.float32):
+    return {"embedding": (jax.random.normal(key, (vocab, d_model)) * 0.02
+                          ).astype(dtype)}
+
+
+def embed(params, tokens, compute_dtype):
+    return params["embedding"].astype(compute_dtype)[tokens]
+
+
+def unembed(params, x):
+    """Logits in float32 for a stable softmax/loss."""
+    return x.astype(jnp.float32) @ params["embedding"].astype(jnp.float32).T
+
+
+def lm_head_init(key, d_model, vocab, dtype=jnp.float32):
+    return {"kernel": dense_init(key, (d_model, vocab), d_model, dtype)}
+
+
+def lm_head(params, x):
+    return x.astype(jnp.float32) @ params["kernel"].astype(jnp.float32)

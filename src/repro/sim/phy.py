@@ -1,0 +1,66 @@
+"""PHY abstractions: SINR -> CQI -> MCS -> spectral efficiency, Shannon bound.
+
+CQI thresholds follow the widely used link-level mapping for the 3GPP TS
+38.214 CQI Table 5.2.2.1-2 (QPSK..64QAM); MCS is the paper's "scaled version
+of CQI" in [0, 28], mapped onto the TS 38.214 Table 5.1.3.1-1 spectral
+efficiencies.  The Shannon block is the information-theoretic upper bound
+(including a MIMO multiplexing factor).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# SINR (dB) above which CQI index i (1..15) is usable; CQI 0 = out of range.
+# Derived so the *mapped MCS* is decodable: threshold(i) =
+# 10*log10(2**SE(MCS(i)) - 1) + 2 dB implementation margin -- this keeps the
+# scheduler's rate below Shannon capacity at every operating point (asserted
+# as a system invariant in tests/test_property_system.py).
+CQI_SINR_THRESHOLDS_DB = jnp.array(
+    [-3.25, -0.86, 1.22, 2.16, 3.78, 4.51, 6.42, 8.34, 8.92, 10.55, 12.49, 13.45, 15.42, 17.27, 18.63], dtype=jnp.float32)
+
+# TS 38.214 Table 5.2.2.1-2 CQI spectral efficiencies (CQI 0..15).
+CQI_EFFICIENCY = jnp.array(
+    [0.0, 0.1523, 0.2344, 0.3770, 0.6016, 0.8770, 1.1758, 1.4766,
+     1.9141, 2.4063, 2.7305, 3.3223, 3.9023, 4.5234, 5.1152, 5.5547],
+    dtype=jnp.float32)
+
+# TS 38.214 Table 5.1.3.1-1 (64QAM) spectral efficiencies, MCS 0..28.
+MCS_EFFICIENCY = jnp.array(
+    [0.2344, 0.3066, 0.3770, 0.4902, 0.6016, 0.7402, 0.8770, 1.0273,
+     1.1758, 1.3262, 1.3281, 1.4766, 1.6953, 1.9141, 2.1602, 2.4063,
+     2.5703, 2.5664, 2.7305, 3.0293, 3.3223, 3.6094, 3.9023, 4.2129,
+     4.5234, 4.8164, 5.1152, 5.3320, 5.5547], dtype=jnp.float32)
+
+
+def sinr_to_db(sinr_linear):
+    return 10.0 * jnp.log10(jnp.maximum(sinr_linear, 1e-12))
+
+
+def sinr_db_to_cqi(sinr_db):
+    """CQI in [0, 15]: number of thresholds passed (look-up table)."""
+    return jnp.sum(sinr_db[..., None] >= CQI_SINR_THRESHOLDS_DB,
+                   axis=-1).astype(jnp.int32)
+
+
+def cqi_to_mcs(cqi):
+    """The paper: MCS is a scaled version of CQI, values in [0, 28]."""
+    return jnp.clip(jnp.round(cqi.astype(jnp.float32) * 28.0 / 15.0),
+                    0, 28).astype(jnp.int32)
+
+
+def mcs_to_efficiency(mcs):
+    """bits/s/Hz for each MCS index (3GPP tables)."""
+    return MCS_EFFICIENCY[jnp.clip(mcs, 0, 28)]
+
+
+def spectral_efficiency(sinr_linear):
+    """Full chain SINR -> CQI -> MCS -> spectral efficiency, zeroed at CQI 0."""
+    cqi = sinr_db_to_cqi(sinr_to_db(sinr_linear))
+    se = mcs_to_efficiency(cqi_to_mcs(cqi))
+    return jnp.where(cqi > 0, se, 0.0)
+
+
+def shannon_capacity(sinr_linear, bandwidth_hz, n_tx=1, n_rx=1):
+    """Shannon bound with an ideal spatial-multiplexing MIMO factor."""
+    streams = min(int(n_tx), int(n_rx))
+    return streams * bandwidth_hz * jnp.log2(1.0 + jnp.maximum(sinr_linear, 0.0))

@@ -1,0 +1,118 @@
+"""Checkpointing: atomic, keep-last-k, async, elastic.
+
+Layout:  <dir>/step_<n>/ {manifest.msgpack, <leaf_id>.npy ...}
+
+* atomic     -- written to ``step_<n>.tmp`` then ``os.replace``d, so a crash
+                mid-write can never produce a half checkpoint that restore
+                would pick up.
+* keep-k     -- old steps garbage-collected after a successful write.
+* async      -- ``save_async`` snapshots to host memory synchronously (cheap)
+                and writes in a daemon thread off the training critical path.
+* elastic    -- leaves are stored *unsharded*; restore re-device_puts onto
+                whatever mesh/sharding the resumed job uses, so the cluster
+                size can change across restarts.
+"""
+from __future__ import annotations
+
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path) for path, _ in flat]
+    return keys, [leaf for _, leaf in flat], treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any, keep_last: int = 3,
+         extra: Optional[dict] = None) -> str:
+    keys, leaves, _ = _flatten(tree)
+    host = [np.asarray(x) for x in leaves]
+    return _write(ckpt_dir, step, keys, host, keep_last, extra or {})
+
+
+_save_lock = threading.Lock()
+
+
+def save_async(ckpt_dir: str, step: int, tree: Any, keep_last: int = 3,
+               extra: Optional[dict] = None) -> threading.Thread:
+    """Snapshot to host now; write to disk in the background."""
+    keys, leaves, _ = _flatten(tree)
+    host = [np.asarray(x) for x in leaves]   # sync point, off-device copy
+
+    t = threading.Thread(
+        target=_write, args=(ckpt_dir, step, keys, host, keep_last,
+                             extra or {}), daemon=True)
+    t.start()
+    return t
+
+
+def _write(ckpt_dir, step, keys, host_leaves, keep_last, extra):
+    with _save_lock:
+        final = os.path.join(ckpt_dir, f"step_{step:010d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "keys": keys, "extra": extra,
+                    "dtypes": [str(x.dtype) for x in host_leaves],
+                    "shapes": [list(x.shape) for x in host_leaves]}
+        for i, x in enumerate(host_leaves):
+            np.save(os.path.join(tmp, f"{i:05d}.npy"), x)
+        with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+            f.write(msgpack.packb(manifest))
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        _gc(ckpt_dir, keep_last)
+        return final
+
+
+def _gc(ckpt_dir, keep_last):
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep_last] if keep_last else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:010d}"),
+                      ignore_errors=True)
+
+
+def all_steps(ckpt_dir) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m:
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: int, target_tree: Any,
+            shardings: Any = None) -> tuple[Any, dict]:
+    """Restore into the *structure* of target_tree, resharding onto
+    ``shardings`` (a matching pytree of NamedSharding) if given."""
+    path = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    keys, leaves, treedef = _flatten(target_tree)
+    assert keys == manifest["keys"], "checkpoint/model structure mismatch"
+    shard_flat = (jax.tree_util.tree_leaves(shardings)
+                  if shardings is not None else [None] * len(leaves))
+    out = []
+    for i, (tgt, shd) in enumerate(zip(leaves, shard_flat)):
+        arr = np.load(os.path.join(path, f"{i:05d}.npy"))
+        if shd is not None:
+            out.append(jax.device_put(arr, shd))
+        else:
+            out.append(jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["extra"]

@@ -1,0 +1,69 @@
+"""Training losses: cross entropy with z-loss, MoE aux loss hook."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits, labels, *, z_loss: float = 1e-4, mask=None):
+    """Token-level CE in f32 with an optional z-loss regulariser.
+
+    logits: (b, s, V) f32; labels: (b, s) int32.  Returns (loss, metrics).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / denom
+    acc = ((jnp.argmax(logits, -1) == labels) * mask).sum() / denom
+    return loss, {"loss": loss, "accuracy": acc,
+                  "perplexity": jnp.exp(jnp.minimum(loss, 20.0))}
+
+
+def chunked_cross_entropy(head_fn, features, labels, *, chunk: int = 512,
+                          z_loss: float = 1e-4, mask=None):
+    """CE over sequence chunks so the (b, s, vocab) logits never materialise.
+
+    ``head_fn(x_chunk) -> logits_chunk``; the scan body is checkpointed, so
+    the backward pass recomputes each chunk's logits instead of storing them
+    -- peak memory is one (b, chunk, vocab) block.  This is what makes the
+    big-vocab train cells (qwen 152k vocab at 1M tokens/step) fit HBM.
+    """
+    b, s, d = features.shape
+    c = min(chunk, s)
+    n = s // c
+    assert s % c == 0, (s, c)
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    feat_c = jnp.moveaxis(features.reshape(b, n, c, d), 1, 0)
+    lab_c = jnp.moveaxis(labels.reshape(b, n, c), 1, 0)
+    mask_c = jnp.moveaxis(mask.reshape(b, n, c), 1, 0)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        nll_sum, acc_sum, cnt = carry
+        f, lab, m = xs
+        logits = head_fn(f).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        nll = lse - gold
+        if z_loss:
+            nll = nll + z_loss * jnp.square(lse)
+        m = m.astype(jnp.float32)
+        nll_sum = nll_sum + (nll * m).sum()
+        acc_sum = acc_sum + ((jnp.argmax(logits, -1) == lab) * m).sum()
+        return (nll_sum, acc_sum, cnt + m.sum()), None
+
+    (nll_sum, acc_sum, cnt), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0)),
+        (feat_c, lab_c, mask_c))
+    denom = jnp.maximum(cnt, 1.0)
+    loss = nll_sum / denom
+    return loss, {"loss": loss, "accuracy": acc_sum / denom,
+                  "perplexity": jnp.exp(jnp.minimum(loss, 20.0))}

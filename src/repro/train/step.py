@@ -1,0 +1,126 @@
+"""The jitted, sharded train/serve steps.
+
+``make_train_step`` builds one jit-compiled function:
+    state {params, opt, step} , batch -> state', metrics
+with explicit in/out shardings from the logical-axis rules, donated state
+(in-place optimizer update), optional microbatch gradient accumulation
+(lax.scan over grad microbatches -- the activation-memory lever), and the
+MoE aux loss where applicable.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel import sharding as shd
+from repro.train.loss import chunked_cross_entropy, cross_entropy
+
+
+def make_loss_fn(arch, *, loss_chunk: int = 512):
+    """Backbone features + sequence-chunked CE: the full (b, s, vocab)
+    logits tensor never materialises (see loss.chunked_cross_entropy)."""
+    def loss_fn(params, batch):
+        feats = arch.forward_features(params, batch)
+        return chunked_cross_entropy(
+            lambda x: arch.head(params, x), feats, batch["labels"],
+            chunk=loss_chunk, mask=batch.get("mask"))
+    return loss_fn
+
+
+def make_train_step(arch, optimizer, *, accum_steps: int = 1):
+    """Returns f(state, batch) -> (state, metrics); pure, jit-able."""
+    loss_fn = make_loss_fn(arch)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return grads, metrics
+
+    def step(state, batch):
+        params, opt_state = state["params"], state["opt"]
+        if accum_steps == 1:
+            grads, metrics = grads_of(params, batch)
+        else:
+            # microbatch accumulation: batch dims reshaped (A, B/A, ...);
+            # M-RoPE position ids carry batch at dim 1 ((3, B, S))
+            def to_micro(path, x):
+                name = str(getattr(path[-1], "key", path[-1]))
+                if name == "positions":
+                    y = x.reshape(x.shape[:1]
+                                  + (accum_steps, x.shape[1] // accum_steps)
+                                  + x.shape[2:])
+                    return jnp.moveaxis(y, 1, 0)
+                return x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                 + x.shape[1:])
+
+            micro = jax.tree_util.tree_map_with_path(to_micro, batch)
+
+            def acc(carry, mb):
+                g, _ = grads_of(params, mb)
+                return jax.tree_util.tree_map(jnp.add, carry, g), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, _ = jax.lax.scan(acc, zeros, micro)
+            grads = jax.tree_util.tree_map(lambda g: g / accum_steps, grads)
+            _, metrics = grads_of(params, jax.tree_util.tree_map(
+                lambda x: x[0], micro))  # metrics on first microbatch
+        new_params, new_opt, opt_metrics = optimizer.update(
+            grads, opt_state, params)
+        metrics = dict(metrics, **opt_metrics)
+        return {"params": new_params, "opt": new_opt,
+                "step": state["step"] + 1}, metrics
+
+    return step
+
+
+def state_specs(arch, optimizer, mesh):
+    """PartitionSpec tree for the full train state, via eval_shape (no
+    allocation).  Optimizer moments reuse the param rules (their tree mirrors
+    the params tree, so path-based rules apply unchanged)."""
+    params_shape = jax.eval_shape(lambda: arch.init(jax.random.PRNGKey(0)))
+    opt_shape = jax.eval_shape(lambda: optimizer.init(params_shape))
+    specs = {
+        "params": shd.infer_param_specs(params_shape, mesh),
+        "opt": shd.infer_param_specs(opt_shape, mesh),
+        "step": P(),
+    }
+    shapes = {"params": params_shape, "opt": opt_shape,
+              "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    return shapes, specs
+
+
+def init_state(arch, optimizer, mesh, seed: int = 0):
+    """Materialise the sharded train state directly on the mesh."""
+    shapes, specs = state_specs(arch, optimizer, mesh)
+    out_shardings = shd.named(mesh, specs)
+
+    def build():
+        params = arch.init(jax.random.PRNGKey(seed))
+        return {"params": params, "opt": optimizer.init(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    return jax.jit(build, out_shardings=out_shardings)()
+
+
+def jit_train_step(arch, optimizer, mesh, batch_shapes, *,
+                   accum_steps: int = 1):
+    """jit with explicit shardings + donated state; also returns the
+    (lowerable) function and shardings for the dry-run."""
+    from repro.parallel import act_sharding
+    act_sharding.set_mesh_shardings(mesh)
+    step = make_train_step(arch, optimizer, accum_steps=accum_steps)
+    shapes, specs = state_specs(arch, optimizer, mesh)
+    b_specs = shd.batch_specs(arch.cfg, batch_shapes, mesh)
+    state_sh = shd.named(mesh, specs)
+    batch_sh = shd.named(mesh, b_specs)
+    fn = jax.jit(step,
+                 in_shardings=(state_sh, batch_sh),
+                 out_shardings=(state_sh, None),
+                 donate_argnums=(0,))
+    return fn, shapes, state_sh, batch_sh

@@ -1,0 +1,79 @@
+"""Distributed CRRM (shard_map) vs the single-host engine.
+
+These tests need >1 device, which requires XLA_FLAGS before jax initialises;
+the main pytest process must keep 1 device (per the dry-run isolation rule),
+so each test runs in a fresh subprocess.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, numpy as np
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+from repro.core.distributed import (make_incremental_rows_step,
+                                    make_materialized_step,
+                                    make_streaming_step)
+from repro.core.crrm import CRRM
+from repro.core.params import CRRM_parameters
+from repro.sim.pathloss import make_pathloss
+
+n_ue, n_cell, K = 64, 16, 2
+pl = make_pathloss("UMa")
+k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+U = jnp.concatenate([jax.random.uniform(k1, (n_ue, 2), minval=0., maxval=3000.),
+                     jnp.full((n_ue, 1), 1.5)], 1)
+C = jnp.concatenate([jax.random.uniform(k2, (n_cell, 2), minval=0., maxval=3000.),
+                     jnp.full((n_cell, 1), 25.)], 1)
+Pw = jnp.full((n_cell, K), 5.0)
+params = CRRM_parameters(n_ues=n_ue, ue_positions=np.asarray(U),
+                         cell_positions=np.asarray(C),
+                         power_matrix=np.asarray(Pw), n_subbands=K,
+                         pathloss_model_name="UMa")
+ref = CRRM(params)
+g_ref = np.asarray(ref.get_SINR())
+a_ref = np.asarray(ref.get_attachment())
+t_ref = np.asarray(ref.throughput.update())
+noise = params.subband_noise_W
+bw = params.subband_bandwidth_Hz
+
+for maker in (make_materialized_step, make_streaming_step):
+    f = maker(mesh, pl.get_pathgain, noise, n_cell, bw, 0.0)
+    gamma, a, tput = jax.jit(f)(U, C, Pw)
+    assert np.allclose(np.asarray(gamma), g_ref, rtol=1e-3), maker.__name__
+    assert (np.asarray(a) == a_ref).all(), maker.__name__
+    assert np.allclose(np.asarray(tput), t_ref, rtol=1e-3, atol=1.0)
+
+# incremental smart update at scale
+finc = make_incremental_rows_step(mesh, pl.get_pathgain, noise, n_cell, bw, 0.0)
+w_ref = np.asarray(ref.w.update()); u_ref = np.asarray(ref.u.update())
+R = np.asarray(ref.get_RSRP()); bv = R.sum(2).max(1).astype(np.float32)
+idx = jnp.asarray([3, 17, 40], dtype=jnp.int32)
+newp = jnp.asarray([[10., 10., 1.5], [2900., 100., 1.5], [1500., 1500., 1.5]])
+out = jax.jit(finc)(U, C, Pw, jnp.asarray(w_ref), jnp.asarray(u_ref),
+                    jnp.asarray(a_ref), jnp.asarray(bv), idx, newp)
+U2, w2, u2, a2, bv2, tput2 = out
+ref.move_UEs(np.asarray(idx), np.asarray(newp))
+assert (np.asarray(a2) == np.asarray(ref.get_attachment())).all()
+assert np.allclose(np.asarray(tput2), np.asarray(ref.throughput.update()),
+                   rtol=1e-3, atol=1.0)
+print("DISTRIBUTED_OK")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_crrm_matches_single_host():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=560,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert "DISTRIBUTED_OK" in r.stdout, r.stdout + "\n" + r.stderr

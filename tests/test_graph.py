@@ -1,0 +1,115 @@
+"""Dependency-graph engine unit tests: the smart-update mechanics."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import ALL, Graph, Node, RootNode, pad_indices
+
+
+class Doubler(Node):
+    supports_row_update = True
+
+    def __init__(self, src):
+        super().__init__("double")
+        self.watch(src)
+        self.src = src
+
+    def update_data(self):
+        return self.src._data * 2.0
+
+    def update_rows(self, idx):
+        return self._data.at[jnp.asarray(idx)].set(
+            self.src._data[jnp.asarray(idx)] * 2.0)
+
+
+class Summer(Node):
+    def __init__(self, src):
+        super().__init__("sum")
+        self.watch(src)
+        self.src = src
+
+    def propagate_rows(self, rows):
+        return ALL
+
+    def update_data(self):
+        return self.src._data.sum()
+
+
+def _chain():
+    g = Graph()
+    root = g.add(RootNode("x", jnp.arange(8, dtype=jnp.float32)))
+    mid = g.add(Doubler(root))
+    out = g.add(Summer(mid))
+    return g, root, mid, out
+
+
+def test_invalidation_floods_downstream_without_compute():
+    g, root, mid, out = _chain()
+    out.update()
+    assert mid.up_to_date and out.up_to_date
+    root.set_rows([3], jnp.asarray([10.0]))
+    # invalidation only -- nothing recomputed yet
+    assert not mid.up_to_date and not out.up_to_date
+    assert mid.n_full_updates == 1 and mid.n_row_updates == 0
+
+
+def test_row_local_update():
+    g, root, mid, out = _chain()
+    out.update()
+    root.set_rows([3], jnp.asarray([10.0]))
+    assert float(out.update()) == float((2 * jnp.arange(8)).sum()
+                                        + 20.0 - 6.0)
+    assert mid.n_row_updates == 1 and mid.n_full_updates == 1
+
+
+def test_lazy_no_query_no_compute():
+    g, root, mid, out = _chain()
+    root.set_rows([1], jnp.asarray([5.0]))
+    root.set_rows([2], jnp.asarray([6.0]))
+    assert mid.n_full_updates == 0 and mid.n_row_updates == 0
+
+
+def test_repeated_queries_hit_cache():
+    g, root, mid, out = _chain()
+    out.update()
+    out.update()
+    out.update()
+    assert out.n_full_updates == 1
+
+
+def test_dirty_rows_merge():
+    g, root, mid, out = _chain()
+    out.update()
+    root.set_rows([1], jnp.asarray([5.0]))
+    root.set_rows([4], jnp.asarray([6.0]))
+    assert mid.dirty_rows == {1, 4}
+    out.update()
+    assert mid.n_row_updates == 1  # one merged row pass
+
+
+def test_full_set_floods_all():
+    g, root, mid, out = _chain()
+    out.update()
+    root.set(jnp.ones(8))
+    assert mid.dirty_rows is ALL
+    out.update()
+    assert mid.n_full_updates == 2
+
+
+def test_non_smart_graph_always_full():
+    g = Graph(smart=False)
+    root = g.add(RootNode("x", jnp.arange(8, dtype=jnp.float32)))
+    mid = g.add(Doubler(root))
+    out = g.add(Summer(mid))
+    out.update()
+    root.set_rows([3], jnp.asarray([9.0]))
+    out.update()
+    assert mid.n_row_updates == 0 and mid.n_full_updates == 2
+
+
+def test_pad_indices_buckets():
+    assert len(pad_indices({1})) == 1
+    assert len(pad_indices({1, 2})) == 2
+    assert len(pad_indices({1, 2, 3})) == 4
+    idx = pad_indices({5, 1, 9})
+    assert sorted(set(idx.tolist())) == [1, 5, 9]
+    assert len(idx) == 4  # padded with duplicates

@@ -1,0 +1,71 @@
+"""Paper §4.1 / example 12: SIR distribution of a PPP network vs the exact
+stochastic-geometry result.
+
+For a homogeneous PPP of base stations, nearest-BS association, power-law
+pathloss with exponent alpha, Rayleigh fading and no noise (sigma^2 = 0),
+the SIR CCDF is (Andrews-Baccelli-Ganti / Haenggi):
+
+    P(SIR > t) = 1 / (1 + rho(t, alpha)),
+    rho(t, a)  = t^(2/a) * integral_{t^(-2/a)}^{inf} du / (1 + u^(a/2)).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.crrm import CRRM
+from repro.core.params import CRRM_parameters
+from repro.sim import deploy
+
+ALPHA = 3.5
+
+
+def ppp_sir_ccdf_theory(theta, alpha=ALPHA):
+    out = []
+    for t in np.atleast_1d(theta):
+        lo = t ** (-2.0 / alpha)
+        u = np.linspace(lo, lo + 2000.0, 400_000)
+        rho = t ** (2.0 / alpha) * np.trapezoid(
+            1.0 / (1.0 + u ** (alpha / 2.0)), u)
+        out.append(1.0 / (1.0 + rho))
+    return np.asarray(out)
+
+
+def simulate_sir(n_bs=4000, n_ue=800, extent=10_000.0, seed=0):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    C = deploy.ppp_points(k1, n_bs, extent, z=0.0)
+    # sample UEs in the interior to avoid edge effects
+    U = deploy.ppp_points(k2, n_ue, extent * 0.5, z=0.0) \
+        + jnp.asarray([extent * 0.25, extent * 0.25, 0.0])
+    params = CRRM_parameters(
+        n_ues=n_ue, ue_positions=np.asarray(U), cell_positions=np.asarray(C),
+        pathloss_model_name="power_law",
+        pathloss_params={"alpha": ALPHA},
+        power_W=1.0, noise_power_W=0.0, rayleigh_fading=True, seed=seed)
+    sim = CRRM(params)
+    return np.asarray(sim.get_SINR())[:, 0]
+
+
+def test_ppp_sir_matches_analytic_ccdf():
+    sir = simulate_sir()
+    thetas_db = np.array([-5.0, 0.0, 5.0, 10.0])
+    thetas = 10 ** (thetas_db / 10)
+    emp = np.array([(sir > t).mean() for t in thetas])
+    theo = ppp_sir_ccdf_theory(thetas)
+    err = np.abs(emp - theo)
+    assert err.max() < 0.05, (
+        f"CCDF mismatch: empirical {emp}, theory {theo}")
+
+
+def test_attachment_is_strongest_bs():
+    """With fading disabled, each UE must attach to its max-RSRP BS."""
+    key = jax.random.PRNGKey(1)
+    k1, k2 = jax.random.split(key)
+    C = np.asarray(deploy.ppp_points(k1, 100, 3000.0, z=10.0))
+    U = np.asarray(deploy.ppp_points(k2, 50, 3000.0, z=1.5))
+    sim = CRRM(CRRM_parameters(
+        n_ues=50, ue_positions=U, cell_positions=C,
+        pathloss_model_name="power_law", power_W=1.0))
+    R = np.asarray(sim.get_RSRP()).sum(axis=2)
+    np.testing.assert_array_equal(np.asarray(sim.get_attachment()),
+                                  R.argmax(axis=1))

@@ -1,0 +1,65 @@
+"""Hypothesis property tests on system-level invariants of the simulator."""
+import jax
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.crrm import CRRM
+from repro.core.params import CRRM_parameters
+from repro.sim import phy
+
+
+def _sim(seed, n_ues, n_cells, p, k):
+    return CRRM(CRRM_parameters(
+        n_ues=n_ues, n_cells=n_cells, seed=seed, fairness_p=p,
+        n_subbands=k, pathloss_model_name="UMa", power_W=10.0))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), n_ues=st.integers(3, 40),
+       n_cells=st.integers(2, 12), p=st.floats(0.0, 1.0),
+       k=st.integers(1, 3))
+def test_invariants(seed, n_ues, n_cells, p, k):
+    sim = _sim(seed, n_ues, n_cells, p, k)
+    gains = np.asarray(sim.get_pathgains())
+    assert (gains > 0).all() and (gains < 1).all()
+
+    sinr = np.asarray(sim.get_SINR())
+    assert np.isfinite(sinr).all() and (sinr > 0).all()
+
+    a = np.asarray(sim.get_attachment())
+    assert ((0 <= a) & (a < sim.n_cells)).all()
+    rsrp = np.asarray(sim.get_RSRP()).sum(axis=2)
+    np.testing.assert_array_equal(a, rsrp.argmax(axis=1))
+
+    cqi = np.asarray(sim.get_CQI())
+    mcs = np.asarray(sim.get_MCS())
+    assert ((0 <= cqi) & (cqi <= 15)).all()
+    assert ((0 <= mcs) & (mcs <= 28)).all()
+
+    # Shannon bound dominates the MCS-rate throughput
+    tput = np.asarray(sim.get_UE_throughputs())
+    shannon = np.asarray(sim.get_shannon_capacities()).sum(axis=1)
+    assert (tput <= shannon + 1e-3).all()
+
+    # airtime conservation per active cell
+    se = np.asarray(sim.get_spectral_efficiency())
+    for j in range(sim.n_cells):
+        for band in range(k):
+            users = (a == j) & (se[:, band] > 0)
+            if users.any():
+                shares = (np.asarray(sim.throughput.update())[users, band]
+                          / (sim.params.subband_bandwidth_Hz
+                             * se[users, band]))
+                np.testing.assert_allclose(shares.sum(), 1.0, rtol=1e-3)
+
+
+@settings(max_examples=30, deadline=None)
+@given(sinr_db=st.floats(-30.0, 50.0))
+def test_cqi_mcs_monotone_chain(sinr_db):
+    import jax.numpy as jnp
+    lo = phy.sinr_db_to_cqi(jnp.asarray(sinr_db))
+    hi = phy.sinr_db_to_cqi(jnp.asarray(sinr_db + 3.0))
+    assert int(hi) >= int(lo)
+    assert 0 <= int(phy.cqi_to_mcs(lo)) <= 28
+    se = float(phy.spectral_efficiency(jnp.asarray(10 ** (sinr_db / 10))))
+    assert 0.0 <= se <= 5.5547

@@ -1,0 +1,134 @@
+"""Radio-resource-management feature tests: subbands (example 06), the
+fairness parameter p (Fig. 4), and sectored antennas (Fig. 3)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.crrm import CRRM
+from repro.core.params import CRRM_parameters
+from repro.sim.antenna import Antenna_gain
+
+
+# -- example 06: subband interference coordination -----------------------------
+def _two_cell_params(power_matrix, noise_w):
+    # one UE equidistant between two cells 1 km apart
+    return CRRM_parameters(
+        n_ues=1, ue_positions=np.array([[500.0, 0.0, 1.5]], np.float32),
+        cell_positions=np.array([[0.0, 0.0, 25.0], [1000.0, 0.0, 25.0]],
+                                np.float32),
+        power_matrix=np.asarray(power_matrix, np.float32),
+        n_subbands=np.asarray(power_matrix).shape[1],
+        pathloss_model_name="power_law",
+        pathloss_params={"alpha": 3.5},
+        noise_power_W=noise_w, power_W=1.0)
+
+
+def test_subband_coordination_0db_to_20db():
+    """Same subband -> SINR 0 dB; orthogonal subbands -> 20 dB (noise set so
+    the single-cell SNR is 20 dB, as in the paper's example)."""
+    # received power from one cell at 500 m, alpha 3.5, P=1 W
+    p_rx = 500.0 ** -3.5
+    noise = p_rx / 100.0          # SNR = 20 dB
+    shared = _two_cell_params([[1.0], [1.0]], noise)
+    sim = CRRM(shared)
+    sinr_db = float(np.asarray(sim.get_SINR_dB()).max())
+    assert abs(sinr_db - 0.0) < 0.1, f"co-channel SINR {sinr_db} dB != 0 dB"
+
+    coord = _two_cell_params([[2.0, 0.0], [0.0, 2.0]], noise)
+    sim2 = CRRM(coord)
+    sinr2_db = float(np.asarray(sim2.get_SINR_dB()).max())
+    # serving subband now interference-free: SINR == SNR == 20 dB (2 W into
+    # one subband, noise split per subband -> 2/(noise/2)/100 ... exact:
+    # p_rx*2 / (noise/2) = 400 -> 26 dB; with equal split 1 W: 23 dB.
+    assert sinr2_db > 19.0, f"coordinated SINR only {sinr2_db} dB"
+
+
+# -- Fig. 4: fairness parameter --------------------------------------------------
+def _fairness_sim(p):
+    rng = np.random.default_rng(5)
+    ue = np.column_stack([rng.uniform(50, 1500, 12), rng.uniform(50, 1500, 12),
+                          np.full(12, 1.5)]).astype(np.float32)
+    return CRRM(CRRM_parameters(
+        n_ues=12, ue_positions=ue,
+        cell_positions=np.array([[0.0, 0.0, 25.0]], np.float32),
+        pathloss_model_name="UMa", power_W=10.0, fairness_p=p))
+
+
+def test_fairness_p0_proportional():
+    sim = _fairness_sim(0.0)
+    t = np.asarray(sim.get_UE_throughputs())
+    se = np.asarray(sim.get_spectral_efficiency()).sum(axis=1)
+    active = se > 0
+    ratio = t[active] / se[active]
+    np.testing.assert_allclose(ratio, ratio[0], rtol=1e-4)  # T ~ S
+
+
+def test_fairness_p1_equal_throughput():
+    sim = _fairness_sim(1.0)
+    t = np.asarray(sim.get_UE_throughputs())
+    se = np.asarray(sim.get_spectral_efficiency()).sum(axis=1)
+    t = t[se > 0]
+    np.testing.assert_allclose(t, t[0], rtol=1e-3)
+
+
+def test_fairness_redistributes_monotonically():
+    """Raising p must lower the strongest user's share and raise the
+    weakest active user's (Fig. 4's crossing fan)."""
+    t0 = np.asarray(_fairness_sim(0.0).get_UE_throughputs())
+    t1 = np.asarray(_fairness_sim(1.0).get_UE_throughputs())
+    active = t0 > 0
+    strongest, weakest = t0[active].argmax(), t0[active].argmin()
+    assert t1[active][strongest] < t0[active][strongest]
+    assert t1[active][weakest] > t0[active][weakest]
+
+
+def test_cell_airtime_conserved():
+    """The fairness allocation is an airtime split: throughput must equal
+    bandwidth * sum(share_i * SE_i) with sum(share) = 1 per active cell."""
+    sim = _fairness_sim(0.37)
+    t = np.asarray(sim.get_UE_throughputs())
+    se = np.asarray(sim.get_spectral_efficiency()).sum(axis=1)
+    bw = sim.params.bandwidth_Hz
+    active = se > 0
+    shares = t[active] / (bw * se[active])
+    np.testing.assert_allclose(shares.sum(), 1.0, rtol=1e-4)
+
+
+# -- Fig. 3: sector antennas -----------------------------------------------------
+def test_three_sector_lobes_vs_omni():
+    angles = np.linspace(-np.pi, np.pi, 73)
+    r = 800.0
+    ue = np.column_stack([r * np.cos(angles), r * np.sin(angles),
+                          np.full(angles.size, 1.5)]).astype(np.float32)
+
+    def tput(n_sectors):
+        cells = np.array([[0.0, 0.0, 25.0]] * n_sectors, np.float32)
+        sim = CRRM(CRRM_parameters(
+            n_ues=angles.size, ue_positions=ue, cell_positions=cells,
+            n_sectors=n_sectors, pathloss_model_name="UMa", power_W=10.0,
+            fairness_p=1.0))
+        g = np.asarray(sim.get_pathgains())
+        return g
+
+    g1 = tput(1)
+    assert np.allclose(g1[:, 0], g1[0, 0], rtol=1e-4)  # omni: flat
+
+    g3 = tput(3)
+    best = g3.max(axis=1)
+    # boresight (0 deg) vs crossover (60 deg): distinct lobes
+    i_bore = np.argmin(np.abs(angles - 0.0))
+    i_cross = np.argmin(np.abs(angles - np.pi / 3))
+    assert best[i_bore] / best[i_cross] > 2.0
+    # pattern has three-fold symmetry
+    i_120 = np.argmin(np.abs(angles - 2 * np.pi / 3))
+    np.testing.assert_allclose(best[i_bore], best[i_120], rtol=0.05)
+
+
+def test_antenna_pattern_properties():
+    ant = Antenna_gain()
+    phi = jnp.linspace(-jnp.pi, jnp.pi, 181)
+    att = -np.asarray(ant.pattern_dB(phi))
+    assert att.min() >= 0.0 and att.max() <= 30.0  # A_max cap
+    half_power = np.deg2rad(65.0) / 2
+    i = np.argmin(np.abs(np.asarray(phi) - half_power))
+    assert abs(att[i] - 3.0) < 0.3  # 3 dB at half the HPBW

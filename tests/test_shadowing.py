@@ -1,0 +1,67 @@
+"""TR 38.901 LOS probability + shadow fading tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.sim import shadowing
+from repro.sim.pathloss import UMa_pathloss
+
+
+@pytest.mark.parametrize("scenario", ["RMa", "UMa", "UMi", "InH"])
+def test_los_probability_shape_and_monotonicity(scenario):
+    d = jnp.linspace(1.0, 3000.0, 300)
+    p = np.asarray(shadowing.los_probability(scenario, d))
+    assert ((0.0 <= p) & (p <= 1.0)).all()
+    # close-in links are (almost) surely LOS, far links rarely
+    assert p[0] > 0.99
+    assert p[-1] < 0.2
+    # non-increasing up to numerical wiggle
+    assert (np.diff(p) <= 1e-6).all()
+
+
+def test_sample_los_matches_probability():
+    key = jax.random.PRNGKey(0)
+    d = jnp.full((2000, 50), 100.0)
+    mask = np.asarray(shadowing.sample_los(key, "UMa", d))
+    expect = float(shadowing.los_probability("UMa", jnp.asarray(100.0)))
+    assert abs(mask.mean() - expect) < 0.02
+
+
+def test_shadow_fading_statistics():
+    key = jax.random.PRNGKey(1)
+    los = jnp.zeros((400, 60), bool)  # all NLOS: sigma = 6 dB (UMa)
+    g = np.asarray(shadowing.shadow_fading_gain(key, "UMa", los,
+                                                n_sectors=3))
+    db = -10.0 * np.log10(g)
+    assert abs(db.mean()) < 0.5            # zero-mean in dB
+    assert abs(db.std() - 6.0) < 0.5       # sigma_SF respected
+
+
+def test_shadow_fading_site_correlation():
+    """Co-sited sectors must see correlated shadowing; distinct sites not."""
+    key = jax.random.PRNGKey(2)
+    los = jnp.zeros((3000, 6), bool)       # 2 sites x 3 sectors
+    g = np.asarray(shadowing.shadow_fading_gain(key, "UMa", los,
+                                                n_sectors=3,
+                                                site_corr=0.5))
+    db = -10.0 * np.log10(g)
+    same_site = np.corrcoef(db[:, 0], db[:, 1])[0, 1]
+    diff_site = np.corrcoef(db[:, 0], db[:, 4])[0, 1]
+    assert same_site > 0.3
+    assert abs(diff_site) < 0.1
+
+
+def test_mixed_pathgain_between_los_and_nlos():
+    los_m = UMa_pathloss(LOS=True)
+    nlos_m = UMa_pathloss(LOS=False)
+    d2d = jnp.full((4, 4), 800.0)
+    d3d = jnp.sqrt(d2d ** 2 + 23.5 ** 2)
+    mask = jnp.eye(4, dtype=bool)
+    g = shadowing.mixed_pathgain(los_m, nlos_m, mask, d2d, d3d, 25.0, 1.5)
+    g_l = los_m.get_pathgain(d2d, d3d, 25.0, 1.5)
+    g_n = nlos_m.get_pathgain(d2d, d3d, 25.0, 1.5)
+    np.testing.assert_allclose(np.asarray(jnp.diagonal(g)),
+                               np.asarray(jnp.diagonal(g_l)))
+    assert float(g[0, 1]) == float(g_n[0, 1])
+    assert float(g_l[0, 0]) > float(g_n[0, 0])  # LOS stronger
