@@ -192,6 +192,44 @@ def kernel_fused_sinr():
     return "kernel_fused_sinr_max_rel_err", us, err
 
 
+# -- MAC: scan-compiled TTI engine vs per-TTI graph dispatch ---------------------
+def mac_episode(n_ues=1000, n_cells=57, n_tti=100):
+    """us/TTI for a Poisson-traffic PF episode: lax.scan engine vs a Python
+    per-TTI loop over the (smart) graph.  The scan path is one compiled
+    program; the loop pays graph dispatch every TTI."""
+    common = dict(n_ues=n_ues, n_cells=n_cells, n_sectors=1, seed=3,
+                  pathloss_model_name="UMa", power_W=10.0,
+                  traffic_model="poisson", scheduler_policy="pf",
+                  traffic_params=dict(arrival_rate_hz=300.0,
+                                      packet_size_bits=12_000.0))
+
+    sim = CRRM(CRRM_parameters(**common))
+    key = jax.random.PRNGKey(0)
+    sim.run_episode(n_tti=n_tti, key=key)            # compile + warm
+    t0 = time.perf_counter()
+    out = sim.run_episode(n_tti=n_tti, key=key)
+    out.block_until_ready()
+    us_scan = (time.perf_counter() - t0) / n_tti * 1e6
+
+    loop = CRRM(CRRM_parameters(**common))
+    loop.get_served_throughputs()                    # warm the graph
+    keys = jax.random.split(jax.random.PRNGKey(1), n_tti + 2)
+    for t in range(2):                               # warm row buckets
+        loop.step_traffic(keys[t], t)
+        loop.get_served_throughputs().block_until_ready()
+    t0 = time.perf_counter()
+    for t in range(n_tti):
+        loop.step_traffic(keys[t + 2], t)
+        out = loop.get_served_throughputs()
+    out.block_until_ready()
+    us_loop = (time.perf_counter() - t0) / n_tti * 1e6
+
+    print(f"# mac_episode: scan {us_scan:.1f} us/TTI, "
+          f"graph loop {us_loop:.1f} us/TTI "
+          f"({n_ues} UEs x {n_tti} TTIs, poisson+pf)")
+    return "mac_episode_scan_speedup", us_scan, us_loop / us_scan
+
+
 ALL = [fig2_pathloss_throughput, fig3_sectors, fig4_fairness,
        fig5_ppp_validation, tab_smart_update, tab_mobility_sweep,
-       kernel_fused_sinr]
+       kernel_fused_sinr, mac_episode]

@@ -1,20 +1,34 @@
 """Benchmark harness: one entry per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV (plus commented detail lines).
-Run:  PYTHONPATH=src python -m benchmarks.run
+Run:  PYTHONPATH=src python -m benchmarks.run [--only SUBSTR]
+
+Registered benches (see benchmarks.paper_benches.ALL): fig2..fig5, the
+smart-update tables, the fused-SINR kernel check, and ``mac_episode``
+(scan-compiled TTI engine vs per-TTI graph dispatch).
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
     from benchmarks import paper_benches
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="run only benchmarks whose name contains SUBSTR")
+    args = ap.parse_args(argv)
+    benches = [b for b in paper_benches.ALL if args.only in b.__name__]
+    if not benches:
+        ap.error(f"no benchmark name contains {args.only!r}; have: "
+                 + ", ".join(b.__name__ for b in paper_benches.ALL))
 
     print("name,us_per_call,derived")
     failures = 0
-    for bench in paper_benches.ALL:
+    for bench in benches:
         try:
             name, us, derived = bench()
             print(f"{name},{us:.1f},{derived}")

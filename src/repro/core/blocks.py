@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import ALL, Node, RootNode
+from repro.mac import scheduler as mac_sched
 from repro.sim import phy
 from repro.sim.antenna import Antenna_gain
 
@@ -390,3 +391,101 @@ class ThroughputNode(Node):
 
     def update_data(self):
         return self._full(self.se._data, self.a._data)
+
+
+# ---------------------------------------------------------------------------
+# MAC subsystem nodes (traffic -> buffers -> scheduler -> served throughput)
+# ---------------------------------------------------------------------------
+class BufferNode(RootNode):
+    """MAC backlog root: bits queued for each UE (``inf`` = full buffer).
+
+    A root, not a computed node: its contents come from outside the radio
+    graph (traffic arrivals / the episode engine's write-back).  Mutating a
+    single UE's backlog floods only that row, and only into the MAC
+    subgraph -- the radio chain (D..SE) does not watch it.
+    """
+
+    def __init__(self, backlog):
+        super().__init__("buffer", jnp.asarray(backlog, dtype=jnp.float32))
+
+    def add_bits(self, idx, bits) -> None:
+        """Accumulate arrival bits onto selected UEs (row-local flood)."""
+        idx = np.asarray(idx, dtype=np.int32)
+        new = self._data[jnp.asarray(idx)] + jnp.asarray(bits,
+                                                         dtype=jnp.float32)
+        self.set_rows(idx, new)
+
+
+def _schedule_fn(policy, n_cells, n_rb, fairness_p):
+    """One jitted allocation pass; the policy is baked at trace time."""
+    @jax.jit
+    def f(se, cqi, a, backlog, cursor):
+        active = (backlog[:, None] > 0.0) & (se > 0.0)
+        # the single-shot graph uses the stationary alpha-fair PF weights
+        # (se**-fairness_p) -- exactly the legacy ThroughputNode allocation.
+        log_w = mac_sched.pf_log_weights_stationary(se, fairness_p)
+        return mac_sched.allocate(policy, active, cqi, a, n_cells, n_rb,
+                                  cursor, log_w)
+
+    return f
+
+
+class ScheduleNode(Node):
+    """alloc[i, k]: resource blocks granted to UE i on subband k.
+
+    NOT row-local: one UE's backlog or channel change redistributes its
+    serving cell's whole grid, so this node recomputes in full (cheap
+    vector math, like ThroughputNode).
+    """
+
+    supports_row_update = False
+
+    def __init__(self, se: SpectralEfficiencyNode, cqi: CQINode,
+                 a: AttachmentNode, buffer: BufferNode, n_cells: int,
+                 n_rb: int, policy: str, fairness_p: float):
+        super().__init__("alloc")
+        self.watch(se, cqi, a, buffer)
+        self.se, self.cqi, self.a, self.buffer = se, cqi, a, buffer
+        self.cursor = 0  # round-robin rotation state (engine rotates per TTI)
+        self._full = _schedule_fn(policy, n_cells, n_rb, fairness_p)
+
+    def propagate_rows(self, rows):
+        return ALL  # the grid split mixes rows within a cell
+
+    def update_data(self):
+        return self._full(self.se._data, self.cqi._data, self.a._data,
+                          self.buffer._data, jnp.int32(self.cursor))
+
+
+def _served_fn(rb_bw_hz, tti_s):
+    @jax.jit
+    def f(alloc, se, backlog):
+        bits = mac_sched.served_bits(alloc, se, backlog, rb_bw_hz, tti_s)
+        return bits / tti_s
+
+    return f
+
+
+class ServedThroughputNode(Node):
+    """Terminal MAC block: served bits/s per (UE, subband).
+
+    Grant capacity capped by backlog.  With ``traffic_model="full_buffer"``
+    and ``scheduler_policy="pf"`` this reduces exactly to the legacy
+    ``ThroughputNode`` (the grant is the stationary fairness-p share and
+    the backlog cap never binds) -- asserted in tests/test_mac.py.
+    """
+
+    supports_row_update = False
+
+    def __init__(self, sched: ScheduleNode, se: SpectralEfficiencyNode,
+                 buffer: BufferNode, rb_bw_hz: float, tti_s: float):
+        super().__init__("T_served")
+        self.watch(sched, se, buffer)
+        self.sched, self.se, self.buffer = sched, se, buffer
+        self._full = _served_fn(rb_bw_hz, tti_s)
+
+    def propagate_rows(self, rows):
+        return ALL
+
+    def update_data(self):
+        return self._full(self.sched._data, self.se._data, self.buffer._data)

@@ -20,6 +20,7 @@ import numpy as np
 from repro.core import blocks
 from repro.core.graph import Graph, RootNode
 from repro.core.params import CRRM_parameters
+from repro.mac import traffic
 from repro.sim import deploy, fading
 from repro.sim.antenna import Antenna_gain, sector_boresights
 from repro.sim.pathloss import make_pathloss
@@ -118,6 +119,19 @@ class CRRM:
             self.se, self.a, self.n_cells, p.subband_bandwidth_Hz,
             p.fairness_p))
 
+        # -- MAC subsystem: traffic -> buffers -> scheduler -> served -------
+        # The legacy ThroughputNode above is the full_buffer + fairness_p
+        # special case of this chain (asserted in tests/test_mac.py).
+        init_backlog, self._traffic_step = traffic.make_traffic(
+            p.traffic_model, self.n_ues, p.tti_s, **p.traffic_params)
+        self.buffer = g.add(blocks.BufferNode(init_backlog()))
+        self.sched = g.add(blocks.ScheduleNode(
+            self.se, self.cqi, self.a, self.buffer, self.n_cells, p.n_rb,
+            p.scheduler_policy, p.fairness_p))
+        self.served = g.add(blocks.ServedThroughputNode(
+            self.sched, self.se, self.buffer,
+            p.subband_bandwidth_Hz / p.n_rb, p.tti_s))
+
     # ---------------------------------------------------------------- mutations
     def move_UE(self, i: int, xyz) -> None:
         self.U.set_rows(np.asarray([i]), np.asarray(xyz, np.float32)[None, :])
@@ -137,6 +151,18 @@ class CRRM:
     def resample_fading(self, key) -> None:
         self.fading.set(fading.rayleigh_power(
             key, (self.n_ues, self.n_cells)))
+
+    def add_traffic(self, idx, bits) -> None:
+        """Queue arrival bits onto selected UEs (row-local MAC flood)."""
+        self.buffer.add_bits(idx, bits)
+
+    def set_backlog(self, backlog) -> None:
+        self.buffer.set(jnp.asarray(backlog, dtype=jnp.float32))
+
+    def step_traffic(self, key, t: int = 0) -> None:
+        """Draw one TTI of arrivals from the configured traffic model."""
+        arrivals = self._traffic_step(key, t)
+        self.buffer.set(self.buffer._data + arrivals)
 
     # ------------------------------------------------------------------- queries
     def get_distances(self):
@@ -174,6 +200,32 @@ class CRRM:
     def get_UE_throughputs(self):
         """(n_ue,) bits/s: fairness-weighted share summed over subbands."""
         return self.throughput.update().sum(axis=1)
+
+    def get_backlog(self):
+        """(n_ue,) bits queued (inf for full-buffer traffic)."""
+        return self.buffer.update()
+
+    def get_schedule(self):
+        """(n_ue, n_subbands) resource blocks granted this TTI."""
+        return self.sched.update()
+
+    def get_served_throughputs(self):
+        """(n_ue,) bits/s through the MAC chain (grant capped by backlog)."""
+        return self.served.update().sum(axis=1)
+
+    # ------------------------------------------------------------------ episodes
+    def run_episode(self, n_tti: int, key=None, mobility_step_m=None,
+                    per_tti_fading: bool = False, sync_state: bool = True):
+        """Roll ``n_tti`` TTIs as one ``lax.scan`` program.
+
+        Returns (n_tti, n_ues) served throughput in bits/s; final buffers /
+        PF state / positions are written back into the graph (see
+        repro.mac.engine).
+        """
+        from repro.mac import engine as mac_engine
+        return mac_engine.run_episode(
+            self, n_tti, key=key, mobility_step_m=mobility_step_m,
+            per_tti_fading=per_tti_fading, sync_state=sync_state)
 
     # -------------------------------------------------------------- introspection
     def update_counts(self):

@@ -54,6 +54,15 @@ class CRRM_parameters:
     fairness_p: float = 0.0                # T_i = a * S_i^(1-p)
     n_tx: int = 1
     n_rx: int = 1
+    #: mac.traffic.TRAFFIC_MODELS: "full_buffer" | "poisson" | "ftp3"
+    traffic_model: str = "full_buffer"
+    traffic_params: dict = dataclasses.field(default_factory=dict)
+    #: mac.scheduler.SCHEDULER_POLICIES: "pf" | "rr" | "max_cqi"
+    scheduler_policy: str = "pf"
+    n_rb: int = 12                         # resource blocks per subband per TTI
+    tti_s: float = 1e-3                    # TTI duration (1 ms numerology-0 slot)
+    pf_ewma: float = 0.05                  # EWMA step of the PF average-rate state
+    harq_bler: float = 0.0                 # HARQ-lite: P(transport block lost)
 
     # engine -------------------------------------------------------------------------
     smart: bool = True                     # the compute-on-demand switch
@@ -66,6 +75,19 @@ class CRRM_parameters:
             raise ValueError("n_subbands must be >= 1")
         if not 0.0 <= self.fairness_p <= 1.0:
             raise ValueError("fairness_p must be in [0, 1]")
+        from repro.mac.scheduler import SCHEDULER_POLICIES
+        from repro.mac.traffic import TRAFFIC_MODELS
+        if self.traffic_model not in TRAFFIC_MODELS:
+            raise ValueError(f"traffic_model must be one of {TRAFFIC_MODELS}")
+        if self.scheduler_policy not in SCHEDULER_POLICIES:
+            raise ValueError(
+                f"scheduler_policy must be one of {SCHEDULER_POLICIES}")
+        if self.n_rb < 1:
+            raise ValueError("n_rb must be >= 1")
+        if not 0.0 < self.pf_ewma <= 1.0:
+            raise ValueError("pf_ewma must be in (0, 1]")
+        if not 0.0 <= self.harq_bler < 1.0:
+            raise ValueError("harq_bler must be in [0, 1)")
         if self.power_matrix is not None:
             pm = np.asarray(self.power_matrix)
             if pm.ndim != 2 or pm.shape[1] != self.n_subbands:

@@ -1,0 +1,16 @@
+"""MAC layer: traffic sources, resource-block scheduling, TTI episode engine.
+
+The paper's CRRM stops at a single-shot fairness-weighted throughput split;
+this package adds the time dimension: offered load (``traffic``), per-cell
+resource-block allocation (``scheduler``) and a ``lax.scan``-compiled
+multi-TTI driver (``engine``) so a whole episode runs as one compiled
+program.  Everything is pure ``jnp`` so it composes with the smart-update
+graph (single-shot nodes in ``core.blocks``) and with ``jax.lax.scan``
+(the episode engine) alike.
+"""
+from repro.mac import scheduler, traffic  # noqa: F401
+
+# NOTE: repro.mac.engine is imported lazily (by repro.core.crrm) rather than
+# here: it depends on repro.core.blocks, which itself uses the pure policy
+# functions above -- eager import would create a cycle.
+

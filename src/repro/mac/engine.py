@@ -1,0 +1,175 @@
+"""The scan-compiled TTI engine: a whole episode as ONE compiled program.
+
+The smart-update graph is built for sparse, event-driven mutation (move a
+few UEs, re-query).  Time-stepped MAC simulation is the opposite regime:
+*every* TTI touches *every* UE's buffer, so per-TTI Python dispatch over the
+node graph would dominate.  This module re-expresses one TTI as a pure
+function of a small carry
+
+    (positions, backlog_bits, pf_avg_rate, rr_cursor)
+
+and rolls N TTIs with ``jax.lax.scan``: one trace, one XLA program, zero
+per-TTI Python (DESIGN.md §TTI-engine).  A 1000-UE x 1000-TTI episode is a
+single device launch.
+
+Two channel regimes:
+
+* static (no mobility, no per-TTI fading): the radio chain (se, cqi, a) is
+  read once from the graph's cached nodes and passed in -- the scan body
+  is MAC-only math;
+* dynamic (``mobility_step_m`` set and/or ``per_tti_fading``): the radio
+  chain is recomputed inside the scan from the same jitted block helpers
+  the graph nodes use, so both paths share one implementation.
+
+All mutable simulator state (positions, powers, fading, radio outputs)
+enters the compiled episode as *arguments*, never as baked-in constants, so
+mutating the graph between episodes behaves correctly.  After the episode
+the final carry is written back into the graph roots so subsequent
+single-shot queries (and further episodes) continue from the episode's end
+state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blocks
+from repro.mac import scheduler as mac_sched
+from repro.mac.traffic import make_traffic
+from repro.sim import fading as fading_mod
+from repro.sim import mobility
+
+
+def build_episode(sim, n_tti: int, mobility_step_m=None,
+                  per_tti_fading: bool = False):
+    """Trace an episode runner for ``sim``'s topology and MAC parameters.
+
+    Returns a jitted function
+
+        ``fn(carry0, radio_in) -> (carry, tput)``
+
+    with ``carry = (U, backlog, pf_avg, cursor, key)`` and ``radio_in =
+    (se, cqi, a, C, P, bore, fad)``; ``tput`` is the (n_tti, n_ues) per-TTI
+    served throughput in bits/s.  The traced function is cached on the
+    simulator keyed by ``(n_tti, mobility_step_m, per_tti_fading)`` so
+    repeat episodes reuse the compilation.
+    """
+    p = sim.params
+    cache_key = (n_tti, mobility_step_m, per_tti_fading)
+    cache = sim.__dict__.setdefault("_episode_cache", {})
+    if cache_key in cache:
+        return cache[cache_key]
+
+    n_ues, n_cells = sim.n_ues, sim.n_cells
+    n_rb, tti_s, beta = p.n_rb, p.tti_s, p.pf_ewma
+    rb_bw = p.subband_bandwidth_Hz / p.n_rb
+    policy, bler = p.scheduler_policy, p.harq_bler
+    noise_w = p.subband_noise_W
+    gain_full = sim.G._full          # jitted closure over pathloss + antenna
+    attach_on_mean = hasattr(sim, "R_mean")
+    _, traffic_step = make_traffic(p.traffic_model, n_ues, tti_s,
+                                   **p.traffic_params)
+
+    def unfaded_gain(U, C, bore):
+        d2d, d3d, az = blocks._geometry(U, C)
+        return gain_full(U, C, d2d, d3d, az, bore,
+                         jnp.ones((n_ues, n_cells), jnp.float32))
+
+    def sinr_chain(R, a):
+        w = blocks._wanted(R, a)
+        u = blocks._interference(R, w)
+        gamma = w / (noise_w + u)
+        cqi = blocks._cqi(gamma)
+        se = blocks._se(blocks._mcs(cqi), cqi)
+        return se, cqi, a
+
+    def radio(U, C, P, bore, fad):
+        """Pure (se, cqi, a), mirroring the graph's D..SE chain."""
+        G0 = unfaded_gain(U, C, bore)           # pathgain * antenna
+        R = blocks._rsrp(G0 * fad, P)
+        a = (blocks._attach(blocks._rsrp(G0, P)) if attach_on_mean
+             else blocks._attach(R))
+        return sinr_chain(R, a)
+
+    def allocate(se, cqi, a, buf, avg, cursor):
+        active = (buf[:, None] > 0.0) & (se > 0.0)
+        log_w = mac_sched.pf_log_weights_ewma(rb_bw * se, avg[:, None],
+                                              p.fairness_p)
+        return mac_sched.allocate(policy, active, cqi, a, n_cells, n_rb,
+                                  cursor, log_w)
+
+    @jax.jit
+    def episode(carry0, radio_in):
+        se0, cqi0, a0, C, P, bore, fad0 = radio_in
+        if per_tti_fading and mobility_step_m is None:
+            # static geometry: one unfaded gain/attachment pass, hoisted
+            # out of the scan; only the fading factor varies per TTI.
+            G_static = unfaded_gain(carry0[0], C, bore)
+            a_static = (blocks._attach(blocks._rsrp(G_static, P))
+                        if attach_on_mean else None)
+
+        def step(carry, t):
+            U, buf, avg, cursor, key = carry
+            k_mob, k_fad, k_tr, k_harq = (jax.random.fold_in(key, 4 * t + i)
+                                          for i in range(4))
+            if mobility_step_m is not None:
+                idx = jnp.arange(n_ues)
+                U = U.at[idx].set(mobility.random_walk(
+                    k_mob, U, idx, mobility_step_m, p.extent_m))
+                fad = (fading_mod.rayleigh_power(k_fad, (n_ues, n_cells))
+                       if per_tti_fading else fad0)
+                se, cqi, a = radio(U, C, P, bore, fad)
+            elif per_tti_fading:
+                fad = fading_mod.rayleigh_power(k_fad, (n_ues, n_cells))
+                R = blocks._rsrp(G_static * fad, P)
+                a = a_static if attach_on_mean else blocks._attach(R)
+                se, cqi, a = sinr_chain(R, a)
+            else:
+                se, cqi, a = se0, cqi0, a0
+            buf = buf + traffic_step(k_tr, t)
+            alloc = allocate(se, cqi, a, buf, avg, cursor)
+            bits = mac_sched.served_bits(alloc, se, buf, rb_bw, tti_s).sum(1)
+            if bler > 0.0:   # HARQ-lite: lost blocks stay queued -> retx
+                bits = bits * jax.random.bernoulli(
+                    k_harq, 1.0 - bler, (n_ues,)).astype(bits.dtype)
+            # clamp: served_bits <= backlog only up to float rounding
+            buf = jnp.maximum(buf - bits, 0.0)
+            tput = bits / tti_s
+            avg = (1.0 - beta) * avg + beta * tput
+            return (U, buf, avg, cursor + n_rb, key), tput
+
+        return jax.lax.scan(step, carry0, jnp.arange(n_tti))
+
+    cache[cache_key] = episode
+    return episode
+
+
+def run_episode(sim, n_tti: int, key=None, mobility_step_m=None,
+                per_tti_fading: bool = False, sync_state: bool = True):
+    """Run ``n_tti`` TTIs; returns (n_tti, n_ues) served throughput (bits/s).
+
+    The PF average-rate state is seeded from the single-shot graph's served
+    throughput (the stationary alpha-fair point), so a full-buffer PF
+    episode starts -- and, with a static channel, stays -- at the legacy
+    ``ThroughputNode`` fixed point.
+    """
+    if key is None:
+        key = jax.random.fold_in(jax.random.PRNGKey(sim.params.seed),
+                                 0x6d6163)   # "mac"
+    episode = build_episode(sim, n_tti, mobility_step_m, per_tti_fading)
+    avg0 = getattr(sim, "_pf_avg", None)
+    if avg0 is None:
+        avg0 = sim.get_served_throughputs()
+    carry0 = (sim.U._data, sim.buffer._data, avg0,
+              jnp.int32(sim.sched.cursor), key)
+    radio_in = (sim.get_spectral_efficiency(), sim.get_CQI(),
+                sim.get_attachment(), sim.C._data, sim.P._data,
+                sim.boresight._data, sim.fading._data)
+    (U, buf, avg, cursor, _), tput = episode(carry0, radio_in)
+    if sync_state:
+        if mobility_step_m is not None:
+            sim.set_UE_positions(U)
+        sim.buffer.set(buf)
+        sim._pf_avg = avg
+        sim.sched.cursor = int(cursor)
+    return tput

@@ -1,0 +1,127 @@
+"""Per-cell resource-block allocation policies (pure ``jnp``).
+
+A cell owns ``n_rb`` resource blocks per subband per TTI.  A policy maps the
+radio state produced by the CRRM graph (spectral efficiency ``se``, ``cqi``,
+attachment ``a``) plus MAC state (backlog-derived ``active`` mask, PF
+average-rate EWMA, round-robin cursor) to an allocation matrix
+
+    ``alloc[i, k]`` = resource blocks granted to UE ``i`` on subband ``k``.
+
+Invariant (tested): ``sum_i alloc[i, k] [a_i == j] <= n_rb`` for every cell
+``j`` and subband ``k``.
+
+Policies:
+
+* ``rr``       -- round-robin: active attached UEs split the grid evenly,
+  the integer remainder rotates with a per-TTI cursor;
+* ``max_cqi``  -- opportunistic: the active UE with the best CQI takes the
+  cell's whole subband grid (winner-take-all);
+* ``pf``       -- proportional fair: RBs split in proportion to the
+  alpha-fair weight ``rate / avg**alpha`` with ``alpha = (1+p)/(1-p)``
+  derived from ``fairness_p``.  The stationary solution of that control
+  law is the paper's fairness-weighted share ``se**-p`` (the legacy
+  ``ThroughputNode``), which is what the single-shot graph node uses; the
+  episode engine feeds the true EWMA state instead.
+
+All functions are shape-polymorphic pure ``jnp`` and traceable, so they run
+both as smart-update graph nodes and inside ``jax.lax.scan``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+SCHEDULER_POLICIES = ("rr", "max_cqi", "pf")
+
+#: fairness_p -> alpha-fair exponent is singular at p=1 (max-min fairness);
+#: cap keeps the exponent finite while remaining far steeper than any
+#: realistic rate spread needs.
+_ALPHA_MAX = 63.0
+
+
+def _cell_mask(active, a, n_cells):
+    """M[i, j, k] = UE i is active on subband k and attached to cell j."""
+    onehot = (a[:, None] == jnp.arange(n_cells)[None, :])
+    return active[:, None, :] & onehot[:, :, None]
+
+
+def allocate_rr(active, a, n_cells, n_rb, cursor):
+    """Round-robin: even integer split, remainder rotated by ``cursor``."""
+    M = _cell_mask(active, a, n_cells)
+    csum = jnp.cumsum(M, axis=0)                       # rank+1 within cell
+    rank = jnp.take_along_axis(
+        csum, a[:, None, None], axis=1)[:, 0, :] - 1   # (n_ue, K)
+    n_active = jnp.take_along_axis(
+        M.sum(axis=0)[None], a[:, None, None], axis=1)[:, 0, :]
+    n_act = jnp.maximum(n_active, 1)
+    base = n_rb // n_act
+    extra = ((rank - cursor) % n_act) < (n_rb % n_act)
+    return jnp.where(active, (base + extra).astype(jnp.float32), 0.0)
+
+
+def allocate_max_cqi(active, cqi, a, n_cells, n_rb):
+    """Winner-take-all: the best-CQI active UE gets the cell's whole grid."""
+    M = _cell_mask(active, a, n_cells)
+    score = jnp.where(M, cqi[:, None, :], -1)          # (n_ue, n_cells, K)
+    winner = jnp.argmax(score, axis=0)                 # (n_cells, K)
+    mine = jnp.take_along_axis(
+        winner[None], a[:, None, None], axis=1)[:, 0, :]
+    i = jnp.arange(active.shape[0])[:, None]
+    return jnp.where(active & (mine == i), float(n_rb), 0.0)
+
+
+def allocate_pf(active, log_w, a, n_cells, n_rb):
+    """Weight-proportional split of the grid (log-space for stability)."""
+    log_w = jnp.where(active, log_w, -jnp.inf)
+    cell_max = jnp.full((n_cells, log_w.shape[1]), -jnp.inf,
+                        log_w.dtype).at[a].max(log_w)
+    w = jnp.exp(log_w - cell_max[a])                   # in (0, 1], 0 if idle
+    w = jnp.where(active, w, 0.0)
+    denom = jnp.zeros((n_cells, w.shape[1]), w.dtype).at[a].add(w)
+    share = jnp.where(denom[a] > 0.0, w / jnp.maximum(denom[a], 1e-30), 0.0)
+    return n_rb * share
+
+
+def allocate(policy, active, cqi, a, n_cells, n_rb, cursor, log_w):
+    """Dispatch to a policy; single entry point for graph node and engine.
+
+    ``log_w`` carries the PF weights (stationary from the single-shot
+    graph, EWMA-temporal from the episode engine); the other policies
+    ignore it.
+    """
+    if policy == "rr":
+        return allocate_rr(active, a, n_cells, n_rb, cursor)
+    if policy == "max_cqi":
+        return allocate_max_cqi(active, cqi, a, n_cells, n_rb)
+    if policy == "pf":
+        return allocate_pf(active, log_w, a, n_cells, n_rb)
+    raise ValueError(
+        f"unknown scheduler policy {policy!r}; choose from "
+        f"{SCHEDULER_POLICIES}")
+
+
+def pf_log_weights_stationary(se, fairness_p):
+    """log(se**-p): the alpha-fair stationary weights (legacy allocation)."""
+    return -fairness_p * jnp.log(jnp.maximum(se, 1e-12))
+
+
+def pf_log_weights_ewma(rate, avg, fairness_p):
+    """log(rate / avg**alpha): the temporal PF metric over EWMA throughput."""
+    alpha = jnp.minimum((1.0 + fairness_p) / jnp.maximum(1.0 - fairness_p,
+                                                         1e-6), _ALPHA_MAX)
+    return (jnp.log(jnp.maximum(rate, 1e-12))
+            - alpha * jnp.log(jnp.maximum(avg, 1e-3)))
+
+
+def served_bits(alloc, se, backlog, rb_bw_hz, tti_s):
+    """Bits actually drained per (UE, subband) in one TTI.
+
+    Capacity of the grant, capped by the UE's total backlog (a UE cannot
+    transmit bits it does not have); the cap scales every subband of the
+    grant uniformly.
+    """
+    cap = alloc * rb_bw_hz * se * tti_s                # (n_ue, K) bits
+    tot = cap.sum(axis=-1)
+    scale = jnp.where(tot > 0.0,
+                      jnp.minimum(backlog / jnp.maximum(tot, 1e-30), 1.0),
+                      0.0)
+    return cap * scale[:, None]

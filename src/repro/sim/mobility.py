@@ -9,13 +9,13 @@ import jax
 import jax.numpy as jnp
 
 
-def random_moves(key, n_ues: int, n_move: int, extent_m: float,
-                 step_m: float = 50.0):
+def random_moves(key, n_ues: int, n_move: int, extent_m: float):
     """Pick ``n_move`` distinct UEs and new positions for them.
 
     Returns (idx (n_move,), new_xyz (n_move, 3)).  Positions are fresh uniform
-    draws (teleport mobility, as in the paper's stress test); use
-    ``random_walk`` for incremental displacement.
+    draws -- teleport mobility by design (the paper's stress test), so there
+    is no step-size parameter; use ``random_walk`` for incremental,
+    ``step_m``-bounded displacement.
     """
     k1, k2 = jax.random.split(key)
     idx = jax.random.choice(k1, n_ues, (n_move,), replace=False)

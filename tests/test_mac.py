@@ -1,0 +1,182 @@
+"""MAC subsystem: traffic sources, RB scheduling, the scan TTI engine."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.crrm import CRRM
+from repro.core.params import CRRM_parameters
+from repro.mac.traffic import make_traffic
+
+
+def _sim(**kw):
+    base = dict(n_ues=30, n_cells=4, n_subbands=2, seed=7,
+                pathloss_model_name="UMa", power_W=10.0)
+    base.update(kw)
+    return CRRM(CRRM_parameters(**base))
+
+
+def _jain(t):
+    t = np.asarray(t, np.float64)
+    return float(t.sum() ** 2 / (t.size * (t * t).sum()))
+
+
+# --------------------------------------------------------------- conservation
+@pytest.mark.parametrize("policy", ["pf", "rr", "max_cqi"])
+def test_rb_conservation(policy):
+    """allocated RBs per (cell, subband) never exceed the grid size."""
+    sim = _sim(scheduler_policy=policy, fairness_p=0.5 if policy == "pf"
+               else 0.0)
+    alloc = np.asarray(sim.get_schedule())
+    a = np.asarray(sim.get_attachment())
+    assert (alloc >= -1e-6).all()
+    for j in range(sim.n_cells):
+        per_subband = alloc[a == j].sum(axis=0)
+        assert (per_subband <= sim.params.n_rb + 1e-3).all(), (j, per_subband)
+
+
+def test_rb_conservation_with_partial_backlog():
+    """Idle UEs get nothing; the grid still is not oversubscribed."""
+    sim = _sim(traffic_model="poisson", scheduler_policy="rr")
+    backlog = np.zeros(30, np.float32)
+    backlog[::3] = 1e6                       # only a third of UEs have data
+    sim.set_backlog(backlog)
+    alloc = np.asarray(sim.get_schedule())
+    assert (alloc[backlog == 0] == 0).all()
+    a = np.asarray(sim.get_attachment())
+    for j in range(sim.n_cells):
+        assert (alloc[a == j].sum(axis=0) <= sim.params.n_rb + 1e-3).all()
+
+
+# ------------------------------------------------------------------- fairness
+def test_fairness_ordering_pf_rr_maxcqi():
+    """Jain index: pf (p>0) > rr (equal airtime) > max_cqi (winner-take-all)."""
+    ue = np.column_stack([np.linspace(100, 1200, 6), np.zeros(6),
+                          np.full(6, 1.5)]).astype(np.float32)
+    cell = np.array([[0.0, 0.0, 25.0]], np.float32)
+
+    def served(policy, p=0.0):
+        sim = CRRM(CRRM_parameters(
+            n_ues=6, ue_positions=ue, cell_positions=cell,
+            pathloss_model_name="UMa", power_W=10.0,
+            scheduler_policy=policy, fairness_p=p))
+        return np.asarray(sim.get_served_throughputs())
+
+    j_pf = _jain(served("pf", p=0.5))
+    j_rr = _jain(served("rr"))
+    j_max = _jain(served("max_cqi"))
+    assert j_pf > j_rr + 0.01, (j_pf, j_rr)
+    assert j_rr > j_max + 0.05, (j_rr, j_max)
+
+
+# ------------------------------------------------- legacy equivalence (tentpole)
+@pytest.mark.parametrize("p", [0.0, 0.3, 1.0])
+def test_full_buffer_pf_matches_legacy_throughput(p):
+    """ServedThroughputNode == legacy ThroughputNode for full_buffer + pf."""
+    sim = _sim(fairness_p=p, scheduler_policy="pf")
+    legacy = np.asarray(sim.get_UE_throughputs())
+    served = np.asarray(sim.get_served_throughputs())
+    np.testing.assert_allclose(served, legacy, rtol=1e-5, atol=1e-2)
+
+
+# -------------------------------------------------------------- smart update
+def test_buffer_mutation_dirties_only_mac_subgraph():
+    sim = _sim(traffic_model="poisson")
+    sim.set_backlog(np.full(30, 1e6, np.float32))
+    sim.get_served_throughputs()
+    before = sim.update_counts()
+    sim.add_traffic([4], [5e5])
+    sim.get_served_throughputs()
+    after = sim.update_counts()
+    for name in ("D", "G", "RSRP", "a", "w", "u", "gamma", "CQI", "MCS",
+                 "SE"):
+        assert after[name] == before[name], \
+            f"{name} recomputed on a buffer-only mutation"
+    assert after["alloc"][0] == before["alloc"][0] + 1
+    assert after["T_served"][0] == before["T_served"][0] + 1
+
+
+# -------------------------------------------------------------------- traffic
+def test_traffic_models_statistics():
+    key = jax.random.PRNGKey(0)
+    tti = 1e-3
+    init, step = make_traffic("poisson", 2000, tti, arrival_rate_hz=500.0,
+                              packet_size_bits=1000.0)
+    assert float(np.asarray(init()).sum()) == 0.0
+    bits = np.asarray(step(key, 0))
+    mean = bits.mean()
+    assert 300.0 < mean < 700.0          # E[bits/TTI] = 500 * 1e-3 * 1000
+    init, step = make_traffic("ftp3", 500, tti, file_rate_hz=100.0,
+                              file_size_bits=4e6)
+    bits = np.asarray(step(key, 1))
+    assert (np.mod(bits, 4e6) == 0).all()    # whole files only
+    init, step = make_traffic("full_buffer", 10, tti)
+    assert np.isinf(np.asarray(init())).all()
+    assert float(np.asarray(step(key, 2)).sum()) == 0.0
+
+
+def test_backlog_drains_when_arrivals_stop():
+    sim = _sim(traffic_model="poisson", n_subbands=1,
+               traffic_params=dict(arrival_rate_hz=0.0))
+    sim.set_backlog(np.full(30, 2e4, np.float32))
+    tput = sim.run_episode(n_tti=200)
+    covered = np.asarray(sim.get_spectral_efficiency()).sum(axis=1) > 0
+    backlog = np.asarray(sim.get_backlog())
+    assert (backlog[covered] <= 1.0).all()
+    assert (backlog >= 0.0).all()
+    # served integrates to exactly the initial backlog
+    served_bits = np.asarray(tput).sum(axis=0) * sim.params.tti_s
+    np.testing.assert_allclose(served_bits[covered], 2e4, rtol=1e-3)
+
+
+# --------------------------------------------------------------------- engine
+def test_episode_full_buffer_pf_reproduces_legacy_fixed_point():
+    sim = _sim(n_ues=50, n_cells=7)
+    legacy = np.asarray(sim.get_UE_throughputs())
+    tput = np.asarray(sim.run_episode(n_tti=50))
+    assert tput.shape == (50, 50)
+    np.testing.assert_allclose(tput[-1], legacy, rtol=1e-3)
+    np.testing.assert_allclose(tput.mean(axis=0), legacy, rtol=1e-3)
+
+
+def test_episode_is_one_compiled_scan():
+    """No per-TTI Python dispatch: graph node counters must not advance."""
+    sim = _sim(n_ues=40)
+    sim.get_served_throughputs()          # settle the single-shot graph
+    before = sim.update_counts()
+    sim.run_episode(n_tti=100)
+    after = sim.update_counts()
+    assert after == before, "episode leaked per-TTI graph updates"
+
+
+def test_episode_rr_rotation_is_fair():
+    """n_rb=5 over 3 UEs: the remainder must rotate, equalising airtime."""
+    ue = np.array([[300.0, 0.0, 1.5], [0.0, 300.0, 1.5],
+                   [-300.0, 0.0, 1.5]], np.float32)
+    cell = np.array([[0.0, 0.0, 25.0]], np.float32)
+    sim = CRRM(CRRM_parameters(
+        n_ues=3, ue_positions=ue, cell_positions=cell, n_rb=5,
+        pathloss_model_name="UMa", power_W=10.0, scheduler_policy="rr"))
+    tput = np.asarray(sim.run_episode(n_tti=6))
+    se = np.asarray(sim.get_spectral_efficiency())[:, 0]
+    airtime = tput.mean(axis=0) / (se * sim.params.subband_bandwidth_Hz
+                                   / sim.params.n_rb)
+    np.testing.assert_allclose(airtime, airtime.mean(), rtol=1e-5)
+
+
+def test_episode_harq_scales_served_rate():
+    sim = _sim(n_ues=40, harq_bler=0.5, seed=9)
+    ref = _sim(n_ues=40, harq_bler=0.0, seed=9)
+    t_harq = float(np.asarray(sim.run_episode(n_tti=400)).mean())
+    t_ref = float(np.asarray(ref.run_episode(n_tti=400)).mean())
+    assert 0.35 < t_harq / t_ref < 0.65      # ~ (1 - bler)
+
+
+def test_episode_mobility_changes_positions_and_syncs_back():
+    sim = _sim(n_ues=25)
+    U0 = np.asarray(sim.U._data).copy()
+    sim.run_episode(n_tti=10, mobility_step_m=20.0)
+    U1 = np.asarray(sim.U._data)
+    assert not np.allclose(U0[:, :2], U1[:, :2])
+    step_bound = 10 * 20.0 * np.sqrt(2) + 1e-3
+    assert (np.abs(U1[:, :2] - U0[:, :2]) <= step_bound).all()
+    np.testing.assert_allclose(U1[:, 2], U0[:, 2])   # heights preserved

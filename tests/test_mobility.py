@@ -1,0 +1,36 @@
+"""Mobility models: teleport moves and bounded random walks."""
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sim.mobility import random_moves, random_walk
+
+
+def test_random_moves_is_teleport_no_step_param():
+    """Regression: random_moves used to accept (and ignore) a step_m arg."""
+    assert "step_m" not in inspect.signature(random_moves).parameters
+    idx, xyz = random_moves(jax.random.PRNGKey(0), 100, 10, 3000.0)
+    idx, xyz = np.asarray(idx), np.asarray(xyz)
+    assert idx.shape == (10,) and xyz.shape == (10, 3)
+    assert len(set(idx.tolist())) == 10          # distinct UEs
+    assert (xyz[:, :2] >= 0.0).all() and (xyz[:, :2] <= 3000.0).all()
+
+
+def test_random_walk_respects_step_bounds_and_clipping():
+    key = jax.random.PRNGKey(1)
+    pos = jnp.asarray(np.column_stack([
+        np.random.default_rng(0).uniform(0, 1000, (50, 2)),
+        np.full(50, 1.5)]).astype(np.float32))
+    idx = jnp.arange(50)
+    step = 30.0
+    new = np.asarray(random_walk(key, pos, idx, step, 1000.0))
+    d = new[:, :2] - np.asarray(pos)[:, :2]
+    assert (np.abs(d) <= step + 1e-4).all()
+    np.testing.assert_allclose(new[:, 2], 1.5)
+
+    # clipping at the border: start in a corner, huge step
+    corner = jnp.asarray([[0.5, 0.5, 1.5]], dtype=jnp.float32)
+    out = np.asarray(random_walk(key, corner, jnp.arange(1), 5000.0, 1000.0))
+    assert (out[:, :2] >= 0.0).all() and (out[:, :2] <= 1000.0).all()

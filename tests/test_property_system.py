@@ -1,7 +1,10 @@
 """Hypothesis property tests on system-level invariants of the simulator."""
 import jax
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.crrm import CRRM
 from repro.core.params import CRRM_parameters
