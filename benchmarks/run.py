@@ -20,7 +20,11 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="run only benchmarks whose name contains SUBSTR")
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrunken shapes for CI: fast, but regression "
+                         "gates (per-RB episode cost) still assert")
     args = ap.parse_args(argv)
+    paper_benches.SMOKE = args.smoke
     benches = [b for b in paper_benches.ALL if args.only in b.__name__]
     if not benches:
         ap.error(f"no benchmark name contains {args.only!r}; have: "

@@ -46,13 +46,21 @@ def _geometry_rows(U, C, idx, d2d, d3d, az):
 
 @jax.jit
 def _rsrp(G, P):
-    """R[i, j, k] = p_jk * G_ij  (stacked per-subband blocks of Fig. 1)."""
+    """R[i, j, k] = p_jk * G_ijk  (stacked per-frequency blocks of Fig. 1).
+
+    ``G`` is (n_ue, n_cell) for the flat wideband channel or (n_ue, n_cell,
+    n_freq) when fading is frequency selective; the branch is resolved at
+    trace time (jit re-specialises per rank).
+    """
+    if G.ndim == 3:
+        return G * P[None, :, :]
     return G[:, :, None] * P[None, :, :]
 
 
 @partial(jax.jit, donate_argnums=(3,))
 def _rsrp_rows(G, P, idx, R):
-    return R.at[idx].set(G[idx][:, :, None] * P[None, :, :])
+    rows = G[idx] if G.ndim == 3 else G[idx][:, :, None]
+    return R.at[idx].set(rows * P[None, :, :])
 
 
 @jax.jit
@@ -184,7 +192,13 @@ class DistanceNode(Node):
 
 
 class GainNode(Node):
-    """G = pathgain(D) * antenna(az) * fading; 0 <= G < 1 (pre-fading)."""
+    """G = pathgain(D) * antenna(az) * fading; 0 <= G < 1 (pre-fading).
+
+    The fading root is (n_ue, n_cell) for the flat wideband channel or
+    (n_ue, n_cell, n_freq) when frequency selective (``n_rb_subbands > 1``);
+    the gain tensor inherits the fading rank and RSRP broadcasts it against
+    the per-frequency power matrix.
+    """
 
     supports_row_update = True
 
@@ -200,6 +214,8 @@ class GainNode(Node):
             g = pathgain_function(d2d, d3d, h_bs[None, :], h_ut[:, None])
             if n_sectors > 1:
                 g = g * antenna.gain_linear(az, bore)
+            if fad.ndim == g.ndim + 1:       # frequency-selective fading
+                g = g[..., None]
             return g * fad
 
         self._full = jax.jit(
@@ -409,11 +425,19 @@ class BufferNode(RootNode):
         super().__init__("buffer", jnp.asarray(backlog, dtype=jnp.float32))
 
     def add_bits(self, idx, bits) -> None:
-        """Accumulate arrival bits onto selected UEs (row-local flood)."""
+        """Accumulate arrival bits onto selected UEs (row-local flood).
+
+        Duplicate indices accumulate (summed on host first): a last-wins
+        scatter of gather-then-add rows would silently drop offered bits.
+        """
         idx = np.asarray(idx, dtype=np.int32)
-        new = self._data[jnp.asarray(idx)] + jnp.asarray(bits,
-                                                         dtype=jnp.float32)
-        self.set_rows(idx, new)
+        bits = np.broadcast_to(np.asarray(bits, dtype=np.float32),
+                               idx.shape)
+        uniq, inv = np.unique(idx, return_inverse=True)
+        acc = np.zeros(uniq.shape, np.float32)
+        np.add.at(acc, inv, bits)
+        new = self._data[jnp.asarray(uniq)] + jnp.asarray(acc)
+        self.set_rows(uniq, new)
 
 
 def _schedule_fn(policy, n_cells, n_rb, fairness_p):

@@ -57,14 +57,27 @@ class CRRM:
         self.n_cells = int(C0.shape[0])
         self.n_ues = int(U0.shape[0])
 
+        # frequency grid: n_subbands power subbands x n_rb_subbands CQI
+        # subbands each; every per-frequency tensor below has trailing axis
+        # n_freq (== n_subbands in the legacy wideband configuration).
+        self.n_freq = p.n_freq
         if p.power_matrix is not None:
             P0 = jnp.asarray(p.power_matrix, dtype=jnp.float32)
+            if p.n_rb_subbands > 1:     # split each subband's power evenly
+                P0 = jnp.repeat(P0, p.n_rb_subbands,
+                                axis=1) / p.n_rb_subbands
         else:
-            P0 = jnp.full((self.n_cells, p.n_subbands),
-                          p.power_W / p.n_subbands, dtype=jnp.float32)
+            P0 = jnp.full((self.n_cells, self.n_freq),
+                          p.power_W / self.n_freq, dtype=jnp.float32)
 
         bore0 = sector_boresights(self.n_cells // p.n_sectors, p.n_sectors)
-        if p.rayleigh_fading:
+        if p.rayleigh_fading and p.n_rb_subbands > 1:
+            # frequency-selective: per-RB block fading over the whole grid,
+            # reported at CQI-subband resolution (n_ue, n_cell, n_freq)
+            F0 = fading.subband_rayleigh_power(
+                k_fad, self.n_ues, self.n_cells, p.n_subbands * p.n_rb,
+                p.coherence_rb, self.n_freq)
+        elif p.rayleigh_fading:
             F0 = fading.rayleigh_power(k_fad, (self.n_ues, self.n_cells))
         else:
             F0 = jnp.ones((self.n_ues, self.n_cells), dtype=jnp.float32)
@@ -109,14 +122,14 @@ class CRRM:
             self.a = g.add(blocks.AttachmentNode(self.R))
         self.w = g.add(blocks.WantedNode(self.R, self.a))
         self.u = g.add(blocks.InterferenceNode(self.R, self.w))
-        self.gamma = g.add(blocks.SINRNode(self.w, self.u, p.subband_noise_W))
+        self.gamma = g.add(blocks.SINRNode(self.w, self.u, p.chunk_noise_W))
         self.cqi = g.add(blocks.CQINode(self.gamma))
         self.mcs = g.add(blocks.MCSNode(self.cqi))
         self.se = g.add(blocks.SpectralEfficiencyNode(self.mcs, self.cqi))
         self.shannon = g.add(blocks.ShannonNode(
-            self.gamma, p.subband_bandwidth_Hz, p.n_tx, p.n_rx))
+            self.gamma, p.chunk_bandwidth_Hz, p.n_tx, p.n_rx))
         self.throughput = g.add(blocks.ThroughputNode(
-            self.se, self.a, self.n_cells, p.subband_bandwidth_Hz,
+            self.se, self.a, self.n_cells, p.chunk_bandwidth_Hz,
             p.fairness_p))
 
         # -- MAC subsystem: traffic -> buffers -> scheduler -> served -------
@@ -126,8 +139,8 @@ class CRRM:
             p.traffic_model, self.n_ues, p.tti_s, **p.traffic_params)
         self.buffer = g.add(blocks.BufferNode(init_backlog()))
         self.sched = g.add(blocks.ScheduleNode(
-            self.se, self.cqi, self.a, self.buffer, self.n_cells, p.n_rb,
-            p.scheduler_policy, p.fairness_p))
+            self.se, self.cqi, self.a, self.buffer, self.n_cells,
+            p.rb_per_chunk, p.scheduler_policy, p.fairness_p))
         self.served = g.add(blocks.ServedThroughputNode(
             self.sched, self.se, self.buffer,
             p.subband_bandwidth_Hz / p.n_rb, p.tti_s))
@@ -143,14 +156,36 @@ class CRRM:
         self.U.set(jnp.asarray(U, dtype=jnp.float32))
 
     def set_power_matrix(self, P) -> None:
-        self.P.set(jnp.asarray(P, dtype=jnp.float32))
+        """Set per-cell/subband powers; accepts the documented
+        (n_cells, n_subbands) shape (expanded onto the n_freq grid as in
+        the constructor) or an already-expanded (n_cells, n_freq) one."""
+        P = jnp.asarray(P, dtype=jnp.float32)
+        p = self.params
+        if p.n_rb_subbands > 1 and P.shape[1] == p.n_subbands:
+            P = jnp.repeat(P, p.n_rb_subbands, axis=1) / p.n_rb_subbands
+        if P.shape != (self.n_cells, self.n_freq):
+            raise ValueError(
+                f"power matrix must be (n_cells, n_subbands)="
+                f"({self.n_cells}, {p.n_subbands}) or (n_cells, n_freq)="
+                f"({self.n_cells}, {self.n_freq}); got {tuple(P.shape)}")
+        self.P.set(P)
 
     def set_cell_power(self, j: int, k: int, watts: float) -> None:
-        self.P.set(self.P._data.at[j, k].set(watts))
+        """Set cell ``j``'s power on *subband* ``k`` (spread evenly over
+        the subband's CQI chunks when ``n_rb_subbands > 1``)."""
+        s = self.params.n_rb_subbands
+        cols = jnp.arange(k * s, (k + 1) * s)
+        self.P.set(self.P._data.at[j, cols].set(watts / s))
 
     def resample_fading(self, key) -> None:
-        self.fading.set(fading.rayleigh_power(
-            key, (self.n_ues, self.n_cells)))
+        p = self.params
+        if p.n_rb_subbands > 1:
+            self.fading.set(fading.subband_rayleigh_power(
+                key, self.n_ues, self.n_cells, p.n_subbands * p.n_rb,
+                p.coherence_rb, self.n_freq))
+        else:
+            self.fading.set(fading.rayleigh_power(
+                key, (self.n_ues, self.n_cells)))
 
     def add_traffic(self, idx, bits) -> None:
         """Queue arrival bits onto selected UEs (row-local MAC flood)."""
@@ -178,7 +213,8 @@ class CRRM:
         return self.a.update()
 
     def get_SINR(self):
-        """(n_ue, n_subbands) linear SINR."""
+        """(n_ue, n_freq) linear SINR (n_freq == n_subbands unless
+        ``n_rb_subbands > 1`` splits the grid into CQI subbands)."""
         return self.gamma.update()
 
     def get_SINR_dB(self):
@@ -194,7 +230,7 @@ class CRRM:
         return self.se.update()
 
     def get_shannon_capacities(self):
-        """(n_ue, n_subbands) bits/s upper bound."""
+        """(n_ue, n_freq) bits/s upper bound."""
         return self.shannon.update()
 
     def get_UE_throughputs(self):
@@ -206,7 +242,8 @@ class CRRM:
         return self.buffer.update()
 
     def get_schedule(self):
-        """(n_ue, n_subbands) resource blocks granted this TTI."""
+        """(n_ue, n_freq) resource blocks granted this TTI
+        (``rb_per_chunk`` RBs available per frequency chunk)."""
         return self.sched.update()
 
     def get_served_throughputs(self):
@@ -215,17 +252,21 @@ class CRRM:
 
     # ------------------------------------------------------------------ episodes
     def run_episode(self, n_tti: int, key=None, mobility_step_m=None,
-                    per_tti_fading: bool = False, sync_state: bool = True):
+                    per_tti_fading: bool = False, sync_state: bool = True,
+                    use_harq=None):
         """Roll ``n_tti`` TTIs as one ``lax.scan`` program.
 
-        Returns (n_tti, n_ues) served throughput in bits/s; final buffers /
-        PF state / positions are written back into the graph (see
-        repro.mac.engine).
+        Returns (n_tti, n_ues) delivered throughput in bits/s; final
+        buffers / PF state / positions / HARQ processes / serving cells are
+        written back into the graph (see repro.mac.engine).  ``use_harq``
+        overrides the ``harq_bler > 0`` auto-switch for the stop-and-wait
+        HARQ machine (False selects the legacy Bernoulli HARQ-lite).
         """
         from repro.mac import engine as mac_engine
         return mac_engine.run_episode(
             self, n_tti, key=key, mobility_step_m=mobility_step_m,
-            per_tti_fading=per_tti_fading, sync_state=sync_state)
+            per_tti_fading=per_tti_fading, sync_state=sync_state,
+            use_harq=use_harq)
 
     # -------------------------------------------------------------- introspection
     def update_counts(self):

@@ -62,7 +62,31 @@ class CRRM_parameters:
     n_rb: int = 12                         # resource blocks per subband per TTI
     tti_s: float = 1e-3                    # TTI duration (1 ms numerology-0 slot)
     pf_ewma: float = 0.05                  # EWMA step of the PF average-rate state
-    harq_bler: float = 0.0                 # HARQ-lite: P(transport block lost)
+    #: frequency-selective link adaptation: the ``n_rb`` RBs of each subband
+    #: are split into this many CQI-reporting subbands, each scheduled
+    #: independently (must divide ``n_rb``).  1 = wideband CQI (the legacy
+    #: flat-fading chain); ``n_rb`` = fully per-RB link adaptation.
+    n_rb_subbands: int = 1
+    #: coherence bandwidth of the block-fading channel, in RBs: RBs within
+    #: one coherence block share a Rayleigh draw (sim.fading)
+    coherence_rb: int = 4
+    #: P(transport block lost) on the first HARQ attempt.  0 disables HARQ
+    #: entirely (the engine compiles the HARQ-free fast path).
+    harq_bler: float = 0.0
+    #: stop-and-wait HARQ: max retransmissions per transport block before it
+    #: is dropped (0 = no retx, plain Bernoulli thinning)
+    harq_max_retx: int = 3
+    #: soft-combining (Chase) SINR gain per retransmission, in dB.  In the
+    #: Rayleigh outage regime P(fail) ~ theta/SNR, so each retx divides the
+    #: conditional BLER by ``10^(gain/10)`` -- delivery probability is
+    #: monotone in the retx count (tested).
+    harq_comb_gain_db: float = 3.0
+    #: A3-style handover inside the episode engine.  Disabled (False), the
+    #: serving cell is the instantaneous strongest cell, recomputed per TTI
+    #: when the channel is dynamic -- the legacy PR-1 behaviour.
+    ho_enabled: bool = False
+    ho_hysteresis_db: float = 3.0          # A3 entry margin over serving RSRP
+    ho_ttt_tti: int = 4                    # time-to-trigger, in TTIs
 
     # engine -------------------------------------------------------------------------
     smart: bool = True                     # the compute-on-demand switch
@@ -88,6 +112,20 @@ class CRRM_parameters:
             raise ValueError("pf_ewma must be in (0, 1]")
         if not 0.0 <= self.harq_bler < 1.0:
             raise ValueError("harq_bler must be in [0, 1)")
+        if self.n_rb_subbands < 1 or self.n_rb % self.n_rb_subbands:
+            raise ValueError(
+                f"n_rb_subbands must be a positive divisor of n_rb="
+                f"{self.n_rb}; got {self.n_rb_subbands}")
+        if self.coherence_rb < 1:
+            raise ValueError("coherence_rb must be >= 1")
+        if self.harq_max_retx < 0:
+            raise ValueError("harq_max_retx must be >= 0")
+        if self.harq_comb_gain_db < 0.0:
+            raise ValueError("harq_comb_gain_db must be >= 0")
+        if self.ho_hysteresis_db < 0.0:
+            raise ValueError("ho_hysteresis_db must be >= 0")
+        if self.ho_ttt_tti < 1:
+            raise ValueError("ho_ttt_tti must be >= 1")
         if self.power_matrix is not None:
             pm = np.asarray(self.power_matrix)
             if pm.ndim != 2 or pm.shape[1] != self.n_subbands:
@@ -111,3 +149,27 @@ class CRRM_parameters:
     @property
     def subband_noise_W(self) -> float:
         return self.noise_power_W / self.n_subbands
+
+    # -- frequency-selective link-adaptation grid ------------------------------
+    @property
+    def n_freq(self) -> int:
+        """Scheduling-frequency chunks: subbands x CQI subbands per subband.
+
+        This is the trailing axis of every per-frequency tensor in the graph
+        and the engine (SE, CQI, alloc, ...); ``n_rb_subbands=1`` collapses
+        it to the legacy ``n_subbands`` axis.
+        """
+        return self.n_subbands * self.n_rb_subbands
+
+    @property
+    def rb_per_chunk(self) -> int:
+        """Resource blocks owned by one scheduling-frequency chunk."""
+        return self.n_rb // self.n_rb_subbands
+
+    @property
+    def chunk_bandwidth_Hz(self) -> float:
+        return self.bandwidth_Hz / self.n_freq
+
+    @property
+    def chunk_noise_W(self) -> float:
+        return self.noise_power_W / self.n_freq

@@ -31,6 +31,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+#: renamed TPUCompilerParams -> CompilerParams in newer jax; accept both so
+#: the kernel builds against the container's pinned version too
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
 _NEG = -3.4e38  # python float: jnp constants would be captured consts
 
 
@@ -138,7 +143,7 @@ def fused_sinr_accumulate(U, C, Pw, boresight, *, pathgain_fn,
             pl.BlockSpec((bn, k), lambda i, j: (i, 0)),
         ],
         out_shape=out_shape,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(U, C, Pw, boresight)

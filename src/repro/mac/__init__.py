@@ -4,9 +4,13 @@ The paper's CRRM stops at a single-shot fairness-weighted throughput split;
 this package adds the time dimension: offered load (``traffic``), per-cell
 resource-block allocation (``scheduler``) and a ``lax.scan``-compiled
 multi-TTI driver (``engine``) so a whole episode runs as one compiled
-program.  Everything is pure ``jnp`` so it composes with the smart-update
-graph (single-shot nodes in ``core.blocks``) and with ``jax.lax.scan``
-(the episode engine) alike.
+program.  The engine also carries the link-adaptation state machines --
+frequency-selective per-RB CQI (``n_rb_subbands``), stop-and-wait HARQ
+with soft combining (``harq_bler``/``harq_max_retx``) and A3 handover
+with hysteresis + time-to-trigger (``ho_enabled``) -- see DESIGN.md
+§Link-adaptation.  Everything is pure ``jnp`` so it composes with the
+smart-update graph (single-shot nodes in ``core.blocks``) and with
+``jax.lax.scan`` (the episode engine) alike.
 """
 from repro.mac import scheduler, traffic  # noqa: F401
 

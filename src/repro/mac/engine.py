@@ -6,11 +6,28 @@ few UEs, re-query).  Time-stepped MAC simulation is the opposite regime:
 node graph would dominate.  This module re-expresses one TTI as a pure
 function of a small carry
 
-    (positions, backlog_bits, pf_avg_rate, rr_cursor)
+    (positions, backlog_bits, pf_avg_rate, rr_cursor, key,
+     harq_bits, harq_retx, serving_cell, ttt)
 
 and rolls N TTIs with ``jax.lax.scan``: one trace, one XLA program, zero
 per-TTI Python (DESIGN.md §TTI-engine).  A 1000-UE x 1000-TTI episode is a
 single device launch.
+
+Three orthogonal feature axes, each a trace-time (Python) switch so the
+disabled configuration compiles to exactly the legacy program:
+
+* frequency-selective link adaptation (``n_rb_subbands > 1``): the fading
+  factor is a per-RB block-fading tensor pooled to CQI-subband resolution,
+  so SE/CQI/alloc carry a (n_ues, n_freq) frequency axis and the schedulers
+  pick *which* RBs each UE gets.  ``n_rb_subbands=1`` is the wideband path.
+* stop-and-wait HARQ (``harq_bler > 0``): per-UE process state (pending TB
+  bits, retx count) rides in the carry; failed TBs retransmit with a
+  soft-combining SINR gain per attempt until ``harq_max_retx`` is exhausted.
+  ``harq_bler=0`` compiles the HARQ-free fast path (bit-exact legacy).
+* A3 handover (``ho_enabled``): the serving-cell vector ``a`` is carried
+  state, updated when a neighbour beats the serving cell by
+  ``ho_hysteresis_db`` for ``ho_ttt_tti`` consecutive TTIs.  Disabled, the
+  serving cell is the instantaneous argmax (legacy).
 
 Two channel regimes:
 
@@ -35,47 +52,103 @@ import jax.numpy as jnp
 
 from repro.core import blocks
 from repro.mac import scheduler as mac_sched
-from repro.mac.traffic import make_traffic
 from repro.sim import fading as fading_mod
 from repro.sim import mobility
 
 
+def harq_fail_prob(bler, comb_gain_db, retx):
+    """Conditional failure probability of HARQ attempt number ``retx``.
+
+    ``retx`` prior (failed) copies are soft-combined, boosting effective
+    SINR by ``comb_gain_db`` dB each; in the Rayleigh outage regime
+    P(fail) ~ theta/SNR, so the conditional BLER divides by the linear gain
+    per retransmission: ``bler / 10^(retx * gain_db / 10)``.  Monotone
+    non-increasing in ``retx`` (tested in tests/test_mac_engine.py).
+    """
+    gain = 10.0 ** (comb_gain_db / 10.0)
+    return jnp.clip(bler * gain ** (-retx.astype(jnp.float32)), 0.0, 1.0)
+
+
+def a3_handover(a, ttt, rsrp_wb, hyst_db, ttt_tti):
+    """One TTI of the A3 trigger: (serving, time-to-trigger) -> updated.
+
+    Event A3 enters when the best neighbour's wideband RSRP exceeds the
+    serving cell's by ``hyst_db``; the counter must stay entered for
+    ``ttt_tti`` consecutive TTIs before the UE hands over to that
+    neighbour.  Leaving the condition resets the counter (3GPP 38.331
+    semantics, collapsed to one measurement per TTI).
+    """
+    serving = jnp.take_along_axis(rsrp_wb, a[:, None], axis=1)[:, 0]
+    best = jnp.argmax(rsrp_wb, axis=1).astype(a.dtype)
+    best_val = rsrp_wb.max(axis=1)
+    hyst = 10.0 ** (hyst_db / 10.0)
+    entered = (best_val > serving * hyst) & (best != a)
+    ttt = jnp.where(entered, ttt + 1, 0)
+    fire = ttt >= ttt_tti
+    a = jnp.where(fire, best, a)
+    ttt = jnp.where(fire, 0, ttt)
+    return a, ttt
+
+
 def build_episode(sim, n_tti: int, mobility_step_m=None,
-                  per_tti_fading: bool = False):
+                  per_tti_fading: bool = False, use_harq=None):
     """Trace an episode runner for ``sim``'s topology and MAC parameters.
 
     Returns a jitted function
 
         ``fn(carry0, radio_in) -> (carry, tput)``
 
-    with ``carry = (U, backlog, pf_avg, cursor, key)`` and ``radio_in =
-    (se, cqi, a, C, P, bore, fad)``; ``tput`` is the (n_tti, n_ues) per-TTI
-    served throughput in bits/s.  The traced function is cached on the
-    simulator keyed by ``(n_tti, mobility_step_m, per_tti_fading)`` so
-    repeat episodes reuse the compilation.
+    with ``carry = (U, backlog, pf_avg, cursor, key, harq_bits, harq_retx,
+    a_serving, ttt)`` and ``radio_in = (se, cqi, a, C, P, bore, fad)``;
+    ``tput`` is the (n_tti, n_ues) per-TTI *delivered* throughput in
+    bits/s.  ``use_harq`` forces the HARQ state machine on/off regardless
+    of ``harq_bler`` (None = auto: on iff ``harq_bler > 0``); forcing it on
+    at ``harq_bler=0`` is the equivalence-testing hook -- the machine must
+    then reproduce the fast path bit-exactly.  The traced function is
+    cached on the simulator keyed by ``(n_tti, mobility_step_m,
+    per_tti_fading, use_harq)`` so repeat episodes reuse the compilation.
     """
     p = sim.params
-    cache_key = (n_tti, mobility_step_m, per_tti_fading)
+    cache_key = (n_tti, mobility_step_m, per_tti_fading, use_harq)
     cache = sim.__dict__.setdefault("_episode_cache", {})
     if cache_key in cache:
         return cache[cache_key]
 
     n_ues, n_cells = sim.n_ues, sim.n_cells
-    n_rb, tti_s, beta = p.n_rb, p.tti_s, p.pf_ewma
-    rb_bw = p.subband_bandwidth_Hz / p.n_rb
+    tti_s, beta = p.tti_s, p.pf_ewma
+    n_freq, rb_chunk = p.n_freq, p.rb_per_chunk
+    rb_bw = p.subband_bandwidth_Hz / p.n_rb     # physical RB bandwidth
     policy, bler = p.scheduler_policy, p.harq_bler
-    noise_w = p.subband_noise_W
+    harq_on = bler > 0.0 if use_harq is None else bool(use_harq)
+    max_retx, comb_db = p.harq_max_retx, p.harq_comb_gain_db
+    ho_on = p.ho_enabled
+    hyst_db, ttt_tti = p.ho_hysteresis_db, p.ho_ttt_tti
+    per_rb = p.n_rb_subbands > 1
+    noise_w = p.chunk_noise_W
     gain_full = sim.G._full          # jitted closure over pathloss + antenna
     attach_on_mean = hasattr(sim, "R_mean")
-    _, traffic_step = make_traffic(p.traffic_model, n_ues, tti_s,
-                                   **p.traffic_params)
+    traffic_step = sim._traffic_step   # the closure CRRM already built
 
     def unfaded_gain(U, C, bore):
         d2d, d3d, az = blocks._geometry(U, C)
         return gain_full(U, C, d2d, d3d, az, bore,
                          jnp.ones((n_ues, n_cells), jnp.float32))
 
+    def draw_fading(key):
+        """Fresh per-TTI fading at the engine's frequency resolution."""
+        if per_rb:
+            return fading_mod.subband_rayleigh_power(
+                key, n_ues, n_cells, p.n_subbands * p.n_rb, p.coherence_rb,
+                n_freq)
+        return fading_mod.rayleigh_power(key, (n_ues, n_cells))
+
+    def faded_rsrp(G0, P, fad):
+        """RSRP from unfaded gain: broadcasts wideband or per-RB fading."""
+        G = G0[..., None] * fad if fad.ndim == 3 else G0 * fad
+        return blocks._rsrp(G, P)
+
     def sinr_chain(R, a):
+        """(se, cqi, a) for serving assignment ``a``."""
         w = blocks._wanted(R, a)
         u = blocks._interference(R, w)
         gamma = w / (noise_w + u)
@@ -83,60 +156,134 @@ def build_episode(sim, n_tti: int, mobility_step_m=None,
         se = blocks._se(blocks._mcs(cqi), cqi)
         return se, cqi, a
 
-    def radio(U, C, P, bore, fad):
-        """Pure (se, cqi, a), mirroring the graph's D..SE chain."""
-        G0 = unfaded_gain(U, C, bore)           # pathgain * antenna
-        R = blocks._rsrp(G0 * fad, P)
-        a = (blocks._attach(blocks._rsrp(G0, P)) if attach_on_mean
-             else blocks._attach(R))
-        return sinr_chain(R, a)
-
-    def allocate(se, cqi, a, buf, avg, cursor):
-        active = (buf[:, None] > 0.0) & (se > 0.0)
+    def allocate(se, cqi, a, buf, avg, cursor, harq_pending):
+        demand = (buf[:, None] > 0.0) | harq_pending[:, None]
+        active = demand & (se > 0.0)
         log_w = mac_sched.pf_log_weights_ewma(rb_bw * se, avg[:, None],
                                               p.fairness_p)
-        return mac_sched.allocate(policy, active, cqi, a, n_cells, n_rb,
+        return mac_sched.allocate(policy, active, cqi, a, n_cells, rb_chunk,
                                   cursor, log_w)
+
+    def harq_step(k_harq, tb_new, hbits, hretx, granted):
+        """One TTI of every UE's stop-and-wait process.
+
+        Pending UEs retransmit their stored TB (no new buffer drain) --
+        but only when the scheduler actually granted them RBs this TTI
+        (``granted``); an ungranted pending TB waits, state unchanged.
+        Fresh TBs enter the machine on failure and drop after
+        ``max_retx`` retransmissions.  The retx TB is delivered at its
+        stored size (real HARQ retransmits the same TB; the grant-size
+        mismatch is absorbed by the soft-combining abstraction).
+        """
+        pending = hbits > 0.0
+        tb = jnp.where(pending, hbits, tb_new)
+        attempting = granted & (tb > 0.0)
+        attempt = jnp.where(pending, hretx, 0)
+        p_fail = harq_fail_prob(bler, comb_db, attempt)
+        u = jax.random.uniform(k_harq, (n_ues,))
+        ok = (u >= p_fail) & attempting
+        fail = ~ok & attempting
+        n_fail = attempt + 1
+        keep = (fail & (n_fail <= max_retx)) | (pending & ~granted)
+        delivered = jnp.where(ok, tb, 0.0)
+        hbits = jnp.where(keep, tb, 0.0)
+        hretx = jnp.where(keep, jnp.where(fail, n_fail, hretx), 0)
+        return delivered, pending, hbits, hretx
 
     @jax.jit
     def episode(carry0, radio_in):
         se0, cqi0, a0, C, P, bore, fad0 = radio_in
-        if per_tti_fading and mobility_step_m is None:
+        static_geom = mobility_step_m is None
+        if static_geom and (per_tti_fading or ho_on):
             # static geometry: one unfaded gain/attachment pass, hoisted
             # out of the scan; only the fading factor varies per TTI.
             G_static = unfaded_gain(carry0[0], C, bore)
-            a_static = (blocks._attach(blocks._rsrp(G_static, P))
+            R_mean_static = blocks._rsrp(G_static, P)
+            a_static = (blocks._attach(R_mean_static)
                         if attach_on_mean else None)
+            R_static_faded = faded_rsrp(G_static, P, fad0)
+            # A3 measures long-term RSRP iff association does (same
+            # convention as the dynamic paths' R_meas)
+            meas_wb_static = (R_mean_static if attach_on_mean
+                              else R_static_faded).sum(axis=-1)
+            if ho_on:
+                # static channel + evolving serving cell: tabulate the SINR
+                # chain for EVERY candidate cell once, outside the scan --
+                # per TTI the chain is then two gathers on (n_ue, n_freq)
+                # instead of an (n_ue, n_cell, n_freq) reduction.
+                total_static = R_static_faded.sum(axis=1)
+                gamma_all = R_static_faded / (
+                    noise_w + (total_static[:, None, :] - R_static_faded))
+                cqi_all = blocks._cqi(gamma_all)
+                se_all = blocks._se(blocks._mcs(cqi_all), cqi_all)
 
         def step(carry, t):
-            U, buf, avg, cursor, key = carry
+            U, buf, avg, cursor, key, hbits, hretx, a_srv, ttt = carry
             k_mob, k_fad, k_tr, k_harq = (jax.random.fold_in(key, 4 * t + i)
                                           for i in range(4))
+            # -- channel: (R, R_meas) per TTI, or the hoisted constants ----
             if mobility_step_m is not None:
                 idx = jnp.arange(n_ues)
                 U = U.at[idx].set(mobility.random_walk(
                     k_mob, U, idx, mobility_step_m, p.extent_m))
-                fad = (fading_mod.rayleigh_power(k_fad, (n_ues, n_cells))
-                       if per_tti_fading else fad0)
-                se, cqi, a = radio(U, C, P, bore, fad)
+                G0 = unfaded_gain(U, C, bore)
+                fad = draw_fading(k_fad) if per_tti_fading else fad0
+                R = faded_rsrp(G0, P, fad)
+                R_meas = blocks._rsrp(G0, P) if attach_on_mean else R
+                a_inst = blocks._attach(R_meas)
             elif per_tti_fading:
-                fad = fading_mod.rayleigh_power(k_fad, (n_ues, n_cells))
-                R = blocks._rsrp(G_static * fad, P)
-                a = a_static if attach_on_mean else blocks._attach(R)
-                se, cqi, a = sinr_chain(R, a)
+                fad = draw_fading(k_fad)
+                R = faded_rsrp(G_static, P, fad)
+                R_meas = R_mean_static if attach_on_mean else R
+                a_inst = a_static if attach_on_mean else blocks._attach(R)
             else:
-                se, cqi, a = se0, cqi0, a0
+                R = R_meas = a_inst = None   # fully static radio chain
+
+            # -- serving cell: A3 carried state, or instantaneous argmax --
+            if ho_on:
+                meas_wb = (R_meas.sum(axis=-1) if R_meas is not None
+                           else meas_wb_static)
+                a_srv, ttt = a3_handover(a_srv, ttt, meas_wb,
+                                         hyst_db, ttt_tti)
+                a_use = a_srv
+                if R is not None:
+                    se, cqi, _ = sinr_chain(R, a_use)
+                else:
+                    # static channel, evolving attachment: gather from the
+                    # hoisted all-cells SINR-chain tables
+                    sel = a_use[:, None, None]
+                    se = jnp.take_along_axis(se_all, sel, axis=1)[:, 0]
+                    cqi = jnp.take_along_axis(cqi_all, sel, axis=1)[:, 0]
+            elif R is not None:
+                se, cqi, a_use = sinr_chain(R, a_inst)
+            else:
+                se, cqi, a_use = se0, cqi0, a0
+
+            # -- MAC: traffic -> grant -> HARQ -> drain --------------------
             buf = buf + traffic_step(k_tr, t)
-            alloc = allocate(se, cqi, a, buf, avg, cursor)
-            bits = mac_sched.served_bits(alloc, se, buf, rb_bw, tti_s).sum(1)
-            if bler > 0.0:   # HARQ-lite: lost blocks stay queued -> retx
-                bits = bits * jax.random.bernoulli(
-                    k_harq, 1.0 - bler, (n_ues,)).astype(bits.dtype)
+            harq_pending = (hbits > 0.0) if harq_on else \
+                jnp.zeros((n_ues,), bool)
+            alloc = allocate(se, cqi, a_use, buf, avg, cursor, harq_pending)
+            drainable = jnp.where(harq_pending, 0.0, buf)
+            tb_new = mac_sched.served_bits(alloc, se, drainable, rb_bw,
+                                           tti_s).sum(1)
+            if harq_on:
+                bits, _, hbits, hretx = harq_step(
+                    k_harq, tb_new, hbits, hretx, alloc.sum(axis=1) > 0.0)
+            elif bler > 0.0:   # HARQ-lite: lost blocks stay queued -> retx
+                bits = tb_new * jax.random.bernoulli(
+                    k_harq, 1.0 - bler, (n_ues,)).astype(tb_new.dtype)
+            else:
+                bits = tb_new
             # clamp: served_bits <= backlog only up to float rounding
-            buf = jnp.maximum(buf - bits, 0.0)
+            if harq_on:
+                buf = jnp.maximum(buf - tb_new, 0.0)  # drain on first tx
+            else:
+                buf = jnp.maximum(buf - bits, 0.0)
             tput = bits / tti_s
             avg = (1.0 - beta) * avg + beta * tput
-            return (U, buf, avg, cursor + n_rb, key), tput
+            return (U, buf, avg, cursor + rb_chunk, key, hbits, hretx,
+                    a_srv, ttt), tput
 
         return jax.lax.scan(step, carry0, jnp.arange(n_tti))
 
@@ -145,31 +292,57 @@ def build_episode(sim, n_tti: int, mobility_step_m=None,
 
 
 def run_episode(sim, n_tti: int, key=None, mobility_step_m=None,
-                per_tti_fading: bool = False, sync_state: bool = True):
-    """Run ``n_tti`` TTIs; returns (n_tti, n_ues) served throughput (bits/s).
+                per_tti_fading: bool = False, sync_state: bool = True,
+                use_harq=None):
+    """Run ``n_tti`` TTIs; returns (n_tti, n_ues) delivered throughput
+    (bits/s).
 
     The PF average-rate state is seeded from the single-shot graph's served
     throughput (the stationary alpha-fair point), so a full-buffer PF
     episode starts -- and, with a static channel, stays -- at the legacy
-    ``ThroughputNode`` fixed point.
+    ``ThroughputNode`` fixed point.  HARQ process state and the A3 serving
+    cell / time-to-trigger counters persist across episodes on the
+    simulator (``sim._harq_bits``/``_harq_retx``/``_ho_serving``/
+    ``_ho_ttt``) when ``sync_state`` is set.
     """
     if key is None:
         key = jax.random.fold_in(jax.random.PRNGKey(sim.params.seed),
                                  0x6d6163)   # "mac"
-    episode = build_episode(sim, n_tti, mobility_step_m, per_tti_fading)
+    episode = build_episode(sim, n_tti, mobility_step_m, per_tti_fading,
+                            use_harq)
     avg0 = getattr(sim, "_pf_avg", None)
     if avg0 is None:
         avg0 = sim.get_served_throughputs()
+    n = sim.n_ues
+    hbits0 = getattr(sim, "_harq_bits", None)
+    if hbits0 is None:
+        hbits0 = jnp.zeros((n,), jnp.float32)
+    hretx0 = getattr(sim, "_harq_retx", None)
+    if hretx0 is None:
+        hretx0 = jnp.zeros((n,), jnp.int32)
+    a0 = getattr(sim, "_ho_serving", None)
+    if a0 is None:
+        a0 = sim.get_attachment()
+    ttt0 = getattr(sim, "_ho_ttt", None)
+    if ttt0 is None:
+        ttt0 = jnp.zeros((n,), jnp.int32)
     carry0 = (sim.U._data, sim.buffer._data, avg0,
-              jnp.int32(sim.sched.cursor), key)
+              jnp.int32(sim.sched.cursor), key,
+              jnp.asarray(hbits0, jnp.float32),
+              jnp.asarray(hretx0, jnp.int32),
+              jnp.asarray(a0, jnp.int32), jnp.asarray(ttt0, jnp.int32))
     radio_in = (sim.get_spectral_efficiency(), sim.get_CQI(),
                 sim.get_attachment(), sim.C._data, sim.P._data,
                 sim.boresight._data, sim.fading._data)
-    (U, buf, avg, cursor, _), tput = episode(carry0, radio_in)
+    (U, buf, avg, cursor, _, hbits, hretx, a_srv, ttt), tput = episode(
+        carry0, radio_in)
     if sync_state:
         if mobility_step_m is not None:
             sim.set_UE_positions(U)
         sim.buffer.set(buf)
         sim._pf_avg = avg
         sim.sched.cursor = int(cursor)
+        sim._harq_bits, sim._harq_retx = hbits, hretx
+        if sim.params.ho_enabled:
+            sim._ho_serving, sim._ho_ttt = a_srv, ttt
     return tput

@@ -1,14 +1,21 @@
 """Per-cell resource-block allocation policies (pure ``jnp``).
 
-A cell owns ``n_rb`` resource blocks per subband per TTI.  A policy maps the
-radio state produced by the CRRM graph (spectral efficiency ``se``, ``cqi``,
-attachment ``a``) plus MAC state (backlog-derived ``active`` mask, PF
-average-rate EWMA, round-robin cursor) to an allocation matrix
+A cell owns ``n_rb`` resource blocks per frequency chunk per TTI.  A policy
+maps the radio state produced by the CRRM graph (spectral efficiency ``se``,
+``cqi``, attachment ``a``) plus MAC state (backlog-derived ``active`` mask,
+PF average-rate EWMA, round-robin cursor) to an allocation matrix
 
-    ``alloc[i, k]`` = resource blocks granted to UE ``i`` on subband ``k``.
+    ``alloc[i, k]`` = resource blocks granted to UE ``i`` on chunk ``k``.
 
-Invariant (tested): ``sum_i alloc[i, k] [a_i == j] <= n_rb`` for every cell
-``j`` and subband ``k``.
+The frequency axis ``k`` is whatever the caller resolves the grid at: the
+legacy power subbands (wideband CQI, ``n_rb`` RBs per chunk) or the
+frequency-selective CQI subbands of ``n_rb_subbands > 1`` (``rb_per_chunk``
+RBs per chunk, so max-CQI and PF pick *which* RBs a UE gets, not just how
+many).  All policies are shape-polymorphic in ``k``.
+
+Invariant (property-tested in tests/test_mac_properties.py):
+``sum_i alloc[i, k] [a_i == j] == n_rb`` for every cell ``j`` with at least
+one active attached UE on chunk ``k``, and 0 for every other cell.
 
 Policies:
 

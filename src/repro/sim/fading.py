@@ -2,6 +2,18 @@
 
 Rayleigh fading on the *power* gain: |h|^2 ~ Exp(1), mean 1, which is what the
 PPP analytic SIR distribution (Haenggi) assumes.
+
+Two frequency regimes:
+
+* wideband -- one draw per (UE, cell) link (:func:`rayleigh_power`), the
+  flat-fading assumption of the original CRRM chain;
+* frequency-selective -- one draw per *coherence block* of consecutive
+  resource blocks (:func:`block_rayleigh_power`), the block-fading
+  approximation of a tapped-delay-line channel: RBs closer than the
+  coherence bandwidth see the same fade, RBs further apart fade
+  independently.  :func:`pool_rb_subbands` reduces the per-RB tensor to the
+  link-adaptation resolution (mean power per reported subband), which is
+  what per-RB CQI feedback quantises in a real gNB.
 """
 from __future__ import annotations
 
@@ -17,3 +29,47 @@ def rayleigh_power(key, shape, dtype=jnp.float32):
 def apply_rayleigh(key, gain):
     """Multiply a linear power-gain array by fresh Rayleigh fading."""
     return gain * rayleigh_power(key, gain.shape, gain.dtype)
+
+
+def block_rayleigh_power(key, n_ues, n_cells, n_rb, coherence_rb,
+                         dtype=jnp.float32):
+    """Frequency-selective block fading: (n_ues, n_cells, n_rb) Exp(1) power.
+
+    The ``n_rb`` resource blocks are partitioned into coherence blocks of
+    ``coherence_rb`` consecutive RBs; every RB inside one block shares a
+    single Rayleigh draw, blocks are independent.  ``coherence_rb=1`` is
+    fully selective (IID per RB); ``coherence_rb >= n_rb`` degenerates to
+    wideband flat fading.  All sizes are static, so the function traces
+    inside ``jax.lax.scan``.
+    """
+    n_blocks = -(-n_rb // coherence_rb)          # ceil division
+    draw = jax.random.exponential(key, (n_ues, n_cells, n_blocks),
+                                  dtype=dtype)
+    return jnp.repeat(draw, coherence_rb, axis=2)[:, :, :n_rb]
+
+
+def pool_rb_subbands(fad_rb, n_rb_subbands):
+    """Pool a per-RB tensor (..., n_rb) to (..., n_rb_subbands).
+
+    Mean *power* over each reported subband's RBs -- the effective-channel
+    abstraction behind subband CQI feedback.  ``n_rb_subbands`` must divide
+    the trailing RB axis.
+    """
+    n_rb = fad_rb.shape[-1]
+    if n_rb % n_rb_subbands:
+        raise ValueError(
+            f"n_rb_subbands={n_rb_subbands} must divide n_rb={n_rb}")
+    shape = fad_rb.shape[:-1] + (n_rb_subbands, n_rb // n_rb_subbands)
+    return fad_rb.reshape(shape).mean(axis=-1)
+
+
+def subband_rayleigh_power(key, n_ues, n_cells, n_rb, coherence_rb,
+                           n_rb_subbands, dtype=jnp.float32):
+    """Block fading drawn per RB, reported at link-adaptation resolution.
+
+    Returns (n_ues, n_cells, n_rb_subbands): the per-RB coherence-block
+    tensor of :func:`block_rayleigh_power` pooled to the CQI subband grid.
+    """
+    fad = block_rayleigh_power(key, n_ues, n_cells, n_rb, coherence_rb,
+                               dtype)
+    return pool_rb_subbands(fad, n_rb_subbands)

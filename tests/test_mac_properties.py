@@ -1,0 +1,152 @@
+"""Property tests for the RB-scheduler invariants (hypothesis + fixed sweep).
+
+The invariants (ISSUE 2 / DESIGN.md §scheduler):
+
+* per-(cell, chunk) RB allocations sum to exactly ``n_rb`` for every cell
+  with at least one active attached UE on that chunk, and to 0 otherwise;
+* inactive / empty-buffer UEs never receive RBs;
+* PF with equal rates and equal average throughput degenerates to the
+  round-robin equal split.
+
+Each invariant is checked by one shared verifier driven two ways: a
+hypothesis ``@given`` sweep (runs where hypothesis is installed, e.g. CI)
+and a deterministic seed sweep that exercises the same verifier in minimal
+environments.  The verifier calls ``mac_sched.allocate`` directly, so the
+shapes (n_ues, n_cells, n_rb, n_chunks) are unconstrained by any simulator
+topology -- exactly the shape-polymorphism the engine relies on when it
+re-resolves the grid at CQI-subband granularity.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.mac import scheduler as mac_sched
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:           # container without hypothesis: seed sweep only
+    HAVE_HYPOTHESIS = False
+
+POLICIES = list(mac_sched.SCHEDULER_POLICIES)
+
+
+def _random_state(seed, n_ues, n_cells, n_chunks):
+    """Random attachment / activity / CQI / PF-weight state."""
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.integers(0, n_cells, n_ues), jnp.int32)
+    active = jnp.asarray(rng.random((n_ues, n_chunks)) < 0.7)
+    cqi = jnp.asarray(rng.integers(0, 16, (n_ues, n_chunks)), jnp.int32)
+    log_w = jnp.asarray(rng.normal(0.0, 2.0, (n_ues, n_chunks)), jnp.float32)
+    cursor = jnp.int32(rng.integers(0, 1000))
+    return a, active, cqi, log_w, cursor
+
+
+def check_scheduler_invariants(policy, seed, n_ues, n_cells, n_rb, n_chunks):
+    a, active, cqi, log_w, cursor = _random_state(seed, n_ues, n_cells,
+                                                  n_chunks)
+    alloc = np.asarray(mac_sched.allocate(policy, active, cqi, a, n_cells,
+                                          n_rb, cursor, log_w))
+    active_np, a_np = np.asarray(active), np.asarray(a)
+
+    # non-negativity and the inactive-UEs-get-nothing invariant
+    assert (alloc >= -1e-6).all()
+    assert (alloc[~active_np] == 0).all(), \
+        f"{policy}: inactive UEs received RBs"
+
+    # conservation: each (cell, chunk) grid fully used iff someone is active
+    for j in range(n_cells):
+        mine = a_np == j
+        got = alloc[mine].sum(axis=0) if mine.any() else np.zeros(n_chunks)
+        has_active = active_np[mine].any(axis=0) if mine.any() \
+            else np.zeros(n_chunks, bool)
+        np.testing.assert_allclose(
+            got[has_active], float(n_rb), rtol=1e-5,
+            err_msg=f"{policy}: cell {j} grid not fully allocated")
+        assert (got[~has_active] == 0).all(), \
+            f"{policy}: cell {j} granted RBs with no active UE"
+
+
+def check_pf_equal_rates_is_round_robin(seed, n_ues, n_cells, n_rb,
+                                        n_chunks):
+    """Equal rate + equal average -> PF collapses to the equal split."""
+    a, active, cqi, _, cursor = _random_state(seed, n_ues, n_cells, n_chunks)
+    log_w = jnp.zeros((n_ues, n_chunks), jnp.float32)   # identical weights
+    alloc = np.asarray(mac_sched.allocate("pf", active, cqi, a, n_cells,
+                                          n_rb, cursor, log_w))
+    active_np, a_np = np.asarray(active), np.asarray(a)
+    rr = np.asarray(mac_sched.allocate("rr", active, cqi, a, n_cells, n_rb,
+                                       cursor, log_w))
+    for j in range(n_cells):
+        mine = a_np == j
+        for k in range(n_chunks):
+            users = mine & active_np[:, k]
+            n_act = int(users.sum())
+            if not n_act:
+                continue
+            np.testing.assert_allclose(
+                alloc[users, k], n_rb / n_act, rtol=1e-5,
+                err_msg="pf with equal weights is not the equal split")
+            if n_rb % n_act == 0:   # rr has no rotating remainder: exact
+                np.testing.assert_allclose(alloc[users, k], rr[users, k],
+                                           rtol=1e-5)
+
+
+# ------------------------------------------------- deterministic seed sweep
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("seed,n_ues,n_cells,n_rb,n_chunks", [
+    (0, 1, 1, 1, 1),           # degenerate minimum
+    (1, 17, 3, 12, 4),         # chunked grid
+    (2, 40, 8, 5, 1),          # wideband, indivisible n_rb
+    (3, 64, 2, 52, 13),        # wide grid, many chunks
+    (4, 9, 11, 7, 2),          # more cells than UEs: some cells empty
+])
+def test_scheduler_invariants_sweep(policy, seed, n_ues, n_cells, n_rb,
+                                    n_chunks):
+    check_scheduler_invariants(policy, seed, n_ues, n_cells, n_rb, n_chunks)
+
+
+@pytest.mark.parametrize("seed,n_ues,n_cells,n_rb,n_chunks", [
+    (0, 12, 3, 12, 1), (1, 30, 5, 8, 4), (2, 6, 2, 13, 1),
+])
+def test_pf_equal_rates_degenerates_to_rr_sweep(seed, n_ues, n_cells, n_rb,
+                                                n_chunks):
+    check_pf_equal_rates_is_round_robin(seed, n_ues, n_cells, n_rb, n_chunks)
+
+
+def test_empty_buffer_ues_never_scheduled_through_graph():
+    """End-to-end flavour of the invariant: zero-backlog UEs get no grant."""
+    from repro.core.crrm import CRRM
+    from repro.core.params import CRRM_parameters
+    for policy in POLICIES:
+        sim = CRRM(CRRM_parameters(
+            n_ues=24, n_cells=3, seed=11, traffic_model="poisson",
+            scheduler_policy=policy, pathloss_model_name="UMa",
+            power_W=10.0))
+        backlog = np.zeros(24, np.float32)
+        backlog[5:12] = 1e6
+        sim.set_backlog(backlog)
+        alloc = np.asarray(sim.get_schedule())
+        assert (alloc[backlog == 0] == 0).all(), policy
+
+
+# ----------------------------------------------------- hypothesis sweeps
+if HAVE_HYPOTHESIS:
+    SHAPES = dict(seed=st.integers(0, 2 ** 16), n_ues=st.integers(1, 64),
+                  n_cells=st.integers(1, 12), n_rb=st.integers(1, 64),
+                  n_chunks=st.integers(1, 16))
+
+    @settings(max_examples=25, deadline=None)
+    @given(policy=st.sampled_from(POLICIES), **SHAPES)
+    def test_scheduler_invariants_hypothesis(policy, seed, n_ues, n_cells,
+                                             n_rb, n_chunks):
+        check_scheduler_invariants(policy, seed, n_ues, n_cells, n_rb,
+                                   n_chunks)
+
+    @settings(max_examples=15, deadline=None)
+    @given(**SHAPES)
+    def test_pf_equal_rates_degenerates_to_rr_hypothesis(
+            seed, n_ues, n_cells, n_rb, n_chunks):
+        check_pf_equal_rates_is_round_robin(seed, n_ues, n_cells, n_rb,
+                                            n_chunks)

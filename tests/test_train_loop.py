@@ -6,6 +6,8 @@ import jax
 import numpy as np
 import pytest
 
+from test_archs_smoke import needs_optbar_grad
+
 from repro.configs import get_config
 from repro.models.registry import make_arch
 from repro.parallel.mesh import make_host_mesh
@@ -24,6 +26,7 @@ def _setup():
     return arch, opt, mesh, data
 
 
+@needs_optbar_grad
 @pytest.mark.slow
 def test_loss_decreases_and_resume_is_exact(tmp_path):
     arch, opt, mesh, data = _setup()
