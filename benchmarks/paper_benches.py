@@ -275,6 +275,124 @@ def mac_episode(n_ues=1000, n_cells=57, n_tti=100):
     return "mac_episode_scan_speedup", us_scan, us_loop / us_scan
 
 
+# -- env: batched CrrmEnv episodes vs sequential run_episode ---------------------
+#: acceptance gate (ISSUE 3): a vmapped batch of >= 8 CrrmEnv episodes must
+#: cost <= this factor per episode-TTI vs a single run_episode TTI.  The
+#: batch runs the same per-episode math with the Python/dispatch overhead
+#: amortised, so a healthy vmap is ~1x; >1.5x means the batch re-traced or
+#: fell off the one-program path.
+ENV_BATCH_MAX_SLOWDOWN = 1.5
+ENV_BATCH = 8
+
+
+def env_episode(n_ues=500, n_cells=19, n_tti=200):
+    """us/TTI for the gym-style env: a vmapped batch of ENV_BATCH parallel
+    episodes (one compiled program) vs the same episode run sequentially
+    through ``run_episode``; plus a sweep of the named scenario presets.
+    Seeds/updates ``benchmarks/BENCH_env.json``."""
+    import json
+    import os
+
+    from repro.env import CrrmEnv
+    from repro.sim.scenarios import make_scenario, scenario_names
+
+    if SMOKE:
+        n_ues, n_cells, n_tti = 100, 7, 50
+    batch = ENV_BATCH
+    common = dict(n_ues=n_ues, n_cells=n_cells, n_sectors=1, seed=3,
+                  pathloss_model_name="UMa", power_W=10.0,
+                  traffic_model="poisson", scheduler_policy="pf",
+                  traffic_params=dict(arrival_rate_hz=300.0,
+                                      packet_size_bits=12_000.0))
+    key = jax.random.PRNGKey(0)
+    reps = 3
+
+    # sequential baseline: one sim, run_episode per episode
+    sim = CRRM(CRRM_parameters(**common))
+    us_single = _episode_us_per_tti(sim, n_tti, key, reps=reps)
+
+    # batched: ENV_BATCH seeds, one vmapped program, no power action (the
+    # same static-channel regime as the baseline, so the ratio isolates
+    # the batching overhead)
+    env = CrrmEnv(CRRM_parameters(**common), episode_tti=n_tti,
+                  tti_per_step=n_tti)
+    keys = jax.random.split(key, batch)
+
+    def roll_batch():
+        states, _ = env.reset_batch(keys)
+        states, obs, rew, done = env.step_batch(states)
+        return obs.tput
+
+    roll_batch().block_until_ready()                 # compile + warm
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        roll_batch().block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    us_batched = best / (n_tti * batch) * 1e6
+    ratio = us_batched / us_single
+    print(f"# env_episode: single {us_single:.1f} us/TTI, batched x{batch} "
+          f"{us_batched:.1f} us/TTI/episode ({ratio:.2f}x; gate "
+          f"{ENV_BATCH_MAX_SLOWDOWN}x)")
+    assert ratio < ENV_BATCH_MAX_SLOWDOWN, (
+        f"batched env episode {ratio:.2f}x slower per TTI than a single "
+        f"run_episode (gate {ENV_BATCH_MAX_SLOWDOWN}x)")
+
+    # with a power action the radio chain recomputes per TTI -- report the
+    # cost (ungated: it is a different, heavier program by design)
+    acts = jnp.stack([env.uniform_action()] * batch)
+
+    def roll_batch_action():
+        states, _ = env.reset_batch(keys)
+        states, obs, _, _ = env.step_batch(states, acts)
+        return obs.tput
+
+    roll_batch_action().block_until_ready()
+    t0 = time.perf_counter()
+    roll_batch_action().block_until_ready()
+    us_batched_act = (time.perf_counter() - t0) / (n_tti * batch) * 1e6
+    print(f"# env_episode: batched with power action "
+          f"{us_batched_act:.1f} us/TTI/episode")
+
+    # scenario sweep: every named preset steps as an env (shrunk shapes)
+    shrink = dict(n_ues=min(n_ues, 60), n_cells=7, n_sectors=1)
+    sweep = {}
+    for name in scenario_names():
+        p = make_scenario(name, **shrink)
+        senv = CrrmEnv(p, episode_tti=20, tti_per_step=20)
+        states, _ = senv.reset_batch(jax.random.split(key, batch))
+        _, obs, rew, _ = senv.step_batch(states)
+        sweep[name] = {
+            "mean_tput_mbps": round(float(np.asarray(obs.tput).mean())
+                                    / 1e6, 3),
+            "mean_reward": round(float(np.asarray(rew).mean()), 3)}
+        print(f"# env_episode: scenario {name}: "
+              f"{sweep[name]['mean_tput_mbps']} Mbit/s/UE, "
+              f"reward {sweep[name]['mean_reward']}")
+
+    if SMOKE:
+        # smoke shapes are CI-gate material, not benchmark data: never
+        # clobber the committed full-scale BENCH_env.json record
+        return "env_episode_batched_cost", us_batched, ratio
+
+    record = {"bench": "env_episode", "smoke": SMOKE, "n_ues": n_ues,
+              "n_cells": n_cells, "n_tti": n_tti, "batch": batch,
+              "us_per_tti_single": round(us_single, 2),
+              "us_per_tti_per_episode_batched": round(us_batched, 2),
+              "batched_vs_single_ratio": round(ratio, 3),
+              "gate": ENV_BATCH_MAX_SLOWDOWN,
+              "us_per_tti_per_episode_batched_action":
+                  round(us_batched_act, 2),
+              "scenarios": sweep}
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "BENCH_env.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# env_episode: wrote {path}")
+    return "env_episode_batched_cost", us_batched, ratio
+
+
 ALL = [fig2_pathloss_throughput, fig3_sectors, fig4_fairness,
        fig5_ppp_validation, tab_smart_update, tab_mobility_sweep,
-       kernel_fused_sinr, mac_episode]
+       kernel_fused_sinr, mac_episode, env_episode]

@@ -1,13 +1,17 @@
 """RL-style power control against CRRM -- the paper's raison d'etre.
 
-A small policy network (pure JAX) controls each cell's per-subband transmit
-power; REINFORCE maximises a *buffer-aware* MAC objective: each candidate
-power plan is rolled through the scan-compiled TTI engine (Poisson traffic,
-proportional-fair scheduling) and scored on the geometric-mean served
-throughput minus a queueing penalty on the residual backlog.  Demonstrates
-the direct simulator <-> AI-framework integration the paper targets: the
-whole episode (traffic -> buffers -> scheduler -> HARQ-lite serving) is ONE
-compiled program, so per-candidate evaluation is a single device launch.
+A small policy (pure JAX) controls each cell's per-subband transmit power;
+REINFORCE maximises the env's *buffer-aware* MAC objective: each candidate
+power plan is held for one episode of the scan-compiled TTI engine (Poisson
+traffic, proportional-fair scheduling) and scored on the geometric-mean
+served throughput minus a queueing penalty on the residual backlog.
+
+Since the functional env API (DESIGN.md §Env-API) this is a pure-functional
+loop: ``CrrmEnv.reset(key)`` returns an explicit episode-state pytree (no
+private simulator attributes to reset by hand), and the whole REINFORCE
+population -- all ``batch`` perturbed candidates -- is evaluated by ONE
+``step_batch`` call: ``vmap`` turns the batch into a single compiled
+program, so a training iteration is a single device launch.
 
 Run:  PYTHONPATH=src python examples/rl_power_control.py
 """
@@ -15,8 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.crrm import CRRM
 from repro.core.params import CRRM_parameters
+from repro.env import CrrmEnv
 
 N_UE, N_CELL, K, N_TTI = 60, 12, 2, 30
 params = CRRM_parameters(n_ues=N_UE, n_cells=N_CELL, n_subbands=K,
@@ -25,24 +29,28 @@ params = CRRM_parameters(n_ues=N_UE, n_cells=N_CELL, n_subbands=K,
                          traffic_model="poisson",
                          traffic_params=dict(arrival_rate_hz=300.0,
                                              packet_size_bits=12_000.0))
-sim = CRRM(params)
+# one env.step == one whole episode: the decision interval is the horizon
+env = CrrmEnv(params, episode_tti=N_TTI, tti_per_step=N_TTI)
 EP_KEY = jax.random.PRNGKey(7)          # frozen episode noise -> low variance
+batch = 8
+EP_KEYS = jnp.stack([EP_KEY] * batch)   # same episode for every candidate
 
 
 def reward(power_matrix) -> float:
-    """Roll one MAC episode under the candidate power plan and score it."""
-    sim.set_power_matrix(power_matrix)
-    sim.set_backlog(np.zeros(N_UE, np.float32))   # comparable episodes
-    sim._pf_avg = None                            # reset PF scheduler state
-    tput = sim.run_episode(n_tti=N_TTI, key=EP_KEY)
-    served = np.asarray(tput).mean(axis=0)                  # bits/s per UE
-    backlog = np.asarray(sim.get_backlog())                 # queued bits
-    goodput = np.log(np.maximum(served, 1e3)).mean()
-    queue_penalty = 0.05 * np.log1p(backlog / 1e4).mean()
-    return float(goodput - queue_penalty)
+    """Roll one episode under the candidate power plan and score it."""
+    state, _ = env.reset(EP_KEY)
+    _, _, r, _ = env.step(state, power_matrix)
+    return float(r)
 
 
-base_pw = np.full((N_CELL, K), 20.0 / K)
+def reward_batch(power_matrices):
+    """All candidates at once: vmap compiles the batch to one program."""
+    states, _ = env.reset_batch(EP_KEYS)
+    _, _, rs, _ = env.step_batch(states, power_matrices)
+    return np.asarray(rs)
+
+
+base_pw = env.uniform_action()
 r0 = reward(base_pw)
 print(f"baseline buffer-aware reward (uniform power): {r0:+.3f}")
 
@@ -57,23 +65,20 @@ def sample(key, theta, temp=0.3):
 
 theta = jnp.zeros((N_CELL, K))
 key = jax.random.PRNGKey(0)
-lr, batch = 2.0, 8
+lr = 2.0
 r_base = r0
 for it in range(25):
-    grads, rs = jnp.zeros_like(theta), []
-    for b in range(batch):
-        key, k = jax.random.split(key)
-        pw, noise = sample(k, theta)
-        r = reward(np.asarray(pw))
-        rs.append(r)
-        grads = grads + (r - r_base) * noise   # REINFORCE
-    theta = theta + lr * grads / batch
+    key, *ks = jax.random.split(key, batch + 1)
+    pws, noises = zip(*(sample(k, theta) for k in ks))
+    rs = reward_batch(jnp.stack(pws))            # one launch, 8 episodes
+    adv = jnp.asarray(rs) - r_base               # REINFORCE
+    theta = theta + lr * (adv[:, None, None] * jnp.stack(noises)).mean(0)
     r_base = 0.9 * r_base + 0.1 * float(np.mean(rs))
     if (it + 1) % 5 == 0:
         pw, _ = sample(jax.random.PRNGKey(99), theta, temp=0.0)
         print(f"iter {it+1:3d}: mean episode reward {np.mean(rs):+.3f}  "
-              f"greedy reward {reward(np.asarray(pw)):+.3f}")
+              f"greedy reward {reward(pw):+.3f}")
 
 pw, _ = sample(jax.random.PRNGKey(99), theta, temp=0.0)
 print(f"learned power plan improves buffer-aware reward "
-      f"{r0:+.3f} -> {reward(np.asarray(pw)):+.3f}")
+      f"{r0:+.3f} -> {reward(pw):+.3f}")

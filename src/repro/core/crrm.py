@@ -123,7 +123,9 @@ class CRRM:
         self.w = g.add(blocks.WantedNode(self.R, self.a))
         self.u = g.add(blocks.InterferenceNode(self.R, self.w))
         self.gamma = g.add(blocks.SINRNode(self.w, self.u, p.chunk_noise_W))
-        self.cqi = g.add(blocks.CQINode(self.gamma))
+        self.cqi = g.add(blocks.CQINode(
+            self.gamma, p.n_rb_subbands, p.cqi_report == "wideband",
+            p.cqi_eesm_beta))
         self.mcs = g.add(blocks.MCSNode(self.cqi))
         self.se = g.add(blocks.SpectralEfficiencyNode(self.mcs, self.cqi))
         self.shannon = g.add(blocks.ShannonNode(
@@ -175,7 +177,7 @@ class CRRM:
         the subband's CQI chunks when ``n_rb_subbands > 1``)."""
         s = self.params.n_rb_subbands
         cols = jnp.arange(k * s, (k + 1) * s)
-        self.P.set(self.P._data.at[j, cols].set(watts / s))
+        self.P.set_at((j, cols), watts / s)
 
     def resample_fading(self, key) -> None:
         p = self.params
@@ -251,16 +253,103 @@ class CRRM:
         return self.served.update().sum(axis=1)
 
     # ------------------------------------------------------------------ episodes
+    def init_episode_state(self, key=None):
+        """Gather the full episode carry as an explicit ``EpisodeState``.
+
+        Everything a MAC episode mutates -- buffers, PF EWMA, round-robin
+        cursor, HARQ processes, serving cells / TTT counters, positions and
+        the PRNG key -- in one pytree (DESIGN.md §Env-API).  Seeds the PF
+        average from the single-shot graph's served throughput (the
+        stationary alpha-fair point) and the serving cells from the current
+        attachment, unless a previous ``sync_episode_state`` left state on
+        the simulator.  ``key=None`` derives the legacy per-sim episode key
+        from ``params.seed``.
+        """
+        from repro.mac.engine import EpisodeState
+        if key is None:
+            key = jax.random.fold_in(jax.random.PRNGKey(self.params.seed),
+                                     0x6d6163)   # "mac"
+        n = self.n_ues
+        avg0 = getattr(self, "_pf_avg", None)
+        if avg0 is None:
+            avg0 = self.get_served_throughputs()
+        hbits0 = getattr(self, "_harq_bits", None)
+        if hbits0 is None:
+            hbits0 = jnp.zeros((n,), jnp.float32)
+        hretx0 = getattr(self, "_harq_retx", None)
+        if hretx0 is None:
+            hretx0 = jnp.zeros((n,), jnp.int32)
+        a0 = getattr(self, "_ho_serving", None)
+        if a0 is None:
+            a0 = self.get_attachment()
+        ttt0 = getattr(self, "_ho_ttt", None)
+        if ttt0 is None:
+            ttt0 = jnp.zeros((n,), jnp.int32)
+        return EpisodeState(
+            U=self.U._data, backlog=self.buffer._data, pf_avg=avg0,
+            rr_cursor=jnp.int32(self.sched.cursor), key=key,
+            harq_bits=jnp.asarray(hbits0, jnp.float32),
+            harq_retx=jnp.asarray(hretx0, jnp.int32),
+            serving=jnp.asarray(a0, jnp.int32),
+            ttt=jnp.asarray(ttt0, jnp.int32), t=jnp.int32(0))
+
+    def episode_static(self):
+        """Read the per-episode radio inputs (``EpisodeStatic``) off the
+        graph: cached SE/CQI/attachment plus the C/P/boresight/fading
+        roots.  Pure data -- safe to close over, jit, or vmap against."""
+        from repro.mac.engine import EpisodeStatic
+        return EpisodeStatic(
+            se=self.get_spectral_efficiency(), cqi=self.get_CQI(),
+            a=self.get_attachment(), C=self.C._data, P=self.P._data,
+            bore=self.boresight._data, fad=self.fading._data)
+
+    def episode_fns(self, mobility_step_m=None, per_tti_fading: bool = False,
+                    use_harq=None):
+        """The pure ``(step, rollout)`` episode functions for this
+        simulator's topology and MAC parameters (``EpisodeFns``), cached
+        per trace-time switch combination.  Both are jit-compiled and
+        vmap-compatible: N parallel episodes = ``vmap`` over the state
+        (see ``repro.env.CrrmEnv``)."""
+        from repro.mac import engine as mac_engine
+        return mac_engine.episode_fns_for(
+            self, mobility_step_m=mobility_step_m,
+            per_tti_fading=per_tti_fading, use_harq=use_harq)
+
+    def sync_episode_state(self, state, positions: bool = False) -> None:
+        """Write a final ``EpisodeState`` back into the graph (legacy
+        mutate/query convenience -- functional callers thread the state
+        instead).  ``positions`` also writes the UE positions root (only
+        meaningful after a mobility episode)."""
+        if positions:
+            self.set_UE_positions(state.U)
+        self.buffer.set(state.backlog)
+        self._pf_avg = state.pf_avg
+        self.sched.cursor = int(state.rr_cursor)
+        self._harq_bits, self._harq_retx = state.harq_bits, state.harq_retx
+        if self.params.ho_enabled:
+            self._ho_serving, self._ho_ttt = state.serving, state.ttt
+
+    def reset_episode_state(self) -> None:
+        """Drop persisted episode state (PF EWMA, HARQ, serving cells) so
+        the next ``init_episode_state`` re-seeds from the graph."""
+        for attr in ("_pf_avg", "_harq_bits", "_harq_retx",
+                     "_ho_serving", "_ho_ttt"):
+            if hasattr(self, attr):
+                delattr(self, attr)
+
     def run_episode(self, n_tti: int, key=None, mobility_step_m=None,
                     per_tti_fading: bool = False, sync_state: bool = True,
                     use_harq=None):
         """Roll ``n_tti`` TTIs as one ``lax.scan`` program.
 
-        Returns (n_tti, n_ues) delivered throughput in bits/s; final
-        buffers / PF state / positions / HARQ processes / serving cells are
-        written back into the graph (see repro.mac.engine).  ``use_harq``
-        overrides the ``harq_bler > 0`` auto-switch for the stop-and-wait
-        HARQ machine (False selects the legacy Bernoulli HARQ-lite).
+        Returns (n_tti, n_ues) delivered throughput in bits/s.  A thin
+        wrapper over the functional episode API: ``init_episode_state`` ->
+        ``episode_fns().rollout`` -> ``sync_episode_state`` (the
+        write-back runs unless ``sync_state=False``; new code should use
+        the functional API and thread ``EpisodeState`` explicitly).
+        ``use_harq`` overrides the ``harq_bler > 0`` auto-switch for the
+        stop-and-wait HARQ machine (False selects the legacy Bernoulli
+        HARQ-lite).
         """
         from repro.mac import engine as mac_engine
         return mac_engine.run_episode(

@@ -161,6 +161,21 @@ class RootNode(Node):
         for w in self.watchers:
             w.flood_out_of_date(ALL)
 
+    def set_at(self, idx, values) -> None:
+        """Element/submatrix assignment: ``data.at[idx].set(values)``.
+
+        ``idx`` is anything ``jnp.ndarray.at`` accepts (an index tuple, a
+        slice, ...).  Floods ALL rows downstream: dirty-row locality is
+        defined over the UE axis, and for non-UE roots (e.g. the per-cell
+        power matrix ``P``) a partial write is a whole-array mutation as
+        far as dependents are concerned.  Use :meth:`set_rows` for
+        UE-row-local patches.
+        """
+        self._data = self._data.at[idx].set(jnp.asarray(values))
+        self.up_to_date = True
+        for w in self.watchers:
+            w.flood_out_of_date(ALL)
+
     def set_rows(self, idx, values) -> None:
         """Patch selected rows -> flood only those rows downstream."""
         idx = np.asarray(idx, dtype=np.int32)

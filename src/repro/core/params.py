@@ -70,6 +70,19 @@ class CRRM_parameters:
     #: coherence bandwidth of the block-fading channel, in RBs: RBs within
     #: one coherence block share a Rayleigh draw (sim.fading)
     coherence_rb: int = 4
+    #: CQI *reporting* resolution, decoupled from the fading resolution:
+    #: "subband" reports one CQI per scheduling chunk (the legacy coupling,
+    #: full frequency-selective link adaptation); "wideband" pools each
+    #: power subband's ``n_rb_subbands`` chunks into one effective-SINR
+    #: report, so the channel stays selective but MCS selection -- and the
+    #: schedulers' frequency opportunism -- collapse to per-subband
+    #: granularity.  A no-op at ``n_rb_subbands=1`` (tested).
+    cqi_report: str = "subband"
+    #: EESM calibration factor (linear SINR units) for wideband CQI
+    #: pooling: gamma_eff = -beta * log(mean exp(-gamma/beta)).  Smaller =
+    #: more pessimistic (worst-chunk dominated); per-MCS calibration is
+    #: collapsed to one constant.
+    cqi_eesm_beta: float = 1.0
     #: P(transport block lost) on the first HARQ attempt.  0 disables HARQ
     #: entirely (the engine compiles the HARQ-free fast path).
     harq_bler: float = 0.0
@@ -118,6 +131,12 @@ class CRRM_parameters:
                 f"{self.n_rb}; got {self.n_rb_subbands}")
         if self.coherence_rb < 1:
             raise ValueError("coherence_rb must be >= 1")
+        if self.cqi_report not in ("subband", "wideband"):
+            raise ValueError(
+                f"cqi_report must be 'subband' or 'wideband'; "
+                f"got {self.cqi_report!r}")
+        if self.cqi_eesm_beta <= 0.0:
+            raise ValueError("cqi_eesm_beta must be > 0")
         if self.harq_max_retx < 0:
             raise ValueError("harq_max_retx must be >= 0")
         if self.harq_comb_gain_db < 0.0:

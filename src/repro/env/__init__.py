@@ -1,0 +1,10 @@
+"""Gym-style environment API over the CRRM episode engine.
+
+``CrrmEnv`` (``crrm_env.py``) is the functional core: pure ``reset``/
+``step`` over an explicit ``EpisodeState`` pytree, batched over seeds with
+``jax.vmap`` so N parallel episodes compile to one program.  The optional
+``gym_adapter`` wraps it in the stateful ``gymnasium.Env`` protocol for
+off-the-shelf RL frameworks (import-gated: gymnasium is not a hard
+dependency).  See DESIGN.md §Env-API.
+"""
+from repro.env.crrm_env import CrrmEnv, EnvObs, buffer_aware_reward  # noqa: F401

@@ -1,0 +1,204 @@
+"""CrrmEnv: a functional, batched, gym-style environment over CRRM.
+
+The RL integration the paper targets, as a *pure-functional* env (the
+gymnasium adapter in ``repro.env.gym_adapter`` is a thin stateful shim):
+
+* ``reset(key) -> (EpisodeState, EnvObs)`` and
+  ``step(state, action) -> (EpisodeState, EnvObs, reward, done)`` are pure
+  functions of their arguments -- no hidden attributes, so episodes can be
+  checkpointed, replayed, or driven by any external RL loop;
+* both ``vmap`` over the state (and action) axis: ``reset_batch`` /
+  ``step_batch`` run N parallel episodes -- N seeds, N candidate actions --
+  as ONE compiled program (one trace, one device launch), which is what
+  makes population-based and evolutionary methods cheap
+  (``benchmarks.paper_benches.env_episode`` gates the per-episode cost);
+* the *action* is a per-cell/subband transmit-power matrix (the classic
+  RRM control surface); each ``step`` holds it for ``tti_per_step`` TTIs
+  of the scan-compiled MAC engine and observes the delivered throughput
+  and residual backlog.
+
+The radio topology (positions, cells, fading draw) is frozen at
+construction from the underlying ``CRRM`` graph -- batching is over
+*episode randomness* (traffic arrivals, HARQ outcomes, per-TTI fading),
+which is exactly the Monte-Carlo axis RL training sweeps.  Construct from
+explicit ``CRRM_parameters`` or a named preset of
+``repro.sim.scenarios``:
+
+>>> env = CrrmEnv(scenario="dense_urban", scenario_overrides=dict(n_ues=50))
+>>> state, obs = env.reset(jax.random.PRNGKey(0))
+>>> state, obs, reward, done = env.step(state, env.uniform_action())
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.crrm import CRRM
+from repro.core.params import CRRM_parameters
+
+
+class EnvObs(NamedTuple):
+    """What the agent sees after one decision step.
+
+    ``tput`` is the mean delivered throughput over the decision window
+    (bits/s per UE); ``backlog`` the residual queued bits at its end
+    (``inf`` under full-buffer traffic).
+    """
+
+    tput: Any
+    backlog: Any
+
+
+def buffer_aware_reward(obs: EnvObs):
+    """Default reward: geometric-mean goodput minus a queueing penalty.
+
+    The objective of the RL power-control example: log-throughput rewards
+    cell-edge fairness, the ``log1p`` backlog term penalises queues the
+    chosen power plan cannot drain.  Full-buffer UEs (infinite backlog by
+    construction) are exempt from the queue term.
+    """
+    goodput = jnp.log(jnp.maximum(obs.tput, 1e3)).mean()
+    queued = jnp.where(jnp.isfinite(obs.backlog),
+                       jnp.log1p(obs.backlog / 1e4), 0.0)
+    return goodput - 0.05 * queued.mean()
+
+
+class CrrmEnv:
+    """Batched gym-style environment over the scan-compiled MAC engine.
+
+    Parameters
+    ----------
+    params:
+        Explicit ``CRRM_parameters`` (mutually exclusive with ``scenario``).
+    scenario, scenario_overrides:
+        A named preset from ``repro.sim.scenarios`` plus per-field
+        overrides -- the reproducible way to define an RL task.
+    episode_tti:
+        Episode horizon; ``done`` once the state's TTI counter reaches it.
+    tti_per_step:
+        MAC TTIs rolled (as one ``lax.scan``) per ``step`` call -- the
+        agent's decision interval.
+    per_tti_fading:
+        Redraw fast fading every TTI inside the scan (otherwise the
+        construction-time draw stays frozen).
+    reward_fn:
+        ``EnvObs -> scalar``; defaults to :func:`buffer_aware_reward`.
+    """
+
+    def __init__(self, params: Optional[CRRM_parameters] = None, *,
+                 scenario: Optional[str] = None,
+                 scenario_overrides: Optional[dict] = None,
+                 episode_tti: int = 200, tti_per_step: int = 20,
+                 per_tti_fading: bool = False, reward_fn=None):
+        if (params is None) == (scenario is None):
+            raise ValueError("pass exactly one of params= or scenario=")
+        if scenario is not None:
+            from repro.sim.scenarios import make_scenario
+            params = make_scenario(scenario, **(scenario_overrides or {}))
+        elif scenario_overrides:
+            raise ValueError("scenario_overrides requires scenario=")
+        if episode_tti < 1 or tti_per_step < 1:
+            raise ValueError("episode_tti and tti_per_step must be >= 1")
+        self.scenario = scenario
+        self.episode_tti = int(episode_tti)
+        self.tti_per_step = int(tti_per_step)
+        self.sim = CRRM(params)
+        self.params = self.sim.params
+        self.n_ues, self.n_cells = self.sim.n_ues, self.sim.n_cells
+        self.n_subbands = self.params.n_subbands
+        self._reward_fn = reward_fn or buffer_aware_reward
+        self._fns = self.sim.episode_fns(per_tti_fading=per_tti_fading)
+        self._static = self.sim.episode_static()
+        # the reset template: PF EWMA seeded at the stationary alpha-fair
+        # point, empty HARQ processes, attachment-serving, t=0
+        self._state0 = self.sim.init_episode_state()
+        self._batched = {}          # cached jit(vmap(...)) wrappers
+
+    # ------------------------------------------------------------- actions
+    @property
+    def action_shape(self) -> tuple:
+        """(n_cells, n_subbands): per-cell/subband tx power in watts."""
+        return (self.n_cells, self.n_subbands)
+
+    @property
+    def max_cell_power_W(self) -> float:
+        """Per-cell power budget in watts.  Also the per-(cell, subband)
+        action bound: a cell may concentrate its whole budget on one
+        subband, and :meth:`step` scales down any action whose per-cell
+        total exceeds the budget, so rewards are always comparable across
+        candidate plans."""
+        return float(self.params.power_W)
+
+    def uniform_action(self):
+        """The baseline plan: every cell splits its budget evenly."""
+        return jnp.full(self.action_shape,
+                        self.params.power_W / self.n_subbands, jnp.float32)
+
+    def _expand_action(self, action):
+        """(n_cells, n_subbands) watts -> the (n_cells, n_freq) grid the
+        engine schedules on.  Enforces the per-cell power budget (rows
+        whose total exceeds ``power_W`` are scaled down -- actions are
+        *requests*, the cell amplifier is the constraint), then splits
+        each subband's power evenly over its CQI chunks (same convention
+        as ``CRRM.set_power_matrix``)."""
+        action = jnp.asarray(action, jnp.float32)
+        total = action.sum(axis=-1, keepdims=True)
+        budget = self.params.power_W
+        action = action * jnp.minimum(
+            1.0, budget / jnp.maximum(total, 1e-30))
+        s = self.params.n_rb_subbands
+        if s > 1:
+            action = jnp.repeat(action, s, axis=-1) / s
+        return action
+
+    # ---------------------------------------------------------- pure core
+    def reset(self, key):
+        """Start one episode: ``(EpisodeState, EnvObs)`` for this seed.
+
+        Pure -- the template state is frozen at construction; only the
+        PRNG key (traffic, HARQ, per-TTI fading randomness) varies per
+        episode, so ``jax.vmap(env.reset)(keys)`` batches cleanly.
+        """
+        state = self._state0._replace(key=key)
+        obs = EnvObs(tput=jnp.zeros((self.n_ues,), jnp.float32),
+                     backlog=state.backlog)
+        return state, obs
+
+    def step(self, state, action=None):
+        """Hold ``action`` for ``tti_per_step`` TTIs; observe and score.
+
+        ``action`` is a (n_cells, n_subbands) power matrix (None keeps the
+        construction-time power plan -- a pure traffic simulation step).
+        Returns ``(state, EnvObs, reward, done)``; pure and vmap-able over
+        ``(state, action)``.
+        """
+        power = None if action is None else self._expand_action(action)
+        state, tput = self._fns.rollout(self._static, state,
+                                        self.tti_per_step, power)
+        obs = EnvObs(tput=tput.mean(axis=0), backlog=state.backlog)
+        reward = self._reward_fn(obs)
+        done = state.t >= self.episode_tti
+        return state, obs, reward, done
+
+    # ------------------------------------------------------------- batched
+    def _vmapped(self, name):
+        """jit(vmap(...)) wrappers, traced once per (name, batch shape)."""
+        if name not in self._batched:
+            fn = {"reset": self.reset,
+                  "step": self.step,
+                  "step_auto": lambda s: self.step(s, None)}[name]
+            self._batched[name] = jax.jit(jax.vmap(fn))
+        return self._batched[name]
+
+    def reset_batch(self, keys):
+        """N parallel episodes from N seeds: one compiled program."""
+        return self._vmapped("reset")(keys)
+
+    def step_batch(self, states, actions=None):
+        """Advance N episodes (optionally under N candidate actions) as
+        one compiled program -- the batch axis is free parallelism."""
+        if actions is None:
+            return self._vmapped("step_auto")(states)
+        return self._vmapped("step")(states, actions)

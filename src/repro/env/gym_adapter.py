@@ -1,0 +1,79 @@
+"""Optional gymnasium adapter for :class:`~repro.env.crrm_env.CrrmEnv`.
+
+The functional env is the source of truth; this module wraps one episode
+stream in the stateful ``gymnasium.Env`` protocol (``reset``/``step`` with
+numpy i/o and Box spaces) so off-the-shelf RL frameworks can drive the
+simulator unmodified.  gymnasium is NOT a hard dependency: importing this
+module is cheap, and :func:`make_gym_env` raises a clear ``ImportError``
+only when called without gymnasium installed.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.env.crrm_env import CrrmEnv
+
+#: stand-in for +inf in observation bounds (throughput, backlog are
+#: unbounded above; full-buffer backlog is genuinely inf and is clamped)
+_OBS_HIGH = np.float32(3.4e38)
+
+
+def flatten_obs(obs) -> np.ndarray:
+    """EnvObs -> flat (2 * n_ues,) float32 vector (backlog inf clamped)."""
+    tput = np.asarray(obs.tput, np.float32)
+    backlog = np.minimum(np.asarray(obs.backlog, np.float32), _OBS_HIGH)
+    return np.concatenate([tput, backlog])
+
+
+def make_gym_env(env: CrrmEnv, seed: int = 0):
+    """Wrap a functional ``CrrmEnv`` in a ``gymnasium.Env``.
+
+    Observation: ``Box(0, inf, (2 * n_ues,))`` -- per-UE delivered
+    throughput then residual backlog.  Action: ``Box(0, power_W,
+    (n_cells, n_subbands))`` transmit powers in watts.  Episode end is
+    reported as ``truncated`` (a time horizon, not a terminal MDP state).
+    """
+    try:
+        import gymnasium
+        from gymnasium import spaces
+    except ImportError as e:     # pragma: no cover - exercised without gym
+        raise ImportError(
+            "gymnasium is required for the adapter: pip install gymnasium "
+            "(the functional CrrmEnv works without it)") from e
+
+    import jax
+
+    class GymCrrmEnv(gymnasium.Env):
+        metadata = {"render_modes": []}
+
+        def __init__(self, fenv: CrrmEnv, seed: int):
+            self._env = fenv
+            self._key = jax.random.PRNGKey(seed)
+            self._state = None
+            n = fenv.n_ues
+            self.observation_space = spaces.Box(
+                low=0.0, high=_OBS_HIGH, shape=(2 * n,), dtype=np.float32)
+            self.action_space = spaces.Box(
+                low=0.0, high=fenv.max_cell_power_W,
+                shape=fenv.action_shape, dtype=np.float32)
+
+        def reset(self, *, seed=None, options=None):
+            # gymnasium contract: seed=None continues the RNG stream (a
+            # fresh stochastic episode per reset); an explicit seed
+            # restarts it reproducibly.
+            super().reset(seed=seed)
+            if seed is not None:
+                self._key = jax.random.PRNGKey(seed)
+            self._key, ep_key = jax.random.split(self._key)
+            self._state, obs = self._env.reset(ep_key)
+            return flatten_obs(obs), {}
+
+        def step(self, action):
+            action = np.clip(np.asarray(action, np.float32),
+                             self.action_space.low, self.action_space.high)
+            self._state, obs, reward, done = self._env.step(
+                self._state, action)
+            return (flatten_obs(obs), float(reward),
+                    False, bool(done), {})
+
+    return GymCrrmEnv(env, seed)

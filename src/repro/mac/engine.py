@@ -4,14 +4,32 @@ The smart-update graph is built for sparse, event-driven mutation (move a
 few UEs, re-query).  Time-stepped MAC simulation is the opposite regime:
 *every* TTI touches *every* UE's buffer, so per-TTI Python dispatch over the
 node graph would dominate.  This module re-expresses one TTI as a pure
-function of a small carry
+function of an explicit :class:`EpisodeState` pytree
 
     (positions, backlog_bits, pf_avg_rate, rr_cursor, key,
-     harq_bits, harq_retx, serving_cell, ttt)
+     harq_bits, harq_retx, serving_cell, ttt, t)
 
 and rolls N TTIs with ``jax.lax.scan``: one trace, one XLA program, zero
-per-TTI Python (DESIGN.md §TTI-engine).  A 1000-UE x 1000-TTI episode is a
-single device launch.
+per-TTI Python (DESIGN.md §TTI-engine, §Env-API).  A 1000-UE x 1000-TTI
+episode is a single device launch.
+
+The episode API is pure-functional (DESIGN.md §Env-API):
+
+* :class:`EpisodeState` -- everything the scan carry needs, as a pytree.
+  ``CRRM.init_episode_state(key)`` gathers it from the graph;
+* :class:`EpisodeStatic` -- the per-episode radio inputs (cached SE/CQI/
+  attachment plus the C/P/boresight/fading roots).  ``CRRM.episode_static()``
+  reads them off the graph;
+* :func:`make_episode_fns` -- builds ``step(static, state, action)`` and
+  ``rollout(static, state, n_tti, action)``, both jit- and vmap-compatible:
+  batching N episodes over seeds is ``jax.vmap`` over ``state`` (and
+  ``action``), and compiles to one program (``src/repro/env``).
+
+``run_episode`` is a thin wrapper: init state -> rollout -> (optionally)
+write the final state back into the graph.  The write-back (``sync_state``)
+is retained for the paper's mutate/query workflow but is a legacy
+convenience: functional callers thread :class:`EpisodeState` explicitly and
+never touch simulator attributes.
 
 Three orthogonal feature axes, each a trace-time (Python) switch so the
 disabled configuration compiles to exactly the legacy program:
@@ -20,6 +38,9 @@ disabled configuration compiles to exactly the legacy program:
   factor is a per-RB block-fading tensor pooled to CQI-subband resolution,
   so SE/CQI/alloc carry a (n_ues, n_freq) frequency axis and the schedulers
   pick *which* RBs each UE gets.  ``n_rb_subbands=1`` is the wideband path.
+  ``cqi_report="wideband"`` decouples *reporting* from fading resolution:
+  the channel stays selective but CQI/MCS collapse to one report per power
+  subband (blocks._pool_report).
 * stop-and-wait HARQ (``harq_bler > 0``): per-UE process state (pending TB
   bits, retx count) rides in the carry; failed TBs retransmit with a
   soft-combining SINR gain per attempt until ``harq_max_retx`` is exhausted.
@@ -29,23 +50,24 @@ disabled configuration compiles to exactly the legacy program:
   ``ho_hysteresis_db`` for ``ho_ttt_tti`` consecutive TTIs.  Disabled, the
   serving cell is the instantaneous argmax (legacy).
 
-Two channel regimes:
+Channel regimes:
 
-* static (no mobility, no per-TTI fading): the radio chain (se, cqi, a) is
-  read once from the graph's cached nodes and passed in -- the scan body
-  is MAC-only math;
-* dynamic (``mobility_step_m`` set and/or ``per_tti_fading``): the radio
-  chain is recomputed inside the scan from the same jitted block helpers
-  the graph nodes use, so both paths share one implementation.
+* static (no mobility, no per-TTI fading, no power action): the radio chain
+  (se, cqi, a) is read once from ``EpisodeStatic`` -- the scan body is
+  MAC-only math;
+* dynamic (``mobility_step_m`` set, ``per_tti_fading``, or a power
+  ``action``): the radio chain is recomputed inside the scan from the same
+  jitted block helpers the graph nodes use, so both paths share one
+  implementation.  A non-None ``action`` is a per-episode (n_cells, n_freq)
+  power matrix overriding ``static.P`` -- the RL power-control hook.
 
 All mutable simulator state (positions, powers, fading, radio outputs)
 enters the compiled episode as *arguments*, never as baked-in constants, so
-mutating the graph between episodes behaves correctly.  After the episode
-the final carry is written back into the graph roots so subsequent
-single-shot queries (and further episodes) continue from the episode's end
-state.
+mutating the graph between episodes behaves correctly.
 """
 from __future__ import annotations
+
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -54,6 +76,60 @@ from repro.core import blocks
 from repro.mac import scheduler as mac_sched
 from repro.sim import fading as fading_mod
 from repro.sim import mobility
+
+
+class EpisodeState(NamedTuple):
+    """The full mutable state of a MAC episode, as an explicit pytree.
+
+    Every field is a per-simulation array (no Python state), so the whole
+    tuple can ride a ``lax.scan`` carry, be ``jax.vmap``ed over a batch
+    axis (N parallel episodes), checkpointed, or handed to an external RL
+    loop.  Constructed by ``CRRM.init_episode_state``; advanced by the pure
+    ``step``/``rollout`` functions of :func:`make_episode_fns`.
+    """
+
+    U: Any           # (n_ues, 3) positions
+    backlog: Any     # (n_ues,) queued bits (inf = full buffer)
+    pf_avg: Any      # (n_ues,) PF EWMA average delivered rate, bits/s
+    rr_cursor: Any   # i32 scalar: round-robin rotation state
+    key: Any         # PRNG key; per-TTI streams are folded from (key, t)
+    harq_bits: Any   # (n_ues,) f32 pending transport-block bits (0 = idle)
+    harq_retx: Any   # (n_ues,) i32 retransmission count of the pending TB
+    serving: Any     # (n_ues,) i32 serving-cell index (A3 carried state)
+    ttt: Any         # (n_ues,) i32 A3 time-to-trigger counters
+    t: Any           # i32 scalar: TTI index (drives PRNG folds + traffic)
+
+
+class EpisodeStatic(NamedTuple):
+    """Per-episode radio inputs: everything the step reads but never writes.
+
+    The cached single-shot radio chain (``se``/``cqi``/``a`` -- used
+    verbatim in the fully-static regime) plus the graph roots the dynamic
+    regimes recompute from.  Read off the graph by ``CRRM.episode_static()``.
+    """
+
+    se: Any          # (n_ues, n_freq) spectral efficiency
+    cqi: Any         # (n_ues, n_freq)
+    a: Any           # (n_ues,) i32 attachment
+    C: Any           # (n_cells, 3) cell positions
+    P: Any           # (n_cells, n_freq) tx power
+    bore: Any        # (n_cells,) sector boresights
+    fad: Any         # (n_ues, n_cells[, n_freq]) fading factor
+
+
+class EpisodeFns(NamedTuple):
+    """The pure episode API for one engine configuration (jit-compiled).
+
+    ``step(static, state, action=None) -> (state, tput)`` advances one TTI;
+    ``rollout(static, state, n_tti, action=None) -> (state, tput)`` scans
+    ``n_tti`` TTIs (``tput`` stacked to (n_tti, n_ues)).  ``action`` is an
+    optional (n_cells, n_freq) power matrix overriding ``static.P`` (a
+    trace-time switch: None compiles the legacy program).  Both functions
+    are pure and vmap over ``state``/``action`` for batched episodes.
+    """
+
+    step: Any
+    rollout: Any
 
 
 def harq_fail_prob(bler, comb_gain_db, retx):
@@ -90,31 +166,25 @@ def a3_handover(a, ttt, rsrp_wb, hyst_db, ttt_tti):
     return a, ttt
 
 
-def build_episode(sim, n_tti: int, mobility_step_m=None,
-                  per_tti_fading: bool = False, use_harq=None):
-    """Trace an episode runner for ``sim``'s topology and MAC parameters.
+def make_episode_fns(params, n_ues: int, n_cells: int, gain_full,
+                     traffic_step, *, mobility_step_m=None,
+                     per_tti_fading: bool = False,
+                     use_harq=None) -> EpisodeFns:
+    """Build the pure ``step``/``rollout`` functions for one configuration.
 
-    Returns a jitted function
+    ``params`` is a ``CRRM_parameters``; ``gain_full`` the jitted unfaded
+    gain closure (``GainNode._full``) and ``traffic_step`` the traffic
+    model's arrival function -- both pure, so the returned functions are
+    too.  ``use_harq`` forces the HARQ state machine on/off regardless of
+    ``harq_bler`` (None = auto: on iff ``harq_bler > 0``); forcing it on at
+    ``harq_bler=0`` is the equivalence-testing hook -- the machine must
+    then reproduce the fast path bit-exactly.
 
-        ``fn(carry0, radio_in) -> (carry, tput)``
-
-    with ``carry = (U, backlog, pf_avg, cursor, key, harq_bits, harq_retx,
-    a_serving, ttt)`` and ``radio_in = (se, cqi, a, C, P, bore, fad)``;
-    ``tput`` is the (n_tti, n_ues) per-TTI *delivered* throughput in
-    bits/s.  ``use_harq`` forces the HARQ state machine on/off regardless
-    of ``harq_bler`` (None = auto: on iff ``harq_bler > 0``); forcing it on
-    at ``harq_bler=0`` is the equivalence-testing hook -- the machine must
-    then reproduce the fast path bit-exactly.  The traced function is
-    cached on the simulator keyed by ``(n_tti, mobility_step_m,
-    per_tti_fading, use_harq)`` so repeat episodes reuse the compilation.
+    The trace-time feature switches (mobility / per-TTI fading / HARQ /
+    handover / per-RB grid) are baked here; ``n_tti`` and the presence of
+    an ``action`` specialise via the jit cache on the returned functions.
     """
-    p = sim.params
-    cache_key = (n_tti, mobility_step_m, per_tti_fading, use_harq)
-    cache = sim.__dict__.setdefault("_episode_cache", {})
-    if cache_key in cache:
-        return cache[cache_key]
-
-    n_ues, n_cells = sim.n_ues, sim.n_cells
+    p = params
     tti_s, beta = p.tti_s, p.pf_ewma
     n_freq, rb_chunk = p.n_freq, p.rb_per_chunk
     rb_bw = p.subband_bandwidth_Hz / p.n_rb     # physical RB bandwidth
@@ -123,11 +193,16 @@ def build_episode(sim, n_tti: int, mobility_step_m=None,
     max_retx, comb_db = p.harq_max_retx, p.harq_comb_gain_db
     ho_on = p.ho_enabled
     hyst_db, ttt_tti = p.ho_hysteresis_db, p.ho_ttt_tti
-    per_rb = p.n_rb_subbands > 1
     noise_w = p.chunk_noise_W
-    gain_full = sim.G._full          # jitted closure over pathloss + antenna
-    attach_on_mean = hasattr(sim, "R_mean")
-    traffic_step = sim._traffic_step   # the closure CRRM already built
+    attach_on_mean = p.rayleigh_fading and p.attach_ignores_fading
+    report_wb = p.cqi_report == "wideband"
+    n_rb_sb = p.n_rb_subbands
+    static_geom = mobility_step_m is None
+
+    def cqi_of(gamma):
+        """CQI at the configured reporting resolution (DESIGN.md)."""
+        return blocks._cqi_report(gamma, n_rb_sb, report_wb,
+                                  p.cqi_eesm_beta)
 
     def unfaded_gain(U, C, bore):
         d2d, d3d, az = blocks._geometry(U, C)
@@ -136,7 +211,7 @@ def build_episode(sim, n_tti: int, mobility_step_m=None,
 
     def draw_fading(key):
         """Fresh per-TTI fading at the engine's frequency resolution."""
-        if per_rb:
+        if n_rb_sb > 1:
             return fading_mod.subband_rayleigh_power(
                 key, n_ues, n_cells, p.n_subbands * p.n_rb, p.coherence_rb,
                 n_freq)
@@ -152,7 +227,7 @@ def build_episode(sim, n_tti: int, mobility_step_m=None,
         w = blocks._wanted(R, a)
         u = blocks._interference(R, w)
         gamma = w / (noise_w + u)
-        cqi = blocks._cqi(gamma)
+        cqi = cqi_of(gamma)
         se = blocks._se(blocks._mcs(cqi), cqi)
         return se, cqi, a
 
@@ -190,105 +265,152 @@ def build_episode(sim, n_tti: int, mobility_step_m=None,
         hretx = jnp.where(keep, jnp.where(fail, n_fail, hretx), 0)
         return delivered, pending, hbits, hretx
 
-    @jax.jit
-    def episode(carry0, radio_in):
-        se0, cqi0, a0, C, P, bore, fad0 = radio_in
-        static_geom = mobility_step_m is None
-        if static_geom and (per_tti_fading or ho_on):
+    def prepare(static, U, power_act: bool):
+        """Hoistable constants of the static-geometry regime.
+
+        Everything here is loop-invariant: ``rollout`` evaluates it once,
+        outside the scan.  With a power ``action`` the P-dependent tables
+        are skipped (the per-TTI chain recomputes from the action); only
+        the unfaded gain -- pure geometry -- survives hoisting.
+        """
+        h = {}
+        if static_geom and (per_tti_fading or ho_on or power_act):
             # static geometry: one unfaded gain/attachment pass, hoisted
             # out of the scan; only the fading factor varies per TTI.
-            G_static = unfaded_gain(carry0[0], C, bore)
-            R_mean_static = blocks._rsrp(G_static, P)
-            a_static = (blocks._attach(R_mean_static)
-                        if attach_on_mean else None)
-            R_static_faded = faded_rsrp(G_static, P, fad0)
-            # A3 measures long-term RSRP iff association does (same
-            # convention as the dynamic paths' R_meas)
-            meas_wb_static = (R_mean_static if attach_on_mean
-                              else R_static_faded).sum(axis=-1)
-            if ho_on:
-                # static channel + evolving serving cell: tabulate the SINR
-                # chain for EVERY candidate cell once, outside the scan --
-                # per TTI the chain is then two gathers on (n_ue, n_freq)
-                # instead of an (n_ue, n_cell, n_freq) reduction.
-                total_static = R_static_faded.sum(axis=1)
-                gamma_all = R_static_faded / (
-                    noise_w + (total_static[:, None, :] - R_static_faded))
-                cqi_all = blocks._cqi(gamma_all)
-                se_all = blocks._se(blocks._mcs(cqi_all), cqi_all)
+            h["G"] = unfaded_gain(U, static.C, static.bore)
+            if not power_act:
+                R_mean = blocks._rsrp(h["G"], static.P)
+                h["R_mean"] = R_mean
+                h["a"] = blocks._attach(R_mean) if attach_on_mean else None
+                R_faded = faded_rsrp(h["G"], static.P, static.fad)
+                # A3 measures long-term RSRP iff association does (same
+                # convention as the dynamic paths' R_meas)
+                h["meas_wb"] = (R_mean if attach_on_mean
+                                else R_faded).sum(axis=-1)
+                if ho_on:
+                    # static channel + evolving serving cell: tabulate the
+                    # SINR chain for EVERY candidate cell once, outside the
+                    # scan -- per TTI the chain is then two gathers on
+                    # (n_ue, n_freq) instead of an (n_ue, n_cell, n_freq)
+                    # reduction.
+                    total = R_faded.sum(axis=1)
+                    gamma_all = R_faded / (
+                        noise_w + (total[:, None, :] - R_faded))
+                    h["cqi_all"] = cqi_of(gamma_all)
+                    h["se_all"] = blocks._se(blocks._mcs(h["cqi_all"]),
+                                             h["cqi_all"])
+        return h
 
-        def step(carry, t):
-            U, buf, avg, cursor, key, hbits, hretx, a_srv, ttt = carry
-            k_mob, k_fad, k_tr, k_harq = (jax.random.fold_in(key, 4 * t + i)
-                                          for i in range(4))
-            # -- channel: (R, R_meas) per TTI, or the hoisted constants ----
-            if mobility_step_m is not None:
-                idx = jnp.arange(n_ues)
-                U = U.at[idx].set(mobility.random_walk(
-                    k_mob, U, idx, mobility_step_m, p.extent_m))
-                G0 = unfaded_gain(U, C, bore)
-                fad = draw_fading(k_fad) if per_tti_fading else fad0
-                R = faded_rsrp(G0, P, fad)
-                R_meas = blocks._rsrp(G0, P) if attach_on_mean else R
+    def tti_step(h, static, state, action):
+        """One pure TTI: (hoisted, static, state, action) -> (state, tput)."""
+        power_act = action is not None
+        U, buf, avg = state.U, state.backlog, state.pf_avg
+        cursor, key = state.rr_cursor, state.key
+        hbits, hretx, a_srv, ttt, t = (state.harq_bits, state.harq_retx,
+                                       state.serving, state.ttt, state.t)
+        P = action if power_act else static.P
+        k_mob, k_fad, k_tr, k_harq = (jax.random.fold_in(key, 4 * t + i)
+                                      for i in range(4))
+        # -- channel: (R, R_meas) per TTI, or the hoisted constants --------
+        if mobility_step_m is not None:
+            idx = jnp.arange(n_ues)
+            U = U.at[idx].set(mobility.random_walk(
+                k_mob, U, idx, mobility_step_m, p.extent_m))
+            G0 = unfaded_gain(U, static.C, static.bore)
+            fad = draw_fading(k_fad) if per_tti_fading else static.fad
+            R = faded_rsrp(G0, P, fad)
+            R_meas = blocks._rsrp(G0, P) if attach_on_mean else R
+            a_inst = blocks._attach(R_meas)
+        elif per_tti_fading or power_act:
+            fad = draw_fading(k_fad) if per_tti_fading else static.fad
+            R = faded_rsrp(h["G"], P, fad)
+            if power_act:
+                R_meas = blocks._rsrp(h["G"], P) if attach_on_mean else R
                 a_inst = blocks._attach(R_meas)
-            elif per_tti_fading:
-                fad = draw_fading(k_fad)
-                R = faded_rsrp(G_static, P, fad)
-                R_meas = R_mean_static if attach_on_mean else R
-                a_inst = a_static if attach_on_mean else blocks._attach(R)
             else:
-                R = R_meas = a_inst = None   # fully static radio chain
+                R_meas = h["R_mean"] if attach_on_mean else R
+                a_inst = h["a"] if attach_on_mean else blocks._attach(R)
+        else:
+            R = R_meas = a_inst = None   # fully static radio chain
 
-            # -- serving cell: A3 carried state, or instantaneous argmax --
-            if ho_on:
-                meas_wb = (R_meas.sum(axis=-1) if R_meas is not None
-                           else meas_wb_static)
-                a_srv, ttt = a3_handover(a_srv, ttt, meas_wb,
-                                         hyst_db, ttt_tti)
-                a_use = a_srv
-                if R is not None:
-                    se, cqi, _ = sinr_chain(R, a_use)
-                else:
-                    # static channel, evolving attachment: gather from the
-                    # hoisted all-cells SINR-chain tables
-                    sel = a_use[:, None, None]
-                    se = jnp.take_along_axis(se_all, sel, axis=1)[:, 0]
-                    cqi = jnp.take_along_axis(cqi_all, sel, axis=1)[:, 0]
-            elif R is not None:
-                se, cqi, a_use = sinr_chain(R, a_inst)
+        # -- serving cell: A3 carried state, or instantaneous argmax ------
+        if ho_on:
+            meas_wb = (R_meas.sum(axis=-1) if R_meas is not None
+                       else h["meas_wb"])
+            a_srv, ttt = a3_handover(a_srv, ttt, meas_wb, hyst_db, ttt_tti)
+            a_use = a_srv
+            if R is not None:
+                se, cqi, _ = sinr_chain(R, a_use)
             else:
-                se, cqi, a_use = se0, cqi0, a0
+                # static channel, evolving attachment: gather from the
+                # hoisted all-cells SINR-chain tables
+                sel = a_use[:, None, None]
+                se = jnp.take_along_axis(h["se_all"], sel, axis=1)[:, 0]
+                cqi = jnp.take_along_axis(h["cqi_all"], sel, axis=1)[:, 0]
+        elif R is not None:
+            se, cqi, a_use = sinr_chain(R, a_inst)
+        else:
+            se, cqi, a_use = static.se, static.cqi, static.a
 
-            # -- MAC: traffic -> grant -> HARQ -> drain --------------------
-            buf = buf + traffic_step(k_tr, t)
-            harq_pending = (hbits > 0.0) if harq_on else \
-                jnp.zeros((n_ues,), bool)
-            alloc = allocate(se, cqi, a_use, buf, avg, cursor, harq_pending)
-            drainable = jnp.where(harq_pending, 0.0, buf)
-            tb_new = mac_sched.served_bits(alloc, se, drainable, rb_bw,
-                                           tti_s).sum(1)
-            if harq_on:
-                bits, _, hbits, hretx = harq_step(
-                    k_harq, tb_new, hbits, hretx, alloc.sum(axis=1) > 0.0)
-            elif bler > 0.0:   # HARQ-lite: lost blocks stay queued -> retx
-                bits = tb_new * jax.random.bernoulli(
-                    k_harq, 1.0 - bler, (n_ues,)).astype(tb_new.dtype)
-            else:
-                bits = tb_new
-            # clamp: served_bits <= backlog only up to float rounding
-            if harq_on:
-                buf = jnp.maximum(buf - tb_new, 0.0)  # drain on first tx
-            else:
-                buf = jnp.maximum(buf - bits, 0.0)
-            tput = bits / tti_s
-            avg = (1.0 - beta) * avg + beta * tput
-            return (U, buf, avg, cursor + rb_chunk, key, hbits, hretx,
-                    a_srv, ttt), tput
+        # -- MAC: traffic -> grant -> HARQ -> drain ------------------------
+        buf = buf + traffic_step(k_tr, t)
+        harq_pending = (hbits > 0.0) if harq_on else \
+            jnp.zeros((n_ues,), bool)
+        alloc = allocate(se, cqi, a_use, buf, avg, cursor, harq_pending)
+        drainable = jnp.where(harq_pending, 0.0, buf)
+        tb_new = mac_sched.served_bits(alloc, se, drainable, rb_bw,
+                                       tti_s).sum(1)
+        if harq_on:
+            bits, _, hbits, hretx = harq_step(
+                k_harq, tb_new, hbits, hretx, alloc.sum(axis=1) > 0.0)
+        elif bler > 0.0:   # HARQ-lite: lost blocks stay queued -> retx
+            bits = tb_new * jax.random.bernoulli(
+                k_harq, 1.0 - bler, (n_ues,)).astype(tb_new.dtype)
+        else:
+            bits = tb_new
+        # clamp: served_bits <= backlog only up to float rounding
+        if harq_on:
+            buf = jnp.maximum(buf - tb_new, 0.0)  # drain on first tx
+        else:
+            buf = jnp.maximum(buf - bits, 0.0)
+        tput = bits / tti_s
+        avg = (1.0 - beta) * avg + beta * tput
+        state = EpisodeState(U, buf, avg, cursor + rb_chunk, key,
+                             hbits, hretx, a_srv, ttt, t + 1)
+        return state, tput
 
-        return jax.lax.scan(step, carry0, jnp.arange(n_tti))
+    def step(static, state, action=None):
+        h = prepare(static, state.U, action is not None)
+        return tti_step(h, static, state, action)
 
-    cache[cache_key] = episode
-    return episode
+    def rollout(static, state, n_tti, action=None):
+        h = prepare(static, state.U, action is not None)
+
+        def body(s, _):
+            return tti_step(h, static, s, action)
+
+        return jax.lax.scan(body, state, None, length=n_tti)
+
+    return EpisodeFns(step=jax.jit(step),
+                      rollout=jax.jit(rollout, static_argnums=(2,)))
+
+
+def episode_fns_for(sim, *, mobility_step_m=None, per_tti_fading=False,
+                    use_harq=None) -> EpisodeFns:
+    """The :func:`make_episode_fns` bundle for ``sim``, cached on it.
+
+    Keyed by the trace-time switches only -- ``n_tti`` and the presence of
+    a power action specialise through the jit cache of the returned
+    functions, so repeat episodes of any length reuse one ``EpisodeFns``.
+    """
+    cache_key = (mobility_step_m, per_tti_fading, use_harq)
+    cache = sim.__dict__.setdefault("_episode_fns_cache", {})
+    if cache_key not in cache:
+        cache[cache_key] = make_episode_fns(
+            sim.params, sim.n_ues, sim.n_cells, sim.G._full,
+            sim._traffic_step, mobility_step_m=mobility_step_m,
+            per_tti_fading=per_tti_fading, use_harq=use_harq)
+    return cache[cache_key]
 
 
 def run_episode(sim, n_tti: int, key=None, mobility_step_m=None,
@@ -297,52 +419,23 @@ def run_episode(sim, n_tti: int, key=None, mobility_step_m=None,
     """Run ``n_tti`` TTIs; returns (n_tti, n_ues) delivered throughput
     (bits/s).
 
-    The PF average-rate state is seeded from the single-shot graph's served
-    throughput (the stationary alpha-fair point), so a full-buffer PF
-    episode starts -- and, with a static channel, stays -- at the legacy
-    ``ThroughputNode`` fixed point.  HARQ process state and the A3 serving
-    cell / time-to-trigger counters persist across episodes on the
-    simulator (``sim._harq_bits``/``_harq_retx``/``_ho_serving``/
-    ``_ho_ttt``) when ``sync_state`` is set.
+    A thin wrapper over the functional API: ``sim.init_episode_state(key)``
+    -> ``rollout`` -> ``sim.sync_episode_state``.  The PF average-rate
+    state is seeded from the single-shot graph's served throughput (the
+    stationary alpha-fair point), so a full-buffer PF episode starts --
+    and, with a static channel, stays -- at the legacy ``ThroughputNode``
+    fixed point.  ``sync_state`` (legacy; functional callers thread
+    :class:`EpisodeState` instead) writes the final buffers / PF state /
+    positions / HARQ processes / serving cells back into the graph so
+    subsequent single-shot queries and episodes continue from the episode's
+    end state.
     """
-    if key is None:
-        key = jax.random.fold_in(jax.random.PRNGKey(sim.params.seed),
-                                 0x6d6163)   # "mac"
-    episode = build_episode(sim, n_tti, mobility_step_m, per_tti_fading,
-                            use_harq)
-    avg0 = getattr(sim, "_pf_avg", None)
-    if avg0 is None:
-        avg0 = sim.get_served_throughputs()
-    n = sim.n_ues
-    hbits0 = getattr(sim, "_harq_bits", None)
-    if hbits0 is None:
-        hbits0 = jnp.zeros((n,), jnp.float32)
-    hretx0 = getattr(sim, "_harq_retx", None)
-    if hretx0 is None:
-        hretx0 = jnp.zeros((n,), jnp.int32)
-    a0 = getattr(sim, "_ho_serving", None)
-    if a0 is None:
-        a0 = sim.get_attachment()
-    ttt0 = getattr(sim, "_ho_ttt", None)
-    if ttt0 is None:
-        ttt0 = jnp.zeros((n,), jnp.int32)
-    carry0 = (sim.U._data, sim.buffer._data, avg0,
-              jnp.int32(sim.sched.cursor), key,
-              jnp.asarray(hbits0, jnp.float32),
-              jnp.asarray(hretx0, jnp.int32),
-              jnp.asarray(a0, jnp.int32), jnp.asarray(ttt0, jnp.int32))
-    radio_in = (sim.get_spectral_efficiency(), sim.get_CQI(),
-                sim.get_attachment(), sim.C._data, sim.P._data,
-                sim.boresight._data, sim.fading._data)
-    (U, buf, avg, cursor, _, hbits, hretx, a_srv, ttt), tput = episode(
-        carry0, radio_in)
+    fns = episode_fns_for(sim, mobility_step_m=mobility_step_m,
+                          per_tti_fading=per_tti_fading, use_harq=use_harq)
+    state = sim.init_episode_state(key)
+    static = sim.episode_static()
+    state, tput = fns.rollout(static, state, n_tti)
     if sync_state:
-        if mobility_step_m is not None:
-            sim.set_UE_positions(U)
-        sim.buffer.set(buf)
-        sim._pf_avg = avg
-        sim.sched.cursor = int(cursor)
-        sim._harq_bits, sim._harq_retx = hbits, hretx
-        if sim.params.ho_enabled:
-            sim._ho_serving, sim._ho_ttt = a_srv, ttt
+        sim.sync_episode_state(state,
+                               positions=mobility_step_m is not None)
     return tput

@@ -1,0 +1,135 @@
+"""Named scenario presets: reproducible 3GPP-flavoured configurations.
+
+Calibrated-scenario simulators (Boeira et al.) and the digital-twin survey
+(Manalastas et al.) both show that *named, reproducible* presets are what
+make a system-level simulator usable for ML research at scale: an RL paper
+can say "trained on ``dense_urban``" and anyone can reconstruct the exact
+``CRRM_parameters``.  Each preset is a registry entry mapping a name to the
+keyword arguments of :class:`~repro.core.params.CRRM_parameters`; callers
+override any field (e.g. shrink ``n_ues`` for CI) without losing the
+preset's identity:
+
+>>> from repro.sim.scenarios import make_scenario
+>>> from repro.core.crrm import CRRM
+>>> sim = CRRM(make_scenario("dense_urban", n_ues=50))
+
+The presets follow the 3GPP TR 38.901 deployment archetypes in spirit
+(carrier, cell density, BS height, traffic mix), not to the letter -- they
+are scaled so every preset runs in seconds on a laptop while keeping the
+regime's qualitative behaviour (interference-limited urban, noise-limited
+rural, LOS-dominated indoor, mobility-driven handover churn).  The
+benchmark suite sweeps them (``benchmarks.paper_benches.env_episode``) and
+``repro.env.CrrmEnv`` accepts a scenario name directly.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.core.params import CRRM_parameters
+
+#: name -> (description, factory(**overrides) -> CRRM_parameters)
+_REGISTRY: Dict[str, tuple] = {}
+
+
+def register_scenario(name: str, description: str,
+                      factory: Callable[..., CRRM_parameters],
+                      overwrite: bool = False) -> None:
+    """Register a named scenario.  ``factory(**overrides)`` must return a
+    fresh ``CRRM_parameters``; user code can extend the registry with its
+    own presets (``overwrite=True`` to replace a stock one)."""
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"scenario {name!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    _REGISTRY[name] = (description, factory)
+
+
+def _preset(name: str, description: str, **base):
+    """Register a dict-based preset; overrides shallow-merge over ``base``."""
+    def factory(**overrides) -> CRRM_parameters:
+        kw = dict(base)
+        kw.update(overrides)
+        return CRRM_parameters(**kw)
+
+    register_scenario(name, description, factory)
+
+
+def scenario_names() -> tuple:
+    """Registered preset names, sorted."""
+    return tuple(sorted(_REGISTRY))
+
+
+def scenario_description(name: str) -> str:
+    return _get(name)[0]
+
+
+def _get(name: str):
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown scenario {name!r}; "
+                         f"have {list(scenario_names())}") from None
+
+
+def make_scenario(name: str, **overrides) -> CRRM_parameters:
+    """Construct the named preset's ``CRRM_parameters``.
+
+    ``overrides`` replace any preset field (validated by
+    ``CRRM_parameters.__post_init__`` as usual), so shrinking a scenario
+    for CI keeps its identity: ``make_scenario("rural_macro", n_ues=20)``.
+    """
+    return _get(name)[1](**overrides)
+
+
+# ---------------------------------------------------------------------------
+# stock presets
+# ---------------------------------------------------------------------------
+_preset(
+    "dense_urban",
+    "Interference-limited street-canyon microcells: 3-sector UMi sites at "
+    "3.5 GHz, frequency-selective fading with per-RB CQI, heavy Poisson "
+    "load on a PF scheduler.",
+    n_ues=200, n_cells=21, n_sectors=3, extent_m=1200.0,
+    pathloss_model_name="UMi", fc_GHz=3.5, h_bs_m=10.0,
+    power_W=6.3,                       # 38 dBm micro BS
+    rayleigh_fading=True, n_rb_subbands=4, coherence_rb=3,
+    scheduler_policy="pf", fairness_p=0.5,
+    traffic_model="poisson",
+    traffic_params=dict(arrival_rate_hz=400.0, packet_size_bits=12_000.0),
+    harq_bler=0.1, seed=0)
+
+_preset(
+    "rural_macro",
+    "Noise-limited wide-area coverage: RMa macro sites at 700 MHz over an "
+    "8 km extent, bursty FTP-3 file downloads, round-robin airtime.",
+    n_ues=120, n_cells=7, n_sectors=1, extent_m=8000.0,
+    pathloss_model_name="RMa", fc_GHz=0.7, h_bs_m=35.0,
+    power_W=40.0,                      # 46 dBm macro BS
+    scheduler_policy="rr",
+    traffic_model="ftp3",
+    traffic_params=dict(file_rate_hz=0.5, file_size_bits=4_000_000.0),
+    seed=0)
+
+_preset(
+    "indoor_hotspot",
+    "LOS-dominated office floor: InH ceiling cells at 3.5 GHz over a "
+    "120 m extent, full-buffer UEs on an opportunistic max-CQI scheduler "
+    "riding per-RB fading peaks.",
+    n_ues=40, n_cells=4, n_sectors=1, extent_m=120.0,
+    pathloss_model_name="InH", fc_GHz=3.5, h_bs_m=3.0, h_ut_m=1.0,
+    power_W=0.25,                      # 24 dBm pico BS
+    rayleigh_fading=True, n_rb_subbands=6, coherence_rb=1,
+    scheduler_policy="max_cqi", traffic_model="full_buffer", seed=0)
+
+_preset(
+    "handover_stress",
+    "Mobility-driven handover churn: dense UMa grid with A3 handover "
+    "(3 dB hysteresis, 4-TTI time-to-trigger) and HARQ; roll episodes "
+    "with mobility_step_m set to exercise the A3 state machine.",
+    n_ues=150, n_cells=19, n_sectors=1, extent_m=1500.0,
+    pathloss_model_name="UMa", fc_GHz=3.5, h_bs_m=25.0, power_W=10.0,
+    rayleigh_fading=True, attach_ignores_fading=True,
+    ho_enabled=True, ho_hysteresis_db=3.0, ho_ttt_tti=4,
+    harq_bler=0.1, scheduler_policy="pf",
+    traffic_model="poisson",
+    traffic_params=dict(arrival_rate_hz=300.0, packet_size_bits=12_000.0),
+    seed=0)

@@ -1,0 +1,338 @@
+"""ISSUE 3: functional episode-state API, batched CrrmEnv, scenario
+registry, the cqi_report knob, and the RootNode.set_at mutator."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.crrm import CRRM
+from repro.core.params import CRRM_parameters
+from repro.env import CrrmEnv
+from repro.sim import scenarios
+
+
+def _params(**kw):
+    base = dict(n_ues=20, n_cells=4, seed=7, pathloss_model_name="UMa",
+                power_W=10.0, traffic_model="poisson",
+                traffic_params=dict(arrival_rate_hz=300.0,
+                                    packet_size_bits=12_000.0))
+    base.update(kw)
+    return CRRM_parameters(**base)
+
+
+def _env(**kw):
+    env_kw = dict(episode_tti=30, tti_per_step=10)
+    for k in ("episode_tti", "tti_per_step", "per_tti_fading", "reward_fn"):
+        if k in kw:
+            env_kw[k] = kw.pop(k)
+    return CrrmEnv(_params(**kw), **env_kw)
+
+
+# ---------------------------------------------------- functional episode API
+def test_run_episode_is_thin_wrapper_over_rollout():
+    """The tentpole acceptance: run_episode == init_episode_state ->
+    rollout, bit-exactly (same program, same PRNG streams)."""
+    kw = dict(harq_bler=0.3, ho_enabled=True, n_rb_subbands=4,
+              rayleigh_fading=True)
+    a, b = CRRM(_params(**kw)), CRRM(_params(**kw))
+    t_wrapper = np.asarray(a.run_episode(40, sync_state=False))
+    fns = b.episode_fns()
+    state, tput = fns.rollout(b.episode_static(), b.init_episode_state(), 40)
+    np.testing.assert_array_equal(t_wrapper, np.asarray(tput))
+
+
+def test_episode_state_is_a_flat_pytree():
+    """EpisodeState must be a pytree of arrays -- vmap/checkpoint-able."""
+    sim = CRRM(_params())
+    state = sim.init_episode_state()
+    leaves = jax.tree_util.tree_leaves(state)
+    assert len(leaves) == 10
+    assert all(hasattr(x, "dtype") for x in leaves)
+    # round-trips through flatten/unflatten (what checkpointing does)
+    flat, treedef = jax.tree_util.tree_flatten(state)
+    state2 = jax.tree_util.tree_unflatten(treedef, flat)
+    assert type(state2) is type(state)
+
+
+def test_sync_episode_state_resumes_where_rollout_ended():
+    """Functional threading == the legacy write-back path."""
+    a, b = CRRM(_params()), CRRM(_params())
+    key = jax.random.PRNGKey(5)
+    a.run_episode(20, key=key)                       # legacy: sync_state
+    fns = b.episode_fns()
+    state, _ = fns.rollout(b.episode_static(), b.init_episode_state(key), 20)
+    b.sync_episode_state(state)
+    np.testing.assert_array_equal(np.asarray(a.get_backlog()),
+                                  np.asarray(b.get_backlog()))
+    np.testing.assert_array_equal(np.asarray(a._pf_avg),
+                                  np.asarray(b._pf_avg))
+    assert a.sched.cursor == b.sched.cursor
+
+
+def test_reset_episode_state_reseeds_from_graph():
+    sim = CRRM(_params())
+    sim.run_episode(10)
+    assert hasattr(sim, "_pf_avg")
+    sim.reset_episode_state()
+    assert not hasattr(sim, "_pf_avg")
+    # next init re-seeds the PF average at the stationary point
+    state = sim.init_episode_state()
+    np.testing.assert_array_equal(np.asarray(state.pf_avg),
+                                  np.asarray(sim.get_served_throughputs()))
+
+
+def test_step_action_overrides_power_and_none_keeps_static():
+    """A power action must change the radio chain; action=None must
+    reproduce the static-power program exactly."""
+    env = _env()
+    state0, _ = env.reset(jax.random.PRNGKey(0))
+    s_none, o_none, _, _ = env.step(state0, None)
+    s_base, o_base, _, _ = env.step(state0, env.uniform_action())
+    s_off, o_off, _, _ = env.step(state0, 0.01 * env.uniform_action())
+    # 1000x less power -> radically less delivered throughput
+    assert float(o_off.tput.sum()) < 0.8 * float(o_base.tput.sum())
+    # uniform action == the construction-time power plan (same physics,
+    # recomputed chain): throughputs agree to float tolerance
+    np.testing.assert_allclose(np.asarray(o_none.tput),
+                               np.asarray(o_base.tput), rtol=1e-4, atol=1.0)
+
+
+def test_step_enforces_per_cell_power_budget():
+    """Actions are requests: a cell asking for more than its budget is
+    scaled down, so an over-budget plan cannot out-reward the baseline
+    by cheating physics (10x uniform projects back onto uniform)."""
+    env = _env()
+    state0, _ = env.reset(jax.random.PRNGKey(0))
+    _, o_base, r_base, _ = env.step(state0, env.uniform_action())
+    _, o_cheat, r_cheat, _ = env.step(state0, 10.0 * env.uniform_action())
+    np.testing.assert_allclose(np.asarray(o_cheat.tput),
+                               np.asarray(o_base.tput), rtol=1e-5)
+    np.testing.assert_allclose(float(r_cheat), float(r_base), rtol=1e-5)
+
+
+# ----------------------------------------------------------- batched CrrmEnv
+def test_batched_reset_step_is_deterministic():
+    """Same seeds -> bit-identical batched trajectories, run to run."""
+    env = _env(rayleigh_fading=True, harq_bler=0.2)
+    keys = jax.random.split(jax.random.PRNGKey(3), 8)
+    acts = jnp.stack([env.uniform_action()] * 8)
+
+    def run():
+        states, obs = env.reset_batch(keys)
+        outs = []
+        for _ in range(3):
+            states, obs, rew, done = env.step_batch(states, acts)
+            outs.append(np.asarray(rew))
+        return np.stack(outs), np.asarray(obs.tput), np.asarray(done)
+
+    r1, t1, d1 = run()
+    r2, t2, d2 = run()
+    np.testing.assert_array_equal(r1, r2)
+    np.testing.assert_array_equal(t1, t2)
+    assert d1.shape == (8,) and d1.all() and (d1 == d2).all()
+
+
+def test_batch_row_matches_single_episode():
+    """vmap semantics: batch element i IS the single-env episode i."""
+    env = _env(harq_bler=0.3)
+    keys = jax.random.split(jax.random.PRNGKey(11), 8)
+    acts = jnp.stack([env.uniform_action()] * 8)
+    states, _ = env.reset_batch(keys)
+    states, obs, rew, _ = env.step_batch(states, acts)
+
+    s, _ = env.reset(keys[5])
+    s, o, r, _ = env.step(s, env.uniform_action())
+    np.testing.assert_allclose(np.asarray(obs.tput)[5], np.asarray(o.tput),
+                               rtol=1e-5, atol=1e-2)
+    np.testing.assert_allclose(float(np.asarray(rew)[5]), float(r),
+                               rtol=1e-5)
+
+
+def test_batched_step_traces_once_for_n_envs():
+    """jit cache stability: a batch of N episodes is ONE trace/program,
+    and re-stepping reuses it."""
+    env = _env()
+    calls = []
+
+    def counted_step(state, action):
+        calls.append(1)
+        return env.step(state, action)
+
+    stepped = jax.jit(jax.vmap(counted_step))
+    keys = jax.random.split(jax.random.PRNGKey(0), 8)
+    states, _ = env.reset_batch(keys)
+    acts = jnp.stack([env.uniform_action()] * 8)
+    out = stepped(states, acts)
+    out = stepped(out[0], acts)
+    jax.block_until_ready(out[1].tput)
+    assert len(calls) == 1, f"{len(calls)} traces for one batch shape"
+
+
+def test_env_done_fires_at_horizon():
+    env = _env(episode_tti=25, tti_per_step=10)
+    state, _ = env.reset(jax.random.PRNGKey(0))
+    dones = []
+    for _ in range(3):
+        state, _, _, done = env.step(state, env.uniform_action())
+        dones.append(bool(done))
+    assert dones == [False, False, True]
+    assert int(state.t) == 30
+
+
+def test_env_rejects_bad_construction():
+    with pytest.raises(ValueError, match="exactly one"):
+        CrrmEnv()
+    with pytest.raises(ValueError, match="exactly one"):
+        CrrmEnv(_params(), scenario="dense_urban")
+    with pytest.raises(ValueError, match="scenario_overrides"):
+        CrrmEnv(_params(), scenario_overrides=dict(n_ues=3))
+    with pytest.raises(ValueError, match=">= 1"):
+        CrrmEnv(_params(), episode_tti=0)
+
+
+# -------------------------------------------------------- scenario registry
+def test_scenario_registry_round_trips():
+    names = scenarios.scenario_names()
+    assert {"dense_urban", "rural_macro", "indoor_hotspot",
+            "handover_stress"} <= set(names)
+    for name in names:
+        p = scenarios.make_scenario(name, n_ues=8, n_cells=3)
+        assert isinstance(p, CRRM_parameters)
+        assert p.n_ues == 8 and p.n_cells == 3    # overrides apply
+        assert scenarios.scenario_description(name)
+        sim = CRRM(p)                              # constructs and queries
+        assert np.isfinite(np.asarray(sim.get_UE_throughputs())).all()
+    # factories return fresh objects: mutating one must not leak
+    a = scenarios.make_scenario("dense_urban")
+    b = scenarios.make_scenario("dense_urban")
+    assert a is not b and a.n_ues == b.n_ues
+
+
+def test_scenario_unknown_and_duplicate_registration():
+    with pytest.raises(ValueError, match="unknown scenario"):
+        scenarios.make_scenario("atlantis")
+    with pytest.raises(ValueError, match="already registered"):
+        scenarios.register_scenario(
+            "dense_urban", "dup", lambda **kw: CRRM_parameters(**kw))
+    scenarios.register_scenario(
+        "test_tmp", "a test preset",
+        lambda **kw: CRRM_parameters(n_ues=5, **kw))
+    try:
+        assert scenarios.make_scenario("test_tmp").n_ues == 5
+    finally:
+        scenarios._REGISTRY.pop("test_tmp")
+
+
+def test_env_from_scenario_name():
+    env = CrrmEnv(scenario="indoor_hotspot",
+                  scenario_overrides=dict(n_ues=10, n_cells=2),
+                  episode_tti=10, tti_per_step=5)
+    assert env.scenario == "indoor_hotspot" and env.n_ues == 10
+    state, _ = env.reset(jax.random.PRNGKey(0))
+    _, obs, reward, _ = env.step(state, env.uniform_action())
+    assert np.isfinite(float(reward))
+    assert (np.asarray(obs.tput) >= 0).all()
+
+
+# ------------------------------------------------------- gymnasium adapter
+def test_gym_adapter_protocol():
+    gymnasium = pytest.importorskip("gymnasium")
+    from repro.env.gym_adapter import make_gym_env
+    env = _env(episode_tti=20, tti_per_step=10)
+    genv = make_gym_env(env, seed=4)
+    assert isinstance(genv, gymnasium.Env)
+    obs, info = genv.reset()
+    assert obs.shape == (2 * env.n_ues,) and obs.dtype == np.float32
+    obs, reward, terminated, truncated, _ = genv.step(
+        np.asarray(env.uniform_action()))
+    assert not terminated and not truncated
+    assert genv.observation_space.contains(obs)
+    _, _, _, truncated, _ = genv.step(np.asarray(env.uniform_action()))
+    assert truncated                               # horizon reached
+
+
+def test_gym_adapter_reset_varies_and_seeds_reproduce():
+    """gymnasium contract: reset() continues the RNG stream (fresh
+    stochastic episodes), reset(seed=s) restarts it reproducibly."""
+    pytest.importorskip("gymnasium")
+    from repro.env.gym_adapter import make_gym_env
+    env = _env(episode_tti=20, tti_per_step=10, harq_bler=0.3)
+    genv = make_gym_env(env, seed=4)
+    act = np.asarray(env.uniform_action())
+
+    def episode_obs():
+        genv.reset()
+        obs, *_ = genv.step(act)
+        return obs
+
+    o1, o2 = episode_obs(), episode_obs()
+    assert not np.array_equal(o1, o2)              # unseeded: varied
+    genv.reset(seed=9)
+    oa, *_ = genv.step(act)
+    genv.reset(seed=9)
+    ob, *_ = genv.step(act)
+    np.testing.assert_array_equal(oa, ob)          # seeded: reproducible
+
+
+# ---------------------------------------------------------- cqi_report knob
+def test_wideband_report_is_noop_at_one_rb_subband():
+    """The ROADMAP equivalence gate: with n_rb_subbands=1 the reporting
+    knob must not change a single bit, graph or episode."""
+    kw = dict(n_rb_subbands=1, n_subbands=2, rayleigh_fading=True)
+    sub = CRRM(_params(cqi_report="subband", **kw))
+    wb = CRRM(_params(cqi_report="wideband", **kw))
+    np.testing.assert_array_equal(np.asarray(sub.get_CQI()),
+                                  np.asarray(wb.get_CQI()))
+    key = jax.random.PRNGKey(2)
+    np.testing.assert_array_equal(
+        np.asarray(sub.run_episode(30, key=key)),
+        np.asarray(wb.run_episode(30, key=key)))
+
+
+def test_wideband_report_decouples_reporting_from_fading():
+    """cqi_report='wideband': the channel stays frequency selective but
+    every chunk of a power subband reports the same CQI."""
+    kw = dict(n_ues=16, n_cells=3, n_subbands=2, n_rb_subbands=4,
+              coherence_rb=1, rayleigh_fading=True)
+    sim = CRRM(_params(cqi_report="wideband", **kw))
+    cqi = np.asarray(sim.get_CQI()).reshape(16, 2, 4)
+    assert (cqi == cqi[:, :, :1]).all()           # flat within a subband
+    # the underlying SINR is still selective
+    gamma = np.asarray(sim.get_SINR())
+    assert (gamma.std(axis=1) > 0).any()
+    # and the subband-reporting twin sees selective CQI for some UE
+    ref = CRRM(_params(cqi_report="subband", **kw))
+    cqi_sub = np.asarray(ref.get_CQI())
+    assert (cqi_sub.std(axis=1) > 0).any()
+
+
+def test_wideband_report_loses_frequency_opportunism():
+    """The physics the knob models: an opportunistic scheduler fed
+    wideband CQI cannot ride per-chunk fading peaks, so it delivers less
+    than one fed subband CQI on the same selective channel."""
+    kw = dict(n_ues=20, n_cells=3, seed=5, rayleigh_fading=True,
+              n_rb_subbands=12, coherence_rb=1, scheduler_policy="max_cqi",
+              traffic_model="full_buffer", traffic_params={})
+    key = jax.random.PRNGKey(11)
+    sub = CRRM(_params(cqi_report="subband", **kw))
+    wb = CRRM(_params(cqi_report="wideband", **kw))
+    t_sub = np.asarray(sub.run_episode(150, key=key, per_tti_fading=True))
+    t_wb = np.asarray(wb.run_episode(150, key=key, per_tti_fading=True))
+    assert t_sub.mean() > t_wb.mean() * 1.1, (t_sub.mean(), t_wb.mean())
+
+
+# ------------------------------------------------------- RootNode.set_at
+def test_rootnode_set_at_floods_dependents():
+    """The public element setter must invalidate downstream nodes exactly
+    like a whole-array set (P's rows are cells, not UEs)."""
+    sim = CRRM(_params(n_subbands=2))
+    t0 = np.asarray(sim.get_UE_throughputs())
+    sim.P.set_at((0, jnp.arange(2)), 0.001)
+    t1 = np.asarray(sim.get_UE_throughputs())
+    assert not np.allclose(t0, t1)
+    # equivalent fresh-constructed power plan agrees
+    P = np.full((4, 2), 5.0, np.float32)
+    P[0] = 0.001
+    ref = CRRM(_params(n_subbands=2, power_matrix=P))
+    np.testing.assert_allclose(t1, np.asarray(ref.get_UE_throughputs()),
+                               rtol=1e-6)
