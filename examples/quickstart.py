@@ -1,30 +1,34 @@
-"""CRRM quickstart: build a 7-site tri-sector network, inspect KPIs, move
-some UEs and watch the smart update do row-local work.
+"""CRRM quickstart: build a named scenario from the registry, inspect KPIs,
+move some UEs and watch the smart update do row-local work.
+
+Scenarios are the reproducible way to define a task: a preset name plus
+overrides reconstructs the exact ``CRRM_parameters`` anywhere
+(``sim/scenarios.py``).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
 from repro.core.crrm import CRRM
-from repro.core.params import CRRM_parameters
+from repro.sim.scenarios import make_scenario, scenario_description
 
-params = CRRM_parameters(
+# a 7-site tri-sector interference-limited microcell network: the
+# "dense_urban" preset, shrunk a little and reseeded -- overrides keep the
+# preset's identity (carrier, fading, scheduler) while adapting its scale
+params = make_scenario(
+    "dense_urban",
     n_ues=120,
     n_cells=21,                 # 7 hex sites x 3 sectors
-    n_sectors=3,
-    n_subbands=2,
-    pathloss_model_name="UMa",  # strategy pattern: try "RMa", "UMi", ...
-    power_W=20.0,
-    bandwidth_Hz=20e6,
-    fairness_p=0.5,
     seed=7,
 )
+print(f"scenario dense_urban: {scenario_description('dense_urban')}")
 sim = CRRM(params)
 
 tput = np.asarray(sim.get_UE_throughputs()) / 1e6
 sinr = np.asarray(sim.get_SINR_dB()).max(axis=1)
 print(f"network: {sim.n_ues} UEs x {sim.n_cells} cells "
-      f"({params.n_sectors}-sector), {params.n_subbands} subbands")
+      f"({params.n_sectors}-sector), {params.n_subbands} subbands x "
+      f"{params.n_rb_subbands} CQI subbands")
 print(f"median throughput {np.median(tput):6.1f} Mb/s   "
       f"cell-edge (p5) {np.percentile(tput, 5):5.1f} Mb/s")
 print(f"median SINR       {np.median(sinr):6.1f} dB")
@@ -32,8 +36,8 @@ print(f"median SINR       {np.median(sinr):6.1f} dB")
 # move 10% of UEs: only those rows recompute (the paper's smart update)
 moved = np.arange(12)
 sim.move_UEs(moved, np.column_stack([
-    np.random.default_rng(0).uniform(0, 3000, (12, 2)),
-    np.full((12, 1), 1.5)]).astype(np.float32))
+    np.random.default_rng(0).uniform(0, params.extent_m, (12, 2)),
+    np.full((12, 1), params.h_ut_m)]).astype(np.float32))
 tput2 = np.asarray(sim.get_UE_throughputs()) / 1e6
 print(f"after moving {len(moved)} UEs: median {np.median(tput2):6.1f} Mb/s")
 print("node update counts (full, row):")

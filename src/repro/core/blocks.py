@@ -8,6 +8,13 @@ whole (n_ue, n_cell) matrix and erase the smart-update win.
 Block list (paper §2): U, C, P roots -> D -> G -> R(SRP) -> a -> w, u ->
 gamma (SINR) -> CQI -> MCS -> SE -> Shannon, and the allocation/throughput
 terminal.
+
+The *math* of every radio block lives in the pure-functional chain of
+``repro.sim.radio`` (DESIGN.md §Radio-fns); this module owns only the
+smart-update caching shell -- dirty-row bookkeeping, in-place row patches,
+and the jit wrappers that bind the pure functions to node buffers.  The
+graph, the scan-compiled TTI engine and the env therefore share one
+implementation of the physics and stay bit-exact with each other.
 """
 from __future__ import annotations
 
@@ -19,23 +26,18 @@ import numpy as np
 
 from repro.core.graph import ALL, Node, RootNode
 from repro.mac import scheduler as mac_sched
-from repro.sim import phy
+from repro.sim import radio
 from repro.sim.antenna import Antenna_gain
 
 
 # ---------------------------------------------------------------------------
-# jitted math helpers (module level so compilations are shared across sims)
+# jitted wrappers over the pure radio functions.  These are radio.*_jit
+# SHARED executables (module level in sim.radio), so the graph, an eager
+# radio.radio_forward and any other consumer dispatch the same compiled
+# programs -- which is what makes the graph-vs-radio_forward equivalence
+# bit-exact rather than merely close (tests/test_radio_fns.py).
 # ---------------------------------------------------------------------------
-@jax.jit
-def _geometry(U, C):
-    """(d2d, d3d, az): 2-D/3-D distances and the cell->UE bearing."""
-    dx = U[:, None, 0] - C[None, :, 0]
-    dy = U[:, None, 1] - C[None, :, 1]
-    dz = U[:, None, 2] - C[None, :, 2]
-    d2d = jnp.sqrt(dx * dx + dy * dy)
-    d3d = jnp.sqrt(d2d * d2d + dz * dz)
-    az = jnp.arctan2(dy, dx)
-    return d2d, d3d, az
+_geometry = radio.geometry_jit
 
 
 @partial(jax.jit, donate_argnums=(3, 4, 5))
@@ -44,17 +46,7 @@ def _geometry_rows(U, C, idx, d2d, d3d, az):
     return (d2d.at[idx].set(r2d), d3d.at[idx].set(r3d), az.at[idx].set(raz))
 
 
-@jax.jit
-def _rsrp(G, P):
-    """R[i, j, k] = p_jk * G_ijk  (stacked per-frequency blocks of Fig. 1).
-
-    ``G`` is (n_ue, n_cell) for the flat wideband channel or (n_ue, n_cell,
-    n_freq) when fading is frequency selective; the branch is resolved at
-    trace time (jit re-specialises per rank).
-    """
-    if G.ndim == 3:
-        return G * P[None, :, :]
-    return G[:, :, None] * P[None, :, :]
+_rsrp = radio.rsrp_jit
 
 
 @partial(jax.jit, donate_argnums=(3,))
@@ -63,114 +55,63 @@ def _rsrp_rows(G, P, idx, R):
     return R.at[idx].set(rows * P[None, :, :])
 
 
-@jax.jit
-def _attach(R):
-    """Serve each UE from the cell with the largest wideband RSRP."""
-    return jnp.argmax(R.sum(axis=2), axis=1).astype(jnp.int32)
+_attach = radio.attach_jit
 
 
 @partial(jax.jit, donate_argnums=(2,))
 def _attach_rows(R, idx, a):
-    return a.at[idx].set(jnp.argmax(R[idx].sum(axis=2), axis=1).astype(jnp.int32))
+    return a.at[idx].set(radio.attachment(R[idx]))
 
 
-@jax.jit
-def _wanted(R, a):
-    return jnp.take_along_axis(R, a[:, None, None], axis=1)[:, 0, :]
+_wanted = radio.wanted_jit
 
 
 @partial(jax.jit, donate_argnums=(3,))
 def _wanted_rows(R, a, idx, w):
-    rows = jnp.take_along_axis(R[idx], a[idx][:, None, None], axis=1)[:, 0, :]
-    return w.at[idx].set(rows)
+    return w.at[idx].set(radio.wanted(R[idx], a[idx]))
 
 
-@jax.jit
-def _interference(R, w):
-    """u[i, k] = sum_j R[i, j, k] - w[i, k]."""
-    return R.sum(axis=1) - w
+_interference = radio.interference_jit
 
 
 @partial(jax.jit, donate_argnums=(3,))
 def _interference_rows(R, w, idx, u):
-    return u.at[idx].set(R[idx].sum(axis=1) - w[idx])
+    return u.at[idx].set(radio.interference(R[idx], w[idx]))
 
 
 def _sinr_fn(noise_w):
-    @jax.jit
     def f(w, u):
-        return w / (noise_w + u)
+        return radio.sinr_jit(w, u, noise_w)
 
     @partial(jax.jit, donate_argnums=(3,))
     def f_rows(w, u, idx, g):
-        return g.at[idx].set(w[idx] / (noise_w + u[idx]))
+        return g.at[idx].set(radio.sinr_from_wu(w[idx], u[idx], noise_w))
 
     return f, f_rows
 
 
-@jax.jit
-def _cqi(gamma):
-    return phy.sinr_db_to_cqi(phy.sinr_to_db(gamma))
+_cqi = radio.cqi_jit
 
 
 @partial(jax.jit, donate_argnums=(2,))
 def _cqi_rows(gamma, idx, cqi):
-    return cqi.at[idx].set(_cqi(gamma[idx]))
+    return cqi.at[idx].set(radio.quantize_cqi(gamma[idx]))
 
 
-def _pool_report(gamma, n_rb_subbands: int, eesm_beta: float = 1.0):
-    """Effective SINR at per-power-subband *reporting* resolution (EESM).
-
-    Pools each power subband's ``n_rb_subbands`` CQI chunks with the
-    exponential effective-SINR map (EESM, the standard link-abstraction
-    for wideband CQI feedback on a selective channel):
-
-        gamma_eff = -beta * log( mean_k exp(-gamma_k / beta) )
-
-    which is dominated by the *faded* chunks -- a single wideband MCS must
-    survive the whole allocation, so the report is conservative (a linear
-    mean would Jensen-inflate it and wideband reporting would spuriously
-    *beat* subband reporting).  Computed via logsumexp for stability at
-    the large linear SINRs the chain produces; broadcast back onto the
-    full frequency grid so downstream shapes are unchanged.
-    Rank-polymorphic over leading axes (works on the (n_ue, n_freq) chain
-    and the engine's tabulated (n_ue, n_cell, n_freq) tensors alike).
-    """
-    s = n_rb_subbands
-    shp = gamma.shape
-    g = gamma.reshape(shp[:-1] + (shp[-1] // s, s))
-    eff = -eesm_beta * (jax.scipy.special.logsumexp(-g / eesm_beta, axis=-1)
-                        - jnp.log(float(s)))
-    return jnp.broadcast_to(eff[..., None], eff.shape + (s,)).reshape(shp)
+#: back-compat alias -- the EESM pooling/reporting math moved to
+#: repro.sim.radio (single source of truth for graph + engine + env)
+_cqi_report = radio.cqi_report
 
 
-def _cqi_report(gamma, n_rb_subbands: int, wideband: bool,
-                eesm_beta: float = 1.0):
-    """CQI at the configured reporting resolution (``cqi_report`` knob).
-
-    ``wideband`` decouples reporting from fading resolution: the SINR is
-    EESM-pooled per power subband before quantisation, so every chunk of
-    a subband reports the same CQI.  At ``n_rb_subbands=1`` (or subband
-    reporting) this is exactly the legacy per-chunk ``_cqi``.
-    """
-    if wideband and n_rb_subbands > 1:
-        return _cqi(_pool_report(gamma, n_rb_subbands, eesm_beta))
-    return _cqi(gamma)
-
-
-@jax.jit
-def _mcs(cqi):
-    return phy.cqi_to_mcs(cqi)
+_mcs = radio.mcs_jit
 
 
 @partial(jax.jit, donate_argnums=(2,))
 def _mcs_rows(cqi, idx, mcs):
-    return mcs.at[idx].set(phy.cqi_to_mcs(cqi[idx]))
+    return mcs.at[idx].set(radio.mcs_of(cqi[idx]))
 
 
-@jax.jit
-def _se(mcs, cqi):
-    return jnp.where(cqi > 0, phy.mcs_to_efficiency(mcs), 0.0)
+_se = radio.se_jit
 
 
 @partial(jax.jit, donate_argnums=(3,))
@@ -250,17 +191,10 @@ class GainNode(Node):
         self.D, self.U, self.C = D, U, C
         self.boresight, self.fading = boresight, fading
 
-        def gain(d2d, d3d, az, h_ut, h_bs, bore, fad):
-            g = pathgain_function(d2d, d3d, h_bs[None, :], h_ut[:, None])
-            if n_sectors > 1:
-                g = g * antenna.gain_linear(az, bore)
-            if fad.ndim == g.ndim + 1:       # frequency-selective fading
-                g = g[..., None]
-            return g * fad
+        gain = radio.make_gain_fn(pathgain_function, antenna, n_sectors)
 
-        self._full = jax.jit(
-            lambda U, C, d2d, d3d, az, bore, fad:
-            gain(d2d, d3d, az, U[:, 2], C[:, 2], bore, fad))
+        self._full = partial(radio.gain_jit, pathgain_function, antenna,
+                             n_sectors)
         self._rows = jax.jit(
             lambda U, C, d2d, d3d, az, bore, fad, idx, G:
             G.at[idx].set(gain(d2d[idx], d3d[idx], az[idx], U[idx, 2],
@@ -365,7 +299,7 @@ class CQINode(Node):
     """CQI at the configured reporting resolution (``cqi_report`` knob).
 
     ``wideband=True`` pools each power subband's ``n_rb_subbands`` chunks
-    to one effective-SINR report (``_pool_report``); the default is the
+    to one effective-SINR report (``radio.pool_report``); the default is the
     legacy per-chunk quantisation (shared jitted helpers).
     """
 
@@ -377,8 +311,8 @@ class CQINode(Node):
         self.watch(gamma)
         self.gamma = gamma
         if wideband and n_rb_subbands > 1:
-            self._full = jax.jit(
-                lambda g: _cqi_report(g, n_rb_subbands, True, eesm_beta))
+            self._full = lambda g: radio.cqi_report_jit(
+                g, n_rb_subbands, True, eesm_beta)
             self._rows = jax.jit(
                 lambda g, idx, cqi: cqi.at[idx].set(
                     _cqi_report(g[idx], n_rb_subbands, True, eesm_beta)),

@@ -21,7 +21,7 @@ from repro.core import blocks
 from repro.core.graph import Graph, RootNode
 from repro.core.params import CRRM_parameters
 from repro.mac import traffic
-from repro.sim import deploy, fading
+from repro.sim import deploy, radio
 from repro.sim.antenna import Antenna_gain, sector_boresights
 from repro.sim.pathloss import make_pathloss
 
@@ -71,16 +71,24 @@ class CRRM:
                           p.power_W / self.n_freq, dtype=jnp.float32)
 
         bore0 = sector_boresights(self.n_cells // p.n_sectors, p.n_sectors)
-        if p.rayleigh_fading and p.n_rb_subbands > 1:
-            # frequency-selective: per-RB block fading over the whole grid,
-            # reported at CQI-subband resolution (n_ue, n_cell, n_freq)
-            F0 = fading.subband_rayleigh_power(
-                k_fad, self.n_ues, self.n_cells, p.n_subbands * p.n_rb,
-                p.coherence_rb, self.n_freq)
-        elif p.rayleigh_fading:
-            F0 = fading.rayleigh_power(k_fad, (self.n_ues, self.n_cells))
+
+        # the strategy pattern: model name -> class -> bound pathgain_function
+        self.pathloss_model = make_pathloss(p.pathloss_model_name,
+                                            **p.pathloss_params)
+        self.pathgain_function = self.pathloss_model.get_pathgain
+        antenna = Antenna_gain(phi_3dB_deg=p.antenna_phi_3dB_deg,
+                               A_max_dB=p.antenna_A_max_dB)
+        self.antenna = antenna
+        #: the hashable pure-radio configuration (sim.radio) every
+        #: consumer -- graph nodes, TTI engine, env resets -- derives from
+        self._radio_cfg = radio.config_from_params(
+            p, self.pathgain_function, antenna)
+
+        if p.rayleigh_fading:
+            F0 = radio.draw_fading(self._radio_cfg, k_fad, self.n_ues,
+                                   self.n_cells)
         else:
-            F0 = jnp.ones((self.n_ues, self.n_cells), dtype=jnp.float32)
+            F0 = radio.unit_fading(self._radio_cfg, self.n_ues, self.n_cells)
 
         # -- graph ------------------------------------------------------------
         g = Graph(smart=p.smart)
@@ -90,13 +98,6 @@ class CRRM:
         self.P = g.add(RootNode("P", P0))
         self.boresight = g.add(RootNode("boresight", bore0))
         self.fading = g.add(RootNode("fading", F0))
-
-        # the strategy pattern: model name -> class -> bound pathgain_function
-        self.pathloss_model = make_pathloss(p.pathloss_model_name,
-                                            **p.pathloss_params)
-        self.pathgain_function = self.pathloss_model.get_pathgain
-        antenna = Antenna_gain(phi_3dB_deg=p.antenna_phi_3dB_deg,
-                               A_max_dB=p.antenna_A_max_dB)
 
         self.D = g.add(blocks.DistanceNode(self.U, self.C))
         self.G = g.add(blocks.GainNode(
@@ -180,14 +181,12 @@ class CRRM:
         self.P.set_at((j, cols), watts / s)
 
     def resample_fading(self, key) -> None:
-        p = self.params
-        if p.n_rb_subbands > 1:
-            self.fading.set(fading.subband_rayleigh_power(
-                key, self.n_ues, self.n_cells, p.n_subbands * p.n_rb,
-                p.coherence_rb, self.n_freq))
-        else:
-            self.fading.set(fading.rayleigh_power(
-                key, (self.n_ues, self.n_cells)))
+        """Redraw the fast-fading root via the ONE documented fading draw
+        (``radio.draw_fading``) -- the same stream the episode engine's
+        per-TTI redraw and the env's topology resets consume, so equal keys
+        give bit-identical fading everywhere."""
+        self.fading.set(radio.draw_fading(self._radio_cfg, key, self.n_ues,
+                                          self.n_cells))
 
     def add_traffic(self, idx, bits) -> None:
         """Queue arrival bits onto selected UEs (row-local MAC flood)."""
@@ -252,6 +251,21 @@ class CRRM:
         """(n_ue,) bits/s through the MAC chain (grant capped by backlog)."""
         return self.served.update().sum(axis=1)
 
+    # ---------------------------------------------------------------- pure radio
+    def radio_config(self) -> "radio.RadioConfig":
+        """The hashable pure-radio configuration bound to this simulator's
+        pathloss/antenna closures (``repro.sim.radio``)."""
+        return self._radio_cfg
+
+    def radio_static(self) -> "radio.RadioStatic":
+        """The :class:`~repro.sim.radio.RadioStatic` pytree for the current
+        graph roots (cell positions, powers, boresights).  Pure data + a
+        static config: hand it to ``radio.radio_forward`` to run the whole
+        chain for arbitrary UE positions without touching the graph."""
+        return radio.RadioStatic(C=self.C._data, P=self.P._data,
+                                 bore=self.boresight._data,
+                                 cfg=self._radio_cfg)
+
     # ------------------------------------------------------------------ episodes
     def init_episode_state(self, key=None):
         """Gather the full episode carry as an explicit ``EpisodeState``.
@@ -267,8 +281,7 @@ class CRRM:
         """
         from repro.mac.engine import EpisodeState
         if key is None:
-            key = jax.random.fold_in(jax.random.PRNGKey(self.params.seed),
-                                     0x6d6163)   # "mac"
+            key = radio.episode_key(self.params.seed)
         n = self.n_ues
         avg0 = getattr(self, "_pf_avg", None)
         if avg0 is None:
@@ -304,16 +317,19 @@ class CRRM:
             bore=self.boresight._data, fad=self.fading._data)
 
     def episode_fns(self, mobility_step_m=None, per_tti_fading: bool = False,
-                    use_harq=None):
+                    use_harq=None, mesh=None, ue_axis=("ue",)):
         """The pure ``(step, rollout)`` episode functions for this
         simulator's topology and MAC parameters (``EpisodeFns``), cached
         per trace-time switch combination.  Both are jit-compiled and
         vmap-compatible: N parallel episodes = ``vmap`` over the state
-        (see ``repro.env.CrrmEnv``)."""
+        (see ``repro.env.CrrmEnv``).  ``mesh`` shard_maps the rollout over
+        the UE axis of a device mesh (``ue_axis`` names the mesh axes) for
+        >100k-UE episodes -- see DESIGN.md §Radio-fns."""
         from repro.mac import engine as mac_engine
         return mac_engine.episode_fns_for(
             self, mobility_step_m=mobility_step_m,
-            per_tti_fading=per_tti_fading, use_harq=use_harq)
+            per_tti_fading=per_tti_fading, use_harq=use_harq,
+            mesh=mesh, ue_axis=ue_axis)
 
     def sync_episode_state(self, state, positions: bool = False) -> None:
         """Write a final ``EpisodeState`` back into the graph (legacy

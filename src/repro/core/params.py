@@ -94,6 +94,12 @@ class CRRM_parameters:
     #: conditional BLER by ``10^(gain/10)`` -- delivery probability is
     #: monotone in the retx count (tested).
     harq_comb_gain_db: float = 3.0
+    #: baked-in mobility trajectory: per-TTI random-walk step bound in
+    #: metres for *every* UE inside the episode engine (scenario presets
+    #: with mobility, e.g. ``dense_urban_mobile``).  ``None``/``0`` = static
+    #: geometry; an explicit ``mobility_step_m`` argument to
+    #: ``run_episode``/``episode_fns`` overrides it (``0`` forces static).
+    mobility_step_m: Optional[float] = None
     #: A3-style handover inside the episode engine.  Disabled (False), the
     #: serving cell is the instantaneous strongest cell, recomputed per TTI
     #: when the channel is dynamic -- the legacy PR-1 behaviour.
@@ -141,6 +147,8 @@ class CRRM_parameters:
             raise ValueError("harq_max_retx must be >= 0")
         if self.harq_comb_gain_db < 0.0:
             raise ValueError("harq_comb_gain_db must be >= 0")
+        if self.mobility_step_m is not None and self.mobility_step_m < 0.0:
+            raise ValueError("mobility_step_m must be >= 0 (or None)")
         if self.ho_hysteresis_db < 0.0:
             raise ValueError("ho_hysteresis_db must be >= 0")
         if self.ho_ttt_tti < 1:

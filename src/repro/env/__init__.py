@@ -7,4 +7,5 @@
 off-the-shelf RL frameworks (import-gated: gymnasium is not a hard
 dependency).  See DESIGN.md §Env-API.
 """
-from repro.env.crrm_env import CrrmEnv, EnvObs, buffer_aware_reward  # noqa: F401
+from repro.env.crrm_env import (CrrmEnv, EnvObs, TopoEnvState,  # noqa: F401
+                                buffer_aware_reward)

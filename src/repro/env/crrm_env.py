@@ -3,8 +3,8 @@
 The RL integration the paper targets, as a *pure-functional* env (the
 gymnasium adapter in ``repro.env.gym_adapter`` is a thin stateful shim):
 
-* ``reset(key) -> (EpisodeState, EnvObs)`` and
-  ``step(state, action) -> (EpisodeState, EnvObs, reward, done)`` are pure
+* ``reset(key) -> (state, EnvObs)`` and
+  ``step(state, action) -> (state, EnvObs, reward, done)`` are pure
   functions of their arguments -- no hidden attributes, so episodes can be
   checkpointed, replayed, or driven by any external RL loop;
 * both ``vmap`` over the state (and action) axis: ``reset_batch`` /
@@ -17,11 +17,22 @@ gymnasium adapter in ``repro.env.gym_adapter`` is a thin stateful shim):
   of the scan-compiled MAC engine and observes the delivered throughput
   and residual backlog.
 
-The radio topology (positions, cells, fading draw) is frozen at
-construction from the underlying ``CRRM`` graph -- batching is over
-*episode randomness* (traffic arrivals, HARQ outcomes, per-TTI fading),
-which is exactly the Monte-Carlo axis RL training sweeps.  Construct from
-explicit ``CRRM_parameters`` or a named preset of
+Two batching axes (DESIGN.md §Radio-fns):
+
+* default (``resample_topology=False``): the radio topology (positions,
+  cells, fading draw) is frozen at construction from the underlying
+  ``CRRM`` graph -- batching is over *episode randomness* (traffic
+  arrivals, HARQ outcomes, per-TTI fading), the Monte-Carlo axis RL
+  training sweeps.  The threaded state is a bare ``EpisodeState``.
+* ``resample_topology=True``: every ``reset`` redraws the UE field (the
+  PPP-conditioned uniform draw of the deploy config) and the fading from
+  its seed, recomputes the whole radio chain *inside reset* with the pure
+  ``radio.radio_forward``, and threads the per-episode radio inputs
+  alongside the MAC state as a :class:`TopoEnvState`.  ``reset_batch`` /
+  ``step_batch`` then vmap over *topologies*: N seeds = N different UE
+  fields, one compiled program.
+
+Construct from explicit ``CRRM_parameters`` or a named preset of
 ``repro.sim.scenarios``:
 
 >>> env = CrrmEnv(scenario="dense_urban", scenario_overrides=dict(n_ues=50))
@@ -37,6 +48,7 @@ import jax.numpy as jnp
 
 from repro.core.crrm import CRRM
 from repro.core.params import CRRM_parameters
+from repro.sim import radio
 
 
 class EnvObs(NamedTuple):
@@ -49,6 +61,19 @@ class EnvObs(NamedTuple):
 
     tput: Any
     backlog: Any
+
+
+class TopoEnvState(NamedTuple):
+    """The threaded state of a topology-resampling episode.
+
+    The mutable MAC carry (``ep``: an ``EpisodeState``) plus the episode's
+    own radio inputs (``static``: an ``EpisodeStatic`` recomputed by
+    ``reset`` for its topology draw).  A plain pytree, so batches of
+    episodes -- each with its *own* UE field -- vmap as one program.
+    """
+
+    ep: Any
+    static: Any
 
 
 def buffer_aware_reward(obs: EnvObs):
@@ -83,6 +108,11 @@ class CrrmEnv:
     per_tti_fading:
         Redraw fast fading every TTI inside the scan (otherwise the
         construction-time draw stays frozen).
+    resample_topology:
+        Redraw the UE field + fading per ``reset`` seed and recompute the
+        radio chain inside ``reset`` (``radio.radio_forward``): batching
+        over *topologies*, not just episode randomness.  The threaded
+        state becomes a :class:`TopoEnvState`.
     reward_fn:
         ``EnvObs -> scalar``; defaults to :func:`buffer_aware_reward`.
     """
@@ -91,7 +121,8 @@ class CrrmEnv:
                  scenario: Optional[str] = None,
                  scenario_overrides: Optional[dict] = None,
                  episode_tti: int = 200, tti_per_step: int = 20,
-                 per_tti_fading: bool = False, reward_fn=None):
+                 per_tti_fading: bool = False,
+                 resample_topology: bool = False, reward_fn=None):
         if (params is None) == (scenario is None):
             raise ValueError("pass exactly one of params= or scenario=")
         if scenario is not None:
@@ -104,6 +135,7 @@ class CrrmEnv:
         self.scenario = scenario
         self.episode_tti = int(episode_tti)
         self.tti_per_step = int(tti_per_step)
+        self.resample_topology = bool(resample_topology)
         self.sim = CRRM(params)
         self.params = self.sim.params
         self.n_ues, self.n_cells = self.sim.n_ues, self.sim.n_cells
@@ -111,6 +143,7 @@ class CrrmEnv:
         self._reward_fn = reward_fn or buffer_aware_reward
         self._fns = self.sim.episode_fns(per_tti_fading=per_tti_fading)
         self._static = self.sim.episode_static()
+        self._radio_static = self.sim.radio_static()
         # the reset template: PF EWMA seeded at the stationary alpha-fair
         # point, empty HARQ processes, attachment-serving, t=0
         self._state0 = self.sim.init_episode_state()
@@ -154,16 +187,54 @@ class CrrmEnv:
         return action
 
     # ---------------------------------------------------------- pure core
-    def reset(self, key):
-        """Start one episode: ``(EpisodeState, EnvObs)`` for this seed.
+    def _resampled_reset(self, key):
+        """Draw a topology from ``key`` and run the radio chain on it.
 
-        Pure -- the template state is frozen at construction; only the
-        PRNG key (traffic, HARQ, per-TTI fading randomness) varies per
-        episode, so ``jax.vmap(env.reset)(keys)`` batches cleanly.
+        The key convention (``radio.reset_keys``) splits the seed into
+        (topology, fading, episode) streams; the UE field is the same
+        PPP-conditioned uniform draw the ``CRRM`` constructor uses, the
+        fading comes from the ONE documented draw (``radio.draw_fading``),
+        and the chain itself is one pure ``radio.radio_forward`` call --
+        no graph, so the whole reset jits and vmaps.
         """
-        state = self._state0._replace(key=key)
+        p = self.params
+        k_topo, k_fad, k_ep = radio.reset_keys(key)
+        from repro.sim.deploy import ppp_points
+        U = ppp_points(k_topo, self.n_ues, p.extent_m, z=p.h_ut_m)
+        cfg = self._radio_static.cfg
+        if p.rayleigh_fading:
+            fad = radio.draw_fading(cfg, k_fad, self.n_ues, self.n_cells)
+        else:
+            fad = radio.unit_fading(cfg, self.n_ues, self.n_cells)
+        out = radio.radio_forward(self._radio_static, U, fad=fad)
+        static = self._static._replace(se=out.se, cqi=out.cqi, a=out.a,
+                                       fad=fad)
+        # seed the PF EWMA at this topology's stationary alpha-fair point
+        # (the pure twin of what init_episode_state reads off the graph)
+        from repro.mac.engine import stationary_served_tput
+        pf0 = stationary_served_tput(p, self.n_cells, out.se, out.cqi,
+                                     out.a, self._state0.backlog)
+        ep = self._state0._replace(U=U, key=k_ep, pf_avg=pf0, serving=out.a)
+        return TopoEnvState(ep=ep, static=static)
+
+    def reset(self, key):
+        """Start one episode: ``(state, EnvObs)`` for this seed.
+
+        Pure.  Default: the template state is frozen at construction and
+        only the PRNG key (traffic, HARQ, per-TTI fading randomness)
+        varies per episode.  With ``resample_topology=True`` the UE field
+        and fading are redrawn from the seed and the radio chain is
+        recomputed here (one ``radio.radio_forward``), so
+        ``jax.vmap(env.reset)(keys)`` batches over *topologies*.
+        """
+        if self.resample_topology:
+            state = self._resampled_reset(key)
+            backlog = state.ep.backlog
+        else:
+            state = self._state0._replace(key=key)
+            backlog = state.backlog
         obs = EnvObs(tput=jnp.zeros((self.n_ues,), jnp.float32),
-                     backlog=state.backlog)
+                     backlog=backlog)
         return state, obs
 
     def step(self, state, action=None):
@@ -174,12 +245,19 @@ class CrrmEnv:
         Returns ``(state, EnvObs, reward, done)``; pure and vmap-able over
         ``(state, action)``.
         """
+        if self.resample_topology:
+            ep, static = state.ep, state.static
+        else:
+            ep, static = state, self._static
         power = None if action is None else self._expand_action(action)
-        state, tput = self._fns.rollout(self._static, state,
-                                        self.tti_per_step, power)
-        obs = EnvObs(tput=tput.mean(axis=0), backlog=state.backlog)
+        ep, tput = self._fns.rollout(static, ep, self.tti_per_step, power)
+        obs = EnvObs(tput=tput.mean(axis=0), backlog=ep.backlog)
         reward = self._reward_fn(obs)
-        done = state.t >= self.episode_tti
+        done = ep.t >= self.episode_tti
+        if self.resample_topology:
+            state = TopoEnvState(ep=ep, static=static)
+        else:
+            state = ep
         return state, obs, reward, done
 
     # ------------------------------------------------------------- batched
@@ -193,7 +271,9 @@ class CrrmEnv:
         return self._batched[name]
 
     def reset_batch(self, keys):
-        """N parallel episodes from N seeds: one compiled program."""
+        """N parallel episodes from N seeds: one compiled program.  With
+        ``resample_topology`` each seed owns its own UE field -- the batch
+        axis runs over topologies."""
         return self._vmapped("reset")(keys)
 
     def step_batch(self, states, actions=None):

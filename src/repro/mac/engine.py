@@ -13,6 +13,11 @@ and rolls N TTIs with ``jax.lax.scan``: one trace, one XLA program, zero
 per-TTI Python (DESIGN.md §TTI-engine, §Env-API).  A 1000-UE x 1000-TTI
 episode is a single device launch.
 
+The radio *math* inside the scan is not the engine's: every D/G/RSRP/SINR/
+CQI/SE evaluation delegates to the pure chain of ``repro.sim.radio``
+(DESIGN.md §Radio-fns), the same functions the smart-update graph nodes
+wrap -- one implementation, bit-exact across graph, engine and env.
+
 The episode API is pure-functional (DESIGN.md §Env-API):
 
 * :class:`EpisodeState` -- everything the scan carry needs, as a pytree.
@@ -40,7 +45,7 @@ disabled configuration compiles to exactly the legacy program:
   pick *which* RBs each UE gets.  ``n_rb_subbands=1`` is the wideband path.
   ``cqi_report="wideband"`` decouples *reporting* from fading resolution:
   the channel stays selective but CQI/MCS collapse to one report per power
-  subband (blocks._pool_report).
+  subband (radio.pool_report).
 * stop-and-wait HARQ (``harq_bler > 0``): per-UE process state (pending TB
   bits, retx count) rides in the carry; failed TBs retransmit with a
   soft-combining SINR gain per attempt until ``harq_max_retx`` is exhausted.
@@ -55,11 +60,29 @@ Channel regimes:
 * static (no mobility, no per-TTI fading, no power action): the radio chain
   (se, cqi, a) is read once from ``EpisodeStatic`` -- the scan body is
   MAC-only math;
-* dynamic (``mobility_step_m`` set, ``per_tti_fading``, or a power
-  ``action``): the radio chain is recomputed inside the scan from the same
-  jitted block helpers the graph nodes use, so both paths share one
-  implementation.  A non-None ``action`` is a per-episode (n_cells, n_freq)
-  power matrix overriding ``static.P`` -- the RL power-control hook.
+* dynamic (``mobility_step_m`` set -- explicitly or via
+  ``params.mobility_step_m`` (scenario presets with a baked-in mobility
+  trajectory), ``per_tti_fading``, or a power ``action``): the radio chain
+  is recomputed inside the scan from the pure ``sim.radio`` functions, so
+  both paths share one implementation.  A non-None ``action`` is a
+  per-episode (n_cells, n_freq) power matrix overriding ``static.P`` -- the
+  RL power-control hook.
+
+Mesh sharding (``mesh=``): the rollout runs under ``shard_map`` with the UE
+axis of every per-UE tensor sharded over the named mesh axes (cells are
+replicated).  The per-UE MAC math is embarrassingly parallel; the only
+cross-shard traffic is the scheduler's per-cell reductions
+(``mac.scheduler`` with ``ue_axis=``, reusing the mesh helpers and
+cross-shard argmax of ``core.distributed``).  Per-UE PRNG draws are taken
+from the *global* stream and sliced to the local block, so a sharded
+episode matches the single-device rollout (asserted in
+tests/test_radio_fns.py and gated in ``benchmarks/BENCH_sharded.json``):
+*bitwise* for the integer-exact schedulers (rr, max_cqi) and to 1e-5 for
+pf, whose cross-shard ``psum`` reorders a float reduction.  (Under bursty
+traffic, pf's ulp-level residues can flip backlog-active masks and the
+trajectories then diverge chaotically -- inherent to any reduction
+reordering, not a sharding bug; the equivalence suite pins the
+non-chaotic regimes.)
 
 All mutable simulator state (positions, powers, fading, radio outputs)
 enters the compiled episode as *arguments*, never as baked-in constants, so
@@ -71,11 +94,11 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PSpec
 
-from repro.core import blocks
+from repro.core.distributed import _axis_index, _pvary, _shard_map
 from repro.mac import scheduler as mac_sched
-from repro.sim import fading as fading_mod
-from repro.sim import mobility
+from repro.sim import mobility, radio
 
 
 class EpisodeState(NamedTuple):
@@ -92,7 +115,7 @@ class EpisodeState(NamedTuple):
     backlog: Any     # (n_ues,) queued bits (inf = full buffer)
     pf_avg: Any      # (n_ues,) PF EWMA average delivered rate, bits/s
     rr_cursor: Any   # i32 scalar: round-robin rotation state
-    key: Any         # PRNG key; per-TTI streams are folded from (key, t)
+    key: Any         # PRNG key; per-TTI streams fold via radio.tti_keys
     harq_bits: Any   # (n_ues,) f32 pending transport-block bits (0 = idle)
     harq_retx: Any   # (n_ues,) i32 retransmission count of the pending TB
     serving: Any     # (n_ues,) i32 serving-cell index (A3 carried state)
@@ -105,7 +128,9 @@ class EpisodeStatic(NamedTuple):
 
     The cached single-shot radio chain (``se``/``cqi``/``a`` -- used
     verbatim in the fully-static regime) plus the graph roots the dynamic
-    regimes recompute from.  Read off the graph by ``CRRM.episode_static()``.
+    regimes recompute from.  Read off the graph by ``CRRM.episode_static()``
+    or rebuilt purely (per topology draw) by ``CrrmEnv.reset`` via
+    ``radio.radio_forward``.
     """
 
     se: Any          # (n_ues, n_freq) spectral efficiency
@@ -125,7 +150,9 @@ class EpisodeFns(NamedTuple):
     ``n_tti`` TTIs (``tput`` stacked to (n_tti, n_ues)).  ``action`` is an
     optional (n_cells, n_freq) power matrix overriding ``static.P`` (a
     trace-time switch: None compiles the legacy program).  Both functions
-    are pure and vmap over ``state``/``action`` for batched episodes.
+    are pure and vmap over ``state``/``action`` for batched episodes
+    (single-device configurations; a mesh-sharded bundle spans the devices
+    instead of vmapping).
     """
 
     step: Any
@@ -166,25 +193,52 @@ def a3_handover(a, ttt, rsrp_wb, hyst_db, ttt_tti):
     return a, ttt
 
 
-def make_episode_fns(params, n_ues: int, n_cells: int, gain_full,
-                     traffic_step, *, mobility_step_m=None,
-                     per_tti_fading: bool = False,
-                     use_harq=None) -> EpisodeFns:
+def stationary_served_tput(params, n_cells: int, se, cqi, a, backlog):
+    """Pure twin of the graph's Schedule -> ServedThroughput chain.
+
+    The single-shot served throughput at the stationary alpha-fair point
+    -- what ``CRRM.init_episode_state`` seeds the PF EWMA with by querying
+    the graph.  This function computes the same numbers from explicit
+    arrays, so a topology-resampling env ``reset`` can seed the PF state
+    inside jit/vmap without a graph (tested identical in
+    tests/test_radio_fns.py).
+    """
+    p = params
+    active = (backlog[:, None] > 0.0) & (se > 0.0)
+    log_w = mac_sched.pf_log_weights_stationary(se, p.fairness_p)
+    alloc = mac_sched.allocate(p.scheduler_policy, active, cqi, a, n_cells,
+                               p.rb_per_chunk, jnp.int32(0), log_w)
+    bits = mac_sched.served_bits(alloc, se, backlog,
+                                 p.subband_bandwidth_Hz / p.n_rb, p.tti_s)
+    return (bits / p.tti_s).sum(axis=1)
+
+
+def make_episode_fns(params, n_ues: int, n_cells: int,
+                     radio_cfg: "radio.RadioConfig", traffic_step, *,
+                     mobility_step_m=None, per_tti_fading: bool = False,
+                     use_harq=None, mesh=None,
+                     ue_axis=("ue",)) -> EpisodeFns:
     """Build the pure ``step``/``rollout`` functions for one configuration.
 
-    ``params`` is a ``CRRM_parameters``; ``gain_full`` the jitted unfaded
-    gain closure (``GainNode._full``) and ``traffic_step`` the traffic
-    model's arrival function -- both pure, so the returned functions are
-    too.  ``use_harq`` forces the HARQ state machine on/off regardless of
-    ``harq_bler`` (None = auto: on iff ``harq_bler > 0``); forcing it on at
-    ``harq_bler=0`` is the equivalence-testing hook -- the machine must
-    then reproduce the fast path bit-exactly.
+    ``params`` is a ``CRRM_parameters``; ``radio_cfg`` the hashable pure-
+    radio configuration (``radio.config_from_params``) and ``traffic_step``
+    the traffic model's arrival function -- both pure, so the returned
+    functions are too.  ``use_harq`` forces the HARQ state machine on/off
+    regardless of ``harq_bler`` (None = auto: on iff ``harq_bler > 0``);
+    forcing it on at ``harq_bler=0`` is the equivalence-testing hook -- the
+    machine must then reproduce the fast path bit-exactly.
+
+    ``mesh`` runs both functions under ``shard_map`` with the UE axis of
+    every per-UE array sharded over the ``ue_axis`` mesh axes (``n_ues``
+    must divide evenly).  Callers pass *global* arrays exactly as in the
+    single-device case; sharding is an execution detail.
 
     The trace-time feature switches (mobility / per-TTI fading / HARQ /
     handover / per-RB grid) are baked here; ``n_tti`` and the presence of
     an ``action`` specialise via the jit cache on the returned functions.
     """
     p = params
+    cfg = radio_cfg
     tti_s, beta = p.tti_s, p.pf_ewma
     n_freq, rb_chunk = p.n_freq, p.rb_per_chunk
     rb_bw = p.subband_bandwidth_Hz / p.n_rb     # physical RB bandwidth
@@ -195,40 +249,50 @@ def make_episode_fns(params, n_ues: int, n_cells: int, gain_full,
     hyst_db, ttt_tti = p.ho_hysteresis_db, p.ho_ttt_tti
     noise_w = p.chunk_noise_W
     attach_on_mean = p.rayleigh_fading and p.attach_ignores_fading
-    report_wb = p.cqi_report == "wideband"
-    n_rb_sb = p.n_rb_subbands
     static_geom = mobility_step_m is None
 
-    def cqi_of(gamma):
-        """CQI at the configured reporting resolution (DESIGN.md)."""
-        return blocks._cqi_report(gamma, n_rb_sb, report_wb,
-                                  p.cqi_eesm_beta)
+    # -- mesh layout (None = single device, the exact legacy program) ------
+    if mesh is not None:
+        ue_axes = (ue_axis,) if isinstance(ue_axis, str) else tuple(ue_axis)
+        n_shards = 1
+        for ax in ue_axes:
+            n_shards *= mesh.shape[ax]
+        if n_ues % n_shards:
+            raise ValueError(
+                f"n_ues={n_ues} must divide evenly over the {n_shards} "
+                f"shards of mesh axes {ue_axes}")
+    else:
+        ue_axes, n_shards = None, 1
+
+    def local_rows(x):
+        """Slice a global-UE-axis array to this shard's contiguous block.
+
+        Per-UE randomness is always drawn at *global* shape from the
+        episode's key stream and then sliced, so shard s consumes exactly
+        the rows it would own on a single device -- this is what makes the
+        sharded rollout match the single-device one.  Identity when
+        unsharded.
+        """
+        if ue_axes is None:
+            return x
+        n_loc = n_ues // n_shards
+        lo = _axis_index(ue_axes) * n_loc
+        return jax.lax.dynamic_slice_in_dim(x, lo, n_loc, axis=0)
 
     def unfaded_gain(U, C, bore):
-        d2d, d3d, az = blocks._geometry(U, C)
-        return gain_full(U, C, d2d, d3d, az, bore,
-                         jnp.ones((n_ues, n_cells), jnp.float32))
+        return radio.pathgains(cfg, U, C, bore)
 
     def draw_fading(key):
-        """Fresh per-TTI fading at the engine's frequency resolution."""
-        if n_rb_sb > 1:
-            return fading_mod.subband_rayleigh_power(
-                key, n_ues, n_cells, p.n_subbands * p.n_rb, p.coherence_rb,
-                n_freq)
-        return fading_mod.rayleigh_power(key, (n_ues, n_cells))
+        """Fresh per-TTI fading (global draw, local slice when sharded)."""
+        return local_rows(radio.draw_fading(cfg, key, n_ues, n_cells))
 
     def faded_rsrp(G0, P, fad):
-        """RSRP from unfaded gain: broadcasts wideband or per-RB fading."""
-        G = G0[..., None] * fad if fad.ndim == 3 else G0 * fad
-        return blocks._rsrp(G, P)
+        return radio.rsrp(radio.apply_fading(G0, fad), P)
 
     def sinr_chain(R, a):
         """(se, cqi, a) for serving assignment ``a``."""
-        w = blocks._wanted(R, a)
-        u = blocks._interference(R, w)
-        gamma = w / (noise_w + u)
-        cqi = cqi_of(gamma)
-        se = blocks._se(blocks._mcs(cqi), cqi)
+        gamma, _, _ = radio.sinr(R, a, noise_w)
+        se, cqi = radio.se_chain(cfg, gamma)
         return se, cqi, a
 
     def allocate(se, cqi, a, buf, avg, cursor, harq_pending):
@@ -237,7 +301,7 @@ def make_episode_fns(params, n_ues: int, n_cells: int, gain_full,
         log_w = mac_sched.pf_log_weights_ewma(rb_bw * se, avg[:, None],
                                               p.fairness_p)
         return mac_sched.allocate(policy, active, cqi, a, n_cells, rb_chunk,
-                                  cursor, log_w)
+                                  cursor, log_w, ue_axes)
 
     def harq_step(k_harq, tb_new, hbits, hretx, granted):
         """One TTI of every UE's stop-and-wait process.
@@ -255,7 +319,7 @@ def make_episode_fns(params, n_ues: int, n_cells: int, gain_full,
         attempting = granted & (tb > 0.0)
         attempt = jnp.where(pending, hretx, 0)
         p_fail = harq_fail_prob(bler, comb_db, attempt)
-        u = jax.random.uniform(k_harq, (n_ues,))
+        u = local_rows(jax.random.uniform(k_harq, (n_ues,)))
         ok = (u >= p_fail) & attempting
         fail = ~ok & attempting
         n_fail = attempt + 1
@@ -279,9 +343,9 @@ def make_episode_fns(params, n_ues: int, n_cells: int, gain_full,
             # out of the scan; only the fading factor varies per TTI.
             h["G"] = unfaded_gain(U, static.C, static.bore)
             if not power_act:
-                R_mean = blocks._rsrp(h["G"], static.P)
+                R_mean = radio.rsrp(h["G"], static.P)
                 h["R_mean"] = R_mean
-                h["a"] = blocks._attach(R_mean) if attach_on_mean else None
+                h["a"] = radio.attachment(R_mean) if attach_on_mean else None
                 R_faded = faded_rsrp(h["G"], static.P, static.fad)
                 # A3 measures long-term RSRP iff association does (same
                 # convention as the dynamic paths' R_meas)
@@ -296,9 +360,8 @@ def make_episode_fns(params, n_ues: int, n_cells: int, gain_full,
                     total = R_faded.sum(axis=1)
                     gamma_all = R_faded / (
                         noise_w + (total[:, None, :] - R_faded))
-                    h["cqi_all"] = cqi_of(gamma_all)
-                    h["se_all"] = blocks._se(blocks._mcs(h["cqi_all"]),
-                                             h["cqi_all"])
+                    se_all, cqi_all = radio.se_chain(cfg, gamma_all)
+                    h["cqi_all"], h["se_all"] = cqi_all, se_all
         return h
 
     def tti_step(h, static, state, action):
@@ -309,27 +372,28 @@ def make_episode_fns(params, n_ues: int, n_cells: int, gain_full,
         hbits, hretx, a_srv, ttt, t = (state.harq_bits, state.harq_retx,
                                        state.serving, state.ttt, state.t)
         P = action if power_act else static.P
-        k_mob, k_fad, k_tr, k_harq = (jax.random.fold_in(key, 4 * t + i)
-                                      for i in range(4))
+        k_mob, k_fad, k_tr, k_harq = radio.tti_keys(key, t)
         # -- channel: (R, R_meas) per TTI, or the hoisted constants --------
         if mobility_step_m is not None:
-            idx = jnp.arange(n_ues)
-            U = U.at[idx].set(mobility.random_walk(
-                k_mob, U, idx, mobility_step_m, p.extent_m))
+            # random-walk displacement, clamped at the region border
+            # (global draw, local slice when sharded)
+            d = local_rows(mobility.walk_steps(k_mob, n_ues,
+                                               mobility_step_m))
+            U = mobility.apply_walk(U, d, p.extent_m)
             G0 = unfaded_gain(U, static.C, static.bore)
             fad = draw_fading(k_fad) if per_tti_fading else static.fad
             R = faded_rsrp(G0, P, fad)
-            R_meas = blocks._rsrp(G0, P) if attach_on_mean else R
-            a_inst = blocks._attach(R_meas)
+            R_meas = radio.rsrp(G0, P) if attach_on_mean else R
+            a_inst = radio.attachment(R_meas)
         elif per_tti_fading or power_act:
             fad = draw_fading(k_fad) if per_tti_fading else static.fad
             R = faded_rsrp(h["G"], P, fad)
             if power_act:
-                R_meas = blocks._rsrp(h["G"], P) if attach_on_mean else R
-                a_inst = blocks._attach(R_meas)
+                R_meas = radio.rsrp(h["G"], P) if attach_on_mean else R
+                a_inst = radio.attachment(R_meas)
             else:
                 R_meas = h["R_mean"] if attach_on_mean else R
-                a_inst = h["a"] if attach_on_mean else blocks._attach(R)
+                a_inst = h["a"] if attach_on_mean else radio.attachment(R)
         else:
             R = R_meas = a_inst = None   # fully static radio chain
 
@@ -353,9 +417,9 @@ def make_episode_fns(params, n_ues: int, n_cells: int, gain_full,
             se, cqi, a_use = static.se, static.cqi, static.a
 
         # -- MAC: traffic -> grant -> HARQ -> drain ------------------------
-        buf = buf + traffic_step(k_tr, t)
+        buf = buf + local_rows(traffic_step(k_tr, t))
         harq_pending = (hbits > 0.0) if harq_on else \
-            jnp.zeros((n_ues,), bool)
+            jnp.zeros_like(buf, dtype=bool)
         alloc = allocate(se, cqi, a_use, buf, avg, cursor, harq_pending)
         drainable = jnp.where(harq_pending, 0.0, buf)
         tb_new = mac_sched.served_bits(alloc, se, drainable, rb_bw,
@@ -364,8 +428,8 @@ def make_episode_fns(params, n_ues: int, n_cells: int, gain_full,
             bits, _, hbits, hretx = harq_step(
                 k_harq, tb_new, hbits, hretx, alloc.sum(axis=1) > 0.0)
         elif bler > 0.0:   # HARQ-lite: lost blocks stay queued -> retx
-            bits = tb_new * jax.random.bernoulli(
-                k_harq, 1.0 - bler, (n_ues,)).astype(tb_new.dtype)
+            bits = tb_new * local_rows(jax.random.bernoulli(
+                k_harq, 1.0 - bler, (n_ues,))).astype(tb_new.dtype)
         else:
             bits = tb_new
         # clamp: served_bits <= backlog only up to float rounding
@@ -379,43 +443,129 @@ def make_episode_fns(params, n_ues: int, n_cells: int, gain_full,
                              hbits, hretx, a_srv, ttt, t + 1)
         return state, tput
 
+    # ------------------------------------------------------- single device
+    if mesh is None:
+        def step(static, state, action=None):
+            h = prepare(static, state.U, action is not None)
+            return tti_step(h, static, state, action)
+
+        def rollout(static, state, n_tti, action=None):
+            h = prepare(static, state.U, action is not None)
+
+            def body(s, _):
+                return tti_step(h, static, s, action)
+
+            return jax.lax.scan(body, state, None, length=n_tti)
+
+        return EpisodeFns(step=jax.jit(step),
+                          rollout=jax.jit(rollout, static_argnums=(2,)))
+
+    # ------------------------------------------------------- mesh sharded
+    # pytree-structured PartitionSpecs: UE axes sharded, cells replicated
+    ue = PSpec(ue_axes)
+    fad_spec = (PSpec(ue_axes, None, None)
+                if p.rayleigh_fading and p.n_rb_subbands > 1
+                else PSpec(ue_axes, None))
+    static_specs = EpisodeStatic(
+        se=PSpec(ue_axes, None), cqi=PSpec(ue_axes, None), a=ue,
+        C=PSpec(None, None), P=PSpec(None, None), bore=PSpec(None),
+        fad=fad_spec)
+    state_specs = EpisodeState(
+        U=PSpec(ue_axes, None), backlog=ue, pf_avg=ue, rr_cursor=PSpec(),
+        key=PSpec(None), harq_bits=ue, harq_retx=ue, serving=ue, ttt=ue,
+        t=PSpec())
+
+    def revar(state):
+        """Re-establish the claimed replication of the scalar carry slots.
+
+        The scan carry is typed device-varying as a whole (``pvary``), but
+        the scalar slots (cursor, key, t) evolve identically on every
+        shard; a ``pmax`` both proves and restores their replication so
+        they can leave the shard_map under a replicated out-spec.  No-ops
+        on jax versions without varying-type tracking.
+        """
+        fix = lambda x: jax.lax.pmax(x, ue_axes)
+        return state._replace(rr_cursor=fix(state.rr_cursor),
+                              key=fix(state.key), t=fix(state.t))
+
+    def sharded(fn, in_specs, out_specs):
+        # replication checking must be off: the traffic models' poisson
+        # sampler carries a while_loop, for which jax's rep-checker has no
+        # rule.  The kwarg spelling differs across jax versions.
+        for kw in ({"check_rep": False}, {"check_vma": False}, {}):
+            try:
+                return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                  out_specs=out_specs, **kw)
+            except TypeError:       # pragma: no cover - version dependent
+                continue
+
     def step(static, state, action=None):
-        h = prepare(static, state.U, action is not None)
-        return tti_step(h, static, state, action)
+        def one(static, state, *act):
+            h = prepare(static, state.U, bool(act))
+            state = jax.tree_util.tree_map(
+                lambda x: _pvary(x, ue_axes), state)
+            state, tput = tti_step(h, static, state,
+                                   act[0] if act else None)
+            return revar(state), tput
+
+        act_spec = () if action is None else (PSpec(None, None),)
+        f = sharded(one, (static_specs, state_specs) + act_spec,
+                    (state_specs, ue))
+        args = (static, state) if action is None else (static, state, action)
+        return f(*args)
 
     def rollout(static, state, n_tti, action=None):
-        h = prepare(static, state.U, action is not None)
+        def roll(static, state, *act):
+            h = prepare(static, state.U, bool(act))
+            init = jax.tree_util.tree_map(
+                lambda x: _pvary(x, ue_axes), state)
 
-        def body(s, _):
-            return tti_step(h, static, s, action)
+            def body(s, _):
+                return tti_step(h, static, s, act[0] if act else None)
 
-        return jax.lax.scan(body, state, None, length=n_tti)
+            state, tput = jax.lax.scan(body, init, None, length=n_tti)
+            return revar(state), tput
+
+        act_spec = () if action is None else (PSpec(None, None),)
+        f = sharded(roll, (static_specs, state_specs) + act_spec,
+                    (state_specs, PSpec(None, ue_axes)))
+        args = (static, state) if action is None else (static, state, action)
+        return f(*args)
 
     return EpisodeFns(step=jax.jit(step),
                       rollout=jax.jit(rollout, static_argnums=(2,)))
 
 
 def episode_fns_for(sim, *, mobility_step_m=None, per_tti_fading=False,
-                    use_harq=None) -> EpisodeFns:
+                    use_harq=None, mesh=None, ue_axis=("ue",)) -> EpisodeFns:
     """The :func:`make_episode_fns` bundle for ``sim``, cached on it.
 
     Keyed by the trace-time switches only -- ``n_tti`` and the presence of
     a power action specialise through the jit cache of the returned
     functions, so repeat episodes of any length reuse one ``EpisodeFns``.
+    ``mobility_step_m=None`` falls back to the simulator's
+    ``params.mobility_step_m`` (scenario presets with a baked-in mobility
+    trajectory); pass ``0`` to force the static-geometry program.
     """
-    cache_key = (mobility_step_m, per_tti_fading, use_harq)
+    if mobility_step_m is None:
+        mobility_step_m = getattr(sim.params, "mobility_step_m", None)
+    if not mobility_step_m:          # 0 / None -> static geometry
+        mobility_step_m = None
+    ue_axis = (ue_axis,) if isinstance(ue_axis, str) else tuple(ue_axis)
+    cache_key = (mobility_step_m, per_tti_fading, use_harq, mesh, ue_axis)
     cache = sim.__dict__.setdefault("_episode_fns_cache", {})
     if cache_key not in cache:
         cache[cache_key] = make_episode_fns(
-            sim.params, sim.n_ues, sim.n_cells, sim.G._full,
+            sim.params, sim.n_ues, sim.n_cells, sim.radio_config(),
             sim._traffic_step, mobility_step_m=mobility_step_m,
-            per_tti_fading=per_tti_fading, use_harq=use_harq)
+            per_tti_fading=per_tti_fading, use_harq=use_harq,
+            mesh=mesh, ue_axis=ue_axis)
     return cache[cache_key]
 
 
 def run_episode(sim, n_tti: int, key=None, mobility_step_m=None,
                 per_tti_fading: bool = False, sync_state: bool = True,
-                use_harq=None):
+                use_harq=None, mesh=None):
     """Run ``n_tti`` TTIs; returns (n_tti, n_ues) delivered throughput
     (bits/s).
 
@@ -428,14 +578,16 @@ def run_episode(sim, n_tti: int, key=None, mobility_step_m=None,
     :class:`EpisodeState` instead) writes the final buffers / PF state /
     positions / HARQ processes / serving cells back into the graph so
     subsequent single-shot queries and episodes continue from the episode's
-    end state.
+    end state.  ``mesh`` runs the rollout shard_mapped over the UE axis.
     """
     fns = episode_fns_for(sim, mobility_step_m=mobility_step_m,
-                          per_tti_fading=per_tti_fading, use_harq=use_harq)
+                          per_tti_fading=per_tti_fading, use_harq=use_harq,
+                          mesh=mesh)
     state = sim.init_episode_state(key)
     static = sim.episode_static()
     state, tput = fns.rollout(static, state, n_tti)
+    if mobility_step_m is None:
+        mobility_step_m = getattr(sim.params, "mobility_step_m", None)
     if sync_state:
-        sim.sync_episode_state(state,
-                               positions=mobility_step_m is not None)
+        sim.sync_episode_state(state, positions=bool(mobility_step_m))
     return tput

@@ -32,9 +32,19 @@ Policies:
 
 All functions are shape-polymorphic pure ``jnp`` and traceable, so they run
 both as smart-update graph nodes and inside ``jax.lax.scan``.
+
+Mesh-sharded operation (DESIGN.md §Radio-fns): every policy accepts an
+optional ``ue_axis`` -- mesh axis name(s) the UE dimension is sharded over
+inside ``shard_map``.  A cell's RB grid mixes *all* of its attached UEs, so
+the per-cell reductions (active counts, PF weight sums, the max-CQI winner)
+become collectives: ``psum``/``pmax`` over the UE axis plus the cross-shard
+argmax of ``core.distributed._global_best`` (tie-break = lowest global UE
+index, matching single-device ``jnp.argmax``).  ``ue_axis=None`` (the
+default) compiles the exact legacy single-device program.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 SCHEDULER_POLICIES = ("rr", "max_cqi", "pf")
@@ -51,56 +61,95 @@ def _cell_mask(active, a, n_cells):
     return active[:, None, :] & onehot[:, :, None]
 
 
-def allocate_rr(active, a, n_cells, n_rb, cursor):
-    """Round-robin: even integer split, remainder rotated by ``cursor``."""
+def allocate_rr(active, a, n_cells, n_rb, cursor, ue_axis=None):
+    """Round-robin: even integer split, remainder rotated by ``cursor``.
+
+    Sharded (``ue_axis``): a UE's within-cell rank is its local rank plus
+    the active counts of all lower shards (the global UE order is
+    shard-major, i.e. contiguous blocks), and the per-cell active totals
+    are psummed.
+    """
     M = _cell_mask(active, a, n_cells)
     csum = jnp.cumsum(M, axis=0)                       # rank+1 within cell
     rank = jnp.take_along_axis(
         csum, a[:, None, None], axis=1)[:, 0, :] - 1   # (n_ue, K)
-    n_active = jnp.take_along_axis(
-        M.sum(axis=0)[None], a[:, None, None], axis=1)[:, 0, :]
+    if ue_axis is None:
+        n_active = jnp.take_along_axis(
+            M.sum(axis=0)[None], a[:, None, None], axis=1)[:, 0, :]
+    else:
+        from repro.core.distributed import _axis_index
+        count = M.sum(axis=0)                          # (n_cells, K) local
+        counts = jax.lax.all_gather(count, ue_axis)    # (n_shards, ...)
+        my = _axis_index(ue_axis)
+        shard = jnp.arange(counts.shape[0])[:, None, None]
+        before = jnp.where(shard < my, counts, 0).sum(axis=0)
+        rank = rank + before[a]                        # global within-cell
+        n_active = counts.sum(axis=0)[a]
     n_act = jnp.maximum(n_active, 1)
     base = n_rb // n_act
     extra = ((rank - cursor) % n_act) < (n_rb % n_act)
     return jnp.where(active, (base + extra).astype(jnp.float32), 0.0)
 
 
-def allocate_max_cqi(active, cqi, a, n_cells, n_rb):
-    """Winner-take-all: the best-CQI active UE gets the cell's whole grid."""
+def allocate_max_cqi(active, cqi, a, n_cells, n_rb, ue_axis=None):
+    """Winner-take-all: the best-CQI active UE gets the cell's whole grid.
+
+    Sharded (``ue_axis``): the per-cell winner is the cross-shard argmax
+    of ``core.distributed._global_best`` (ties to the lowest global UE
+    index, exactly like single-device ``jnp.argmax``).
+    """
     M = _cell_mask(active, a, n_cells)
     score = jnp.where(M, cqi[:, None, :], -1)          # (n_ue, n_cells, K)
-    winner = jnp.argmax(score, axis=0)                 # (n_cells, K)
-    mine = jnp.take_along_axis(
-        winner[None], a[:, None, None], axis=1)[:, 0, :]
-    i = jnp.arange(active.shape[0])[:, None]
+    if ue_axis is None:
+        winner = jnp.argmax(score, axis=0)             # (n_cells, K)
+        i = jnp.arange(active.shape[0])[:, None]
+    else:
+        from repro.core.distributed import _axis_index, _global_best
+        n_loc = active.shape[0]
+        _, winner, _ = _global_best(
+            score.max(axis=0), score.argmax(axis=0).astype(jnp.int32),
+            n_loc, ue_axis)
+        i = (_axis_index(ue_axis) * n_loc + jnp.arange(n_loc))[:, None]
+    mine = winner[a]                                   # (n_ue, K)
     return jnp.where(active & (mine == i), float(n_rb), 0.0)
 
 
-def allocate_pf(active, log_w, a, n_cells, n_rb):
-    """Weight-proportional split of the grid (log-space for stability)."""
+def allocate_pf(active, log_w, a, n_cells, n_rb, ue_axis=None):
+    """Weight-proportional split of the grid (log-space for stability).
+
+    Sharded (``ue_axis``): the per-cell weight maximum (the log-space
+    stabiliser) and the weight sums reduce over the UE axis with
+    ``pmax``/``psum``.
+    """
     log_w = jnp.where(active, log_w, -jnp.inf)
     cell_max = jnp.full((n_cells, log_w.shape[1]), -jnp.inf,
                         log_w.dtype).at[a].max(log_w)
+    if ue_axis is not None:
+        cell_max = jax.lax.pmax(cell_max, ue_axis)
     w = jnp.exp(log_w - cell_max[a])                   # in (0, 1], 0 if idle
     w = jnp.where(active, w, 0.0)
     denom = jnp.zeros((n_cells, w.shape[1]), w.dtype).at[a].add(w)
+    if ue_axis is not None:
+        denom = jax.lax.psum(denom, ue_axis)
     share = jnp.where(denom[a] > 0.0, w / jnp.maximum(denom[a], 1e-30), 0.0)
     return n_rb * share
 
 
-def allocate(policy, active, cqi, a, n_cells, n_rb, cursor, log_w):
+def allocate(policy, active, cqi, a, n_cells, n_rb, cursor, log_w,
+             ue_axis=None):
     """Dispatch to a policy; single entry point for graph node and engine.
 
     ``log_w`` carries the PF weights (stationary from the single-shot
     graph, EWMA-temporal from the episode engine); the other policies
-    ignore it.
+    ignore it.  ``ue_axis`` names the mesh axes the UE dimension is
+    sharded over inside ``shard_map`` (None = single device).
     """
     if policy == "rr":
-        return allocate_rr(active, a, n_cells, n_rb, cursor)
+        return allocate_rr(active, a, n_cells, n_rb, cursor, ue_axis)
     if policy == "max_cqi":
-        return allocate_max_cqi(active, cqi, a, n_cells, n_rb)
+        return allocate_max_cqi(active, cqi, a, n_cells, n_rb, ue_axis)
     if policy == "pf":
-        return allocate_pf(active, log_w, a, n_cells, n_rb)
+        return allocate_pf(active, log_w, a, n_cells, n_rb, ue_axis)
     raise ValueError(
         f"unknown scheduler policy {policy!r}; choose from "
         f"{SCHEDULER_POLICIES}")

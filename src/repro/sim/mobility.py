@@ -24,9 +24,23 @@ def random_moves(key, n_ues: int, n_move: int, extent_m: float):
     return idx, jnp.concatenate([xy, z], axis=1)
 
 
+def walk_steps(key, n: int, step_m: float):
+    """Draw ``n`` uniform random-walk displacements in [-step_m, step_m)^2.
+
+    Split from :func:`apply_walk` so the episode engine can draw at
+    *global* UE count and slice the local shard's rows (its sharded-PRNG
+    convention) while sharing this one walk implementation.
+    """
+    return jax.random.uniform(key, (n, 2), minval=-step_m, maxval=step_m)
+
+
+def apply_walk(positions, d, extent_m: float):
+    """Displace every position by ``d``, clamped at the region borders."""
+    new_xy = jnp.clip(positions[:, :2] + d, 0.0, extent_m)
+    return jnp.concatenate([new_xy, positions[:, 2:3]], axis=1)
+
+
 def random_walk(key, positions, idx, step_m: float, extent_m: float):
-    """Displace the selected UEs by a uniform step, reflecting at borders."""
-    d = jax.random.uniform(key, (idx.shape[0], 2), minval=-step_m,
-                           maxval=step_m)
-    new_xy = jnp.clip(positions[idx, :2] + d, 0.0, extent_m)
-    return jnp.concatenate([new_xy, positions[idx, 2:3]], axis=1)
+    """Displace the selected UEs by a uniform step, clamped at borders."""
+    d = walk_steps(key, idx.shape[0], step_m)
+    return apply_walk(positions[idx], d, extent_m)

@@ -1,0 +1,419 @@
+"""The pure-functional radio chain: D -> G -> RSRP -> a -> SINR -> CQI -> SE.
+
+This module is the single source of truth for the paper's Figure-1 physics.
+Every consumer is a thin view over it:
+
+* the smart-update graph (``core/blocks.py``) keeps its dirty-row caching
+  machinery but delegates the *math* of each node to the functions here;
+* the scan-compiled TTI engine (``mac/engine.py``) calls the same functions
+  inside ``lax.scan`` (and inside ``shard_map`` on a device mesh);
+* the batched env (``env/crrm_env.py``) calls :func:`radio_forward` inside
+  ``reset`` to recompute the chain for a freshly drawn topology, which is
+  what makes batching over *topologies* (not just seeds) possible.
+
+Everything here is pure and jit/vmap/shard_map-compatible along the UE axis:
+no hidden state, no Python mutation, arrays in -> arrays out.  The split
+follows Sionna's differentiable-by-construction layers (PAPERS.md): physics
+as stateless functions, caching as a wrapper.
+
+Two data types:
+
+* :class:`RadioConfig` -- the hashable trace-time configuration (pathloss /
+  antenna closures, noise, frequency grid, fading + reporting knobs).  It is
+  a NamedTuple of hashables, so it can ride ``jax.jit`` static arguments and
+  key trace caches.
+* :class:`RadioStatic` -- the per-deployment pytree: cell positions, the
+  power matrix and sector boresights as *leaves* (traced, vmap-able) with a
+  ``RadioConfig`` as static aux data.  ``CRRM.radio_static()`` builds one
+  from the live graph roots.
+
+PRNG key conventions (THE single documented convention -- ``CRRM``,
+the episode engine and the env all draw through these helpers):
+
+* :func:`episode_key` -- the per-simulation episode key is
+  ``fold_in(PRNGKey(seed), 0x6d6163)`` ("mac");
+* :func:`tti_keys` -- TTI ``t`` of an episode consumes four streams
+  ``fold_in(key, 4 * t + i)`` for ``i`` = mobility, fading, traffic, HARQ
+  (in that order);
+* :func:`reset_keys` -- a topology-resampling env reset splits its seed into
+  ``(topology, fading, episode)`` with one ``jax.random.split(key, 3)``;
+* :func:`draw_fading` -- the one fading draw (wideband or per-RB subband
+  block fading), shared by ``CRRM.resample_fading`` and the engine's
+  per-TTI redraw so both consume identical streams from equal keys.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sim import fading as fading_mod
+from repro.sim import phy
+from repro.sim.antenna import Antenna_gain
+
+
+class RadioConfig(NamedTuple):
+    """Hashable trace-time configuration of the radio chain.
+
+    ``pathgain_fn`` and ``antenna`` are bound methods / frozen dataclasses
+    (hashable, comparable), so a ``RadioConfig`` can sit in jit caches and
+    in the static aux data of a :class:`RadioStatic` pytree.
+    """
+
+    pathgain_fn: Callable    # (d2d, d3d, h_bs, h_ut) -> linear gain
+    antenna: Antenna_gain    # sector pattern (ignored when n_sectors == 1)
+    n_sectors: int
+    noise_w: float           # noise power per frequency chunk (watts)
+    n_subbands: int          # power subbands
+    n_rb: int                # physical RBs per subband
+    n_rb_subbands: int       # CQI subbands per power subband (1 = wideband)
+    coherence_rb: int        # block-fading coherence bandwidth, in RBs
+    rayleigh_fading: bool
+    attach_ignores_fading: bool   # associate on the long-term mean RSRP
+    cqi_wideband: bool       # EESM-pool CQI reports per power subband
+    eesm_beta: float
+
+    @property
+    def n_freq(self) -> int:
+        """Scheduling-frequency chunks (trailing axis of SE/CQI/RSRP)."""
+        return self.n_subbands * self.n_rb_subbands
+
+
+def config_from_params(params, pathgain_fn, antenna) -> RadioConfig:
+    """Bind a ``CRRM_parameters`` to concrete pathloss/antenna closures."""
+    p = params
+    return RadioConfig(
+        pathgain_fn=pathgain_fn, antenna=antenna, n_sectors=p.n_sectors,
+        noise_w=p.chunk_noise_W, n_subbands=p.n_subbands, n_rb=p.n_rb,
+        n_rb_subbands=p.n_rb_subbands, coherence_rb=p.coherence_rb,
+        rayleigh_fading=p.rayleigh_fading,
+        attach_ignores_fading=p.attach_ignores_fading,
+        cqi_wideband=(p.cqi_report == "wideband"),
+        eesm_beta=p.cqi_eesm_beta)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class RadioStatic:
+    """Per-deployment radio inputs: array leaves + a static config.
+
+    A pytree whose leaves (cell positions ``C``, power matrix ``P``, sector
+    boresights ``bore``) trace through jit/vmap/shard_map while the
+    :class:`RadioConfig` rides as static aux data -- so a jitted consumer
+    re-specialises per *configuration* but not per *deployment*.
+    """
+
+    C: Any                   # (n_cells, 3)
+    P: Any                   # (n_cells, n_freq) watts
+    bore: Any                # (n_cells,) sector boresights, radians
+    cfg: RadioConfig
+
+    def tree_flatten(self):
+        return (self.C, self.P, self.bore), self.cfg
+
+    @classmethod
+    def tree_unflatten(cls, cfg, children):
+        C, P, bore = children
+        return cls(C, P, bore, cfg)
+
+
+class RadioOutputs(NamedTuple):
+    """Everything :func:`radio_forward` derives for one set of positions."""
+
+    G: Any                   # faded gain (n_ue, n_cell[, n_freq])
+    rsrp: Any                # (n_ue, n_cell, n_freq)
+    a: Any                   # (n_ue,) i32 serving-cell attachment
+    gamma: Any               # (n_ue, n_freq) linear SINR
+    cqi: Any                 # (n_ue, n_freq) at reporting resolution
+    mcs: Any                 # (n_ue, n_freq)
+    se: Any                  # (n_ue, n_freq) bits/s/Hz
+
+
+# ---------------------------------------------------------------------------
+# composable pure functions (the Figure-1 boxes)
+# ---------------------------------------------------------------------------
+def compute_distances(U, C):
+    """(d2d, d3d, az): 2-D/3-D distances and the cell->UE bearing."""
+    dx = U[:, None, 0] - C[None, :, 0]
+    dy = U[:, None, 1] - C[None, :, 1]
+    dz = U[:, None, 2] - C[None, :, 2]
+    d2d = jnp.sqrt(dx * dx + dy * dy)
+    d3d = jnp.sqrt(d2d * d2d + dz * dz)
+    az = jnp.arctan2(dy, dx)
+    return d2d, d3d, az
+
+
+def make_gain_fn(pathgain_fn, antenna: Antenna_gain, n_sectors: int):
+    """The link-gain closure: pathloss x sector pattern x fading.
+
+    Shared verbatim by the graph's ``GainNode`` and :func:`pathgains`, so
+    both paths are bit-exact by construction.  The fading factor may carry
+    one extra trailing frequency axis (per-RB block fading); the gain then
+    inherits that rank.
+    """
+    def gain(d2d, d3d, az, h_ut, h_bs, bore, fad):
+        g = pathgain_fn(d2d, d3d, h_bs[None, :], h_ut[:, None])
+        if n_sectors > 1:
+            g = g * antenna.gain_linear(az, bore)
+        if fad.ndim == g.ndim + 1:        # frequency-selective fading
+            g = g[..., None]
+        return g * fad
+
+    return gain
+
+
+def pathgains(cfg: RadioConfig, U, C, bore, geom=None):
+    """Unfaded linear gain (n_ue, n_cell): pathloss x sector pattern.
+
+    ``geom`` lets a caller reuse a :func:`compute_distances` result.
+    """
+    d2d, d3d, az = compute_distances(U, C) if geom is None else geom
+    gain = make_gain_fn(cfg.pathgain_fn, cfg.antenna, cfg.n_sectors)
+    ones = jnp.ones((U.shape[0], C.shape[0]), d2d.dtype)
+    return gain(d2d, d3d, az, U[:, 2], C[:, 2], bore, ones)
+
+
+def apply_fading(G0, fad):
+    """Broadcast a fading factor onto an unfaded gain (rank-polymorphic)."""
+    if fad.ndim == G0.ndim + 1:
+        return G0[..., None] * fad
+    return G0 * fad
+
+
+def rsrp(G, P):
+    """R[i, j, k] = p_jk * G_ijk (stacked per-frequency blocks of Fig. 1).
+
+    ``G`` is (n_ue, n_cell) for the flat wideband channel or (n_ue, n_cell,
+    n_freq) when fading is frequency selective; resolved at trace time.
+    """
+    if G.ndim == 3:
+        return G * P[None, :, :]
+    return G[:, :, None] * P[None, :, :]
+
+
+def attachment(R):
+    """Serve each UE from the cell with the largest wideband RSRP."""
+    return jnp.argmax(R.sum(axis=2), axis=1).astype(jnp.int32)
+
+
+def wanted(R, a):
+    """w[i, k]: the serving cell's RSRP per frequency chunk."""
+    return jnp.take_along_axis(R, a[:, None, None], axis=1)[:, 0, :]
+
+
+def interference(R, w):
+    """u[i, k] = sum_j R[i, j, k] - w[i, k]."""
+    return R.sum(axis=1) - w
+
+
+def sinr_from_wu(w, u, noise_w: float):
+    """gamma = w / (noise + u), linear."""
+    return w / (noise_w + u)
+
+
+def sinr(R, a, noise_w: float):
+    """(gamma, w, u) for serving assignment ``a``."""
+    w = wanted(R, a)
+    u = interference(R, w)
+    return sinr_from_wu(w, u, noise_w), w, u
+
+
+def quantize_cqi(gamma):
+    """Per-chunk CQI quantisation of a linear SINR tensor."""
+    return phy.sinr_db_to_cqi(phy.sinr_to_db(gamma))
+
+
+def pool_report(gamma, n_rb_subbands: int, eesm_beta: float = 1.0):
+    """Effective SINR at per-power-subband *reporting* resolution (EESM).
+
+    Pools each power subband's ``n_rb_subbands`` CQI chunks with the
+    exponential effective-SINR map (EESM, the standard link-abstraction
+    for wideband CQI feedback on a selective channel):
+
+        gamma_eff = -beta * log( mean_k exp(-gamma_k / beta) )
+
+    which is dominated by the *faded* chunks -- a single wideband MCS must
+    survive the whole allocation, so the report is conservative (a linear
+    mean would Jensen-inflate it and wideband reporting would spuriously
+    *beat* subband reporting).  Computed via logsumexp for stability at
+    the large linear SINRs the chain produces; broadcast back onto the
+    full frequency grid so downstream shapes are unchanged.
+    Rank-polymorphic over leading axes (works on the (n_ue, n_freq) chain
+    and the engine's tabulated (n_ue, n_cell, n_freq) tensors alike).
+    """
+    s = n_rb_subbands
+    shp = gamma.shape
+    g = gamma.reshape(shp[:-1] + (shp[-1] // s, s))
+    eff = -eesm_beta * (jax.scipy.special.logsumexp(-g / eesm_beta, axis=-1)
+                        - jnp.log(float(s)))
+    return jnp.broadcast_to(eff[..., None], eff.shape + (s,)).reshape(shp)
+
+
+def cqi_report(gamma, n_rb_subbands: int, wideband: bool,
+               eesm_beta: float = 1.0):
+    """CQI at the configured reporting resolution (``cqi_report`` knob).
+
+    ``wideband`` decouples reporting from fading resolution: the SINR is
+    EESM-pooled per power subband before quantisation, so every chunk of
+    a subband reports the same CQI.  At ``n_rb_subbands=1`` (or subband
+    reporting) this is exactly the legacy per-chunk :func:`quantize_cqi`.
+    """
+    if wideband and n_rb_subbands > 1:
+        return quantize_cqi(pool_report(gamma, n_rb_subbands, eesm_beta))
+    return quantize_cqi(gamma)
+
+
+def cqi_of(cfg: RadioConfig, gamma):
+    """:func:`cqi_report` with the knobs read off a :class:`RadioConfig`."""
+    return cqi_report(gamma, cfg.n_rb_subbands, cfg.cqi_wideband,
+                      cfg.eesm_beta)
+
+
+def mcs_of(cqi):
+    return phy.cqi_to_mcs(cqi)
+
+
+def se_of(mcs, cqi):
+    """Spectral efficiency of the selected MCS, zeroed at CQI 0."""
+    return jnp.where(cqi > 0, phy.mcs_to_efficiency(mcs), 0.0)
+
+
+def se_chain(cfg: RadioConfig, gamma):
+    """(se, cqi) from a linear SINR tensor, at reporting resolution."""
+    cqi = cqi_of(cfg, gamma)
+    return se_of(mcs_of(cqi), cqi), cqi
+
+
+# ---------------------------------------------------------------------------
+# fading + PRNG key conventions (DESIGN.md §Radio-fns)
+# ---------------------------------------------------------------------------
+#: fold_in tag deriving the per-simulation episode key from params.seed
+EPISODE_KEY_TAG = 0x6d6163   # "mac"
+
+
+def episode_key(seed: int):
+    """The legacy per-sim episode key: fold ``EPISODE_KEY_TAG`` into the
+    simulation seed (what ``CRRM.init_episode_state(key=None)`` uses)."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), EPISODE_KEY_TAG)
+
+
+def tti_keys(key, t):
+    """The four per-TTI streams: (mobility, fading, traffic, HARQ).
+
+    Stream ``i`` of TTI ``t`` is ``fold_in(key, 4 * t + i)`` -- one flat
+    fold per (TTI, purpose) pair, so episodes of any length never collide
+    streams and a single TTI is reproducible in isolation.
+    """
+    return tuple(jax.random.fold_in(key, 4 * t + i) for i in range(4))
+
+
+def reset_keys(key):
+    """A topology-resampling reset's streams: (topology, fading, episode)."""
+    return jax.random.split(key, 3)
+
+
+def draw_fading(cfg: RadioConfig, key, n_ues: int, n_cells: int,
+                dtype=jnp.float32):
+    """THE fading draw: wideband Rayleigh or per-RB subband block fading.
+
+    Single source for ``CRRM.resample_fading`` (graph root refresh), the
+    engine's per-TTI redraw and the env's topology-resampling reset: equal
+    keys yield bit-identical tensors everywhere.  Returns (n_ues, n_cells)
+    wideband or (n_ues, n_cells, n_freq) when ``n_rb_subbands > 1``.
+    """
+    if cfg.n_rb_subbands > 1:
+        return fading_mod.subband_rayleigh_power(
+            key, n_ues, n_cells, cfg.n_subbands * cfg.n_rb,
+            cfg.coherence_rb, cfg.n_freq, dtype)
+    return fading_mod.rayleigh_power(key, (n_ues, n_cells), dtype)
+
+
+def unit_fading(cfg: RadioConfig, n_ues: int, n_cells: int,
+                dtype=jnp.float32):
+    """The no-fading factor (all ones) at the configured resolution."""
+    return jnp.ones((n_ues, n_cells), dtype)
+
+
+# ---------------------------------------------------------------------------
+# shared jitted wrappers
+# ---------------------------------------------------------------------------
+# The graph nodes (core/blocks.py) and :func:`radio_forward` both dispatch
+# THESE jitted callables, so an eager ``radio_forward`` reuses the exact
+# executables the graph compiled (or vice versa) and the two are bit-exact
+# -- not merely close: separate fusions of the same math can differ by an
+# ulp, shared executables cannot.  Static arguments (the pathloss/antenna
+# closures, noise, reporting knobs) are hashables, so compilations are also
+# shared across simulator instances with equal configurations.
+geometry_jit = jax.jit(compute_distances)
+
+
+@partial(jax.jit, static_argnums=(0, 1, 2))
+def gain_jit(pathgain_fn, antenna, n_sectors, U, C, d2d, d3d, az, bore, fad):
+    """Jitted :func:`make_gain_fn` application (the ``GainNode`` program)."""
+    return make_gain_fn(pathgain_fn, antenna, n_sectors)(
+        d2d, d3d, az, U[:, 2], C[:, 2], bore, fad)
+
+
+rsrp_jit = jax.jit(rsrp)
+attach_jit = jax.jit(attachment)
+wanted_jit = jax.jit(wanted)
+interference_jit = jax.jit(interference)
+sinr_jit = jax.jit(sinr_from_wu, static_argnums=(2,))
+cqi_jit = jax.jit(quantize_cqi)
+cqi_report_jit = jax.jit(cqi_report, static_argnums=(1, 2, 3))
+mcs_jit = jax.jit(mcs_of)
+se_jit = jax.jit(se_of)
+
+
+# ---------------------------------------------------------------------------
+# the one-call forward pass
+# ---------------------------------------------------------------------------
+def radio_forward(static: RadioStatic, positions, fad=None,
+                  fading_key=None, P=None) -> RadioOutputs:
+    """The whole radio chain as one pure call.
+
+    ``positions`` is (n_ue, 3); the fading factor comes from ``fad`` (an
+    explicit tensor), from ``fading_key`` (a fresh :func:`draw_fading`,
+    honouring ``cfg.rayleigh_fading``) or defaults to no fading.  ``P``
+    overrides the static power matrix (the RL power-control hook).
+
+    Bit-exact with the smart-update graph's node queries for the same
+    inputs (asserted in tests/test_radio_fns.py): the chain below mirrors
+    the graph node-for-node through the shared jitted wrappers above, so
+    both paths execute the same compiled programs.  jit-, vmap- (batch
+    topologies by vmapping over ``positions``/``fad``) and
+    shard_map-compatible along the UE axis; under an outer trace the
+    nested jits inline.
+    """
+    cfg = static.cfg
+    P = static.P if P is None else P
+    n_ue, n_cell = positions.shape[0], static.C.shape[0]
+    if fad is None:
+        if fading_key is not None and cfg.rayleigh_fading:
+            fad = draw_fading(cfg, fading_key, n_ue, n_cell)
+        else:
+            fad = unit_fading(cfg, n_ue, n_cell)
+    d2d, d3d, az = geometry_jit(positions, static.C)
+    G = gain_jit(cfg.pathgain_fn, cfg.antenna, cfg.n_sectors, positions,
+                 static.C, d2d, d3d, az, static.bore, fad)
+    R = rsrp_jit(G, P)
+    if cfg.rayleigh_fading and cfg.attach_ignores_fading:
+        # association on the long-term mean (the graph's parallel branch)
+        G0 = gain_jit(cfg.pathgain_fn, cfg.antenna, cfg.n_sectors,
+                      positions, static.C, d2d, d3d, az, static.bore,
+                      unit_fading(cfg, n_ue, n_cell))
+        a = attach_jit(rsrp_jit(G0, P))
+    else:
+        a = attach_jit(R)
+    w = wanted_jit(R, a)
+    u = interference_jit(R, w)
+    gamma = sinr_jit(w, u, cfg.noise_w)
+    cqi = cqi_report_jit(gamma, cfg.n_rb_subbands, cfg.cqi_wideband,
+                         cfg.eesm_beta)
+    mcs = mcs_jit(cqi)
+    se = se_jit(mcs, cqi)
+    return RadioOutputs(G=G, rsrp=R, a=a, gamma=gamma, cqi=cqi,
+                        mcs=mcs, se=se)

@@ -98,6 +98,25 @@ _preset(
     harq_bler=0.1, seed=0)
 
 _preset(
+    "dense_urban_mobile",
+    "dense_urban with a baked-in mobility trajectory: every UE takes a "
+    "bounded random-walk step each TTI (time-compressed vehicular churn), "
+    "with A3 handover armed so episodes exercise mobility-driven serving-"
+    "cell dynamics out of the box (mobility_step_m rides in the preset -- "
+    "run_episode/CrrmEnv pick it up without extra arguments).",
+    n_ues=200, n_cells=21, n_sectors=3, extent_m=1200.0,
+    pathloss_model_name="UMi", fc_GHz=3.5, h_bs_m=10.0,
+    power_W=6.3,
+    rayleigh_fading=True, n_rb_subbands=4, coherence_rb=3,
+    attach_ignores_fading=True,
+    mobility_step_m=5.0,               # ~city-block drift per episode
+    ho_enabled=True, ho_hysteresis_db=3.0, ho_ttt_tti=4,
+    scheduler_policy="pf", fairness_p=0.5,
+    traffic_model="poisson",
+    traffic_params=dict(arrival_rate_hz=400.0, packet_size_bits=12_000.0),
+    harq_bler=0.1, seed=0)
+
+_preset(
     "rural_macro",
     "Noise-limited wide-area coverage: RMa macro sites at 700 MHz over an "
     "8 km extent, bursty FTP-3 file downloads, round-robin airtime.",

@@ -234,6 +234,81 @@ def test_env_from_scenario_name():
     assert (np.asarray(obs.tput) >= 0).all()
 
 
+# --------------------------------------------------- topology batching
+def _topo_env(**kw):
+    env_kw = dict(episode_tti=30, tti_per_step=10, resample_topology=True)
+    for k in ("episode_tti", "tti_per_step", "per_tti_fading"):
+        if k in kw:
+            env_kw[k] = kw.pop(k)
+    return CrrmEnv(_params(**kw), **env_kw)
+
+
+def test_topology_reset_redraws_ue_field_per_seed():
+    """resample_topology: each reset seed owns its own UE positions,
+    fading draw and recomputed radio chain; equal seeds reproduce."""
+    env = _topo_env(rayleigh_fading=True, n_rb_subbands=4)
+    keys = jax.random.split(jax.random.PRNGKey(2), 4)
+    states, obs = env.reset_batch(keys)
+    U = np.asarray(states.ep.U)
+    assert U.shape == (4, env.n_ues, 3)
+    for i in range(1, 4):                      # distinct topologies
+        assert not np.allclose(U[0], U[i])
+    se = np.asarray(states.static.se)
+    assert not np.allclose(se[0], se[1])       # chains recomputed per-topo
+    s_again, _ = env.reset(keys[2])            # determinism
+    np.testing.assert_array_equal(np.asarray(s_again.ep.U), U[2])
+    np.testing.assert_array_equal(np.asarray(s_again.static.fad),
+                                  np.asarray(states.static.fad)[2])
+
+
+def test_topology_reset_chain_matches_fresh_graph():
+    """The radio chain recomputed inside reset is BIT-exact with a CRRM
+    graph constructed at the drawn positions with the drawn fading -- the
+    pure in-reset chain is the same physics, not an approximation."""
+    env = _topo_env(rayleigh_fading=True, n_rb_subbands=4)
+    state, _ = env.reset(jax.random.PRNGKey(5))
+    ref = CRRM(_params(rayleigh_fading=True, n_rb_subbands=4,
+                       ue_positions=np.asarray(state.ep.U)))
+    ref.fading.set(state.static.fad)
+    np.testing.assert_array_equal(np.asarray(ref.get_spectral_efficiency()),
+                                  np.asarray(state.static.se))
+    np.testing.assert_array_equal(np.asarray(ref.get_CQI()),
+                                  np.asarray(state.static.cqi))
+    np.testing.assert_array_equal(np.asarray(ref.get_attachment()),
+                                  np.asarray(state.static.a))
+    # and the PF seed is that topology's stationary alpha-fair point
+    np.testing.assert_allclose(np.asarray(ref.get_served_throughputs()),
+                               np.asarray(state.ep.pf_avg), rtol=1e-6)
+
+
+def test_topology_batched_step_runs_and_varies_across_topologies():
+    env = _topo_env(harq_bler=0.2)
+    keys = jax.random.split(jax.random.PRNGKey(7), 6)
+    states, _ = env.reset_batch(keys)
+    acts = jnp.stack([env.uniform_action()] * 6)
+    states, obs, rew, done = env.step_batch(states, acts)
+    tput = np.asarray(obs.tput)
+    assert tput.shape == (6, env.n_ues) and np.isfinite(tput).all()
+    assert np.asarray(rew).std() > 0           # topologies really differ
+    assert not np.asarray(done).any()
+    for _ in range(2):
+        states, obs, rew, done = env.step_batch(states, acts)
+    assert np.asarray(done).all()              # horizon still fires
+
+
+def test_topology_reset_off_keeps_legacy_state_type():
+    """Default envs still thread a bare EpisodeState (no wrapper), so all
+    pre-ISSUE-4 callers and the gym adapter are untouched."""
+    from repro.mac.engine import EpisodeState
+    env = _env()
+    state, _ = env.reset(jax.random.PRNGKey(0))
+    assert isinstance(state, EpisodeState)
+    topo = _topo_env()
+    tstate, _ = topo.reset(jax.random.PRNGKey(0))
+    from repro.env import TopoEnvState
+    assert isinstance(tstate, TopoEnvState)
+
+
 # ------------------------------------------------------- gymnasium adapter
 def test_gym_adapter_protocol():
     gymnasium = pytest.importorskip("gymnasium")
