@@ -1,0 +1,110 @@
+"""Bench-regression gate: rerun every recorded benchmark, fail on regression.
+
+Loads every ``benchmarks/BENCH_*.json`` seeded record, re-runs the
+benchmark that produced it (``--smoke`` shrinks shapes for CI) and fails
+if the rerun's gated ratio regresses past the record's stored gate.  The
+records are self-describing (written by ``paper_benches._write_record``):
+
+* ``gated_metric``      -- the name of the ratio the gate bounds
+* ``gate``              -- the bound at full benchmark shapes
+* ``smoke_gate``        -- the bound a smoke-shape rerun must meet (CI
+                           runners + tiny shapes are noisier, so some
+                           benches store a looser smoke bound)
+* ``gate_direction``    -- "max": healthy ratios stay BELOW the gate
+                           (cost ratios); "min": healthy ratios stay
+                           ABOVE it (speed-ups)
+
+so adding a new gated benchmark needs no checker change beyond the
+``RERUNS`` name -> function entry.  Each bench also asserts its own
+internal gates (equivalence tolerances etc.) while re-running, so this
+step subsumes the per-bench smoke invocations CI used to carry.
+
+Run:  PYTHONPATH=src python -m benchmarks.check_regressions [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def _reruns():
+    from benchmarks import paper_benches as pb
+    return {
+        "mac_episode": pb.mac_episode,
+        "env_episode": pb.env_episode,
+        "sharded_episode": pb.sharded_episode,
+        "smart_update_scan": pb.smart_update_scan,
+    }
+
+
+def check(record_path: str, smoke: bool) -> str:
+    """Rerun one record's bench; returns a human-readable verdict line.
+
+    Raises ``AssertionError`` on a regression past the stored gate.
+    """
+    with open(record_path) as f:
+        record = json.load(f)
+    bench = record.get("bench")
+    reruns = _reruns()
+    if bench not in reruns:
+        return (f"{os.path.basename(record_path)}: no rerun registered "
+                f"for bench {bench!r} -- SKIPPED")
+    metric = record.get("gated_metric")
+    if metric is None:
+        return (f"{os.path.basename(record_path)}: record carries no "
+                f"gated_metric -- SKIPPED (re-seed with a full bench run)")
+    gate = record["smoke_gate"] if smoke and "smoke_gate" in record \
+        else record["gate"]
+    direction = record.get("gate_direction", "max")
+    name, us, derived = reruns[bench]()    # internal gates assert here too
+    if smoke:
+        # every bench's smoke return value IS its gated ratio (no record
+        # is written at smoke shapes)
+        ratio = derived
+    else:
+        # a full-shape rerun re-seeds the record file; its gated metric
+        # is authoritative (some benches return a different headline
+        # number in full mode, e.g. mac_episode's scan-vs-graph speedup)
+        with open(record_path) as f:
+            ratio = json.load(f)[metric]
+    healthy = ratio < gate if direction == "max" else ratio > gate
+    verdict = (f"{bench}: {metric} rerun={ratio:.3f} vs stored "
+               f"{record.get(metric)} (gate {'<' if direction == 'max' else '>'}"
+               f" {gate}{' smoke' if smoke else ''})")
+    assert healthy, f"REGRESSION {verdict}"
+    return verdict + " OK"
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrunken shapes + smoke gates (CI)")
+    ap.add_argument("--only", default="",
+                    help="check only records whose filename contains SUBSTR")
+    args = ap.parse_args(argv)
+    from benchmarks import paper_benches
+    paper_benches.SMOKE = args.smoke
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    records = sorted(glob.glob(os.path.join(here, "BENCH_*.json")))
+    records = [r for r in records if args.only in os.path.basename(r)]
+    if not records:
+        raise SystemExit(f"no BENCH_*.json records match {args.only!r}")
+    failures = []
+    for path in records:
+        try:
+            print(f"== {check(path, args.smoke)}")
+        except AssertionError as e:
+            failures.append(str(e))
+            print(f"== {e}")
+        sys.stdout.flush()
+    if failures:
+        raise SystemExit("\n".join(failures))
+    print(f"all {len(records)} recorded benchmarks within their gates")
+
+
+if __name__ == "__main__":
+    main()

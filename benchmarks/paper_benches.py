@@ -230,10 +230,31 @@ def _episode_us_per_tti(sim, n_tti, key, reps=1, **kw):
     return best / n_tti * 1e6
 
 
+def _write_record(filename, record):
+    """Persist a seeded benchmark record next to this module.
+
+    Every record is self-describing for the CI regression gate
+    (``benchmarks.check_regressions``): ``gated_metric`` names the ratio
+    field, ``gate``/``smoke_gate`` bound it at full/smoke shapes, and
+    ``gate_direction`` says which side is healthy ("max" = must stay
+    below, "min" = must stay above).
+    """
+    import json
+    import os
+
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        filename)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# {record['bench']}: wrote {path}")
+
+
 def mac_episode(n_ues=1000, n_cells=57, n_tti=100):
     """us/TTI for a Poisson-traffic PF episode: lax.scan engine vs a Python
     per-TTI loop over the (smart) graph, plus the per-RB link-adaptation
-    cost (fully frequency-selective CQI + HARQ vs the wideband path)."""
+    cost (fully frequency-selective CQI + HARQ vs the wideband path).
+    Seeds/updates ``benchmarks/BENCH_mac.json`` (full mode only)."""
     if SMOKE:
         n_ues, n_cells, n_tti = 200, 19, 20
     common = dict(n_ues=n_ues, n_cells=n_cells, n_sectors=1, seed=3,
@@ -283,6 +304,16 @@ def mac_episode(n_ues=1000, n_cells=57, n_tti=100):
     print(f"# mac_episode: scan {us_scan:.1f} us/TTI, "
           f"graph loop {us_loop:.1f} us/TTI "
           f"({n_ues} UEs x {n_tti} TTIs, poisson+pf)")
+    _write_record("BENCH_mac.json", {
+        "bench": "mac_episode", "n_ues": n_ues, "n_cells": n_cells,
+        "n_tti": n_tti, "us_per_tti_scan": round(us_scan, 2),
+        "us_per_tti_per_rb": round(us_rb, 2),
+        "us_per_tti_graph_loop": round(us_loop, 2),
+        "scan_speedup_vs_graph_loop": round(us_loop / us_scan, 3),
+        "per_rb_cost": round(rb_cost, 3),
+        "gated_metric": "per_rb_cost", "gate_direction": "max",
+        "gate": PER_RB_MAX_SLOWDOWN,
+        "smoke_gate": PER_RB_MAX_SLOWDOWN_SMOKE})
     return "mac_episode_scan_speedup", us_scan, us_loop / us_scan
 
 
@@ -301,9 +332,6 @@ def env_episode(n_ues=500, n_cells=19, n_tti=200):
     episodes (one compiled program) vs the same episode run sequentially
     through ``run_episode``; plus a sweep of the named scenario presets.
     Seeds/updates ``benchmarks/BENCH_env.json``."""
-    import json
-    import os
-
     from repro.env import CrrmEnv
     from repro.sim.scenarios import make_scenario, scenario_names
 
@@ -358,12 +386,41 @@ def env_episode(n_ues=500, n_cells=19, n_tti=200):
         states, obs, _, _ = env.step_batch(states, acts)
         return obs.tput
 
-    roll_batch_action().block_until_ready()
-    t0 = time.perf_counter()
-    roll_batch_action().block_until_ready()
-    us_batched_act = (time.perf_counter() - t0) / (n_tti * batch) * 1e6
+    def _best_of(fn):
+        fn().block_until_ready()                     # compile + warm
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn().block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        return best / (n_tti * batch) * 1e6
+
+    us_batched_act = _best_of(roll_batch_action)
     print(f"# env_episode: batched with power action "
           f"{us_batched_act:.1f} us/TTI/episode")
+
+    # the incremental radio mode holds the scan-constant action's chain in
+    # one prepare-time init instead of a per-TTI dense recompute -- the
+    # action step must get cheaper (ISSUE 5 acceptance: beat the dense
+    # action cost, which was 3x the passive step)
+    env_inc = CrrmEnv(CRRM_parameters(**common), episode_tti=n_tti,
+                      tti_per_step=n_tti, radio_mode="incremental")
+
+    def roll_batch_action_inc():
+        states, _ = env_inc.reset_batch(keys)
+        states, obs, _, _ = env_inc.step_batch(states, acts)
+        return obs.tput
+
+    np.testing.assert_allclose(np.asarray(roll_batch_action_inc()),
+                               np.asarray(roll_batch_action()),
+                               rtol=1e-4, atol=1.0)
+    us_batched_act_inc = _best_of(roll_batch_action_inc)
+    print(f"# env_episode: batched action, incremental radio mode "
+          f"{us_batched_act_inc:.1f} us/TTI/episode "
+          f"({us_batched_act_inc / us_batched_act:.2f}x of dense action)")
+    assert us_batched_act_inc < us_batched_act, (
+        f"incremental action step ({us_batched_act_inc:.1f} us/TTI) must "
+        f"beat the dense per-TTI recompute ({us_batched_act:.1f} us/TTI)")
 
     # scenario sweep: every named preset steps as an env (shrunk shapes)
     shrink = dict(n_ues=min(n_ues, 60), n_cells=7, n_sectors=1)
@@ -391,16 +448,16 @@ def env_episode(n_ues=500, n_cells=19, n_tti=200):
               "us_per_tti_single": round(us_single, 2),
               "us_per_tti_per_episode_batched": round(us_batched, 2),
               "batched_vs_single_ratio": round(ratio, 3),
+              "gated_metric": "batched_vs_single_ratio",
+              "gate_direction": "max",
               "gate": ENV_BATCH_MAX_SLOWDOWN,
+              "smoke_gate": ENV_BATCH_MAX_SLOWDOWN,
               "us_per_tti_per_episode_batched_action":
                   round(us_batched_act, 2),
+              "us_per_tti_per_episode_batched_action_incremental":
+                  round(us_batched_act_inc, 2),
               "scenarios": sweep}
-    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                        "BENCH_env.json")
-    with open(path, "w") as f:
-        json.dump(record, f, indent=2, sort_keys=True)
-        f.write("\n")
-    print(f"# env_episode: wrote {path}")
+    _write_record("BENCH_env.json", record)
     return "env_episode_batched_cost", us_batched, ratio
 
 
@@ -495,22 +552,95 @@ def sharded_episode(n_ues=100_000, n_cells=19, n_tti=50, n_dev=2):
         f"sharded episode {rec['ratio']:.2f}x slower per TTI than single "
         f"device (gate {gate}x)")
     if not SMOKE:
-        record = {"bench": "sharded_episode", "n_ues": n_ues,
-                  "n_cells": n_cells, "n_tti": n_tti, "n_devices": n_dev,
-                  "us_per_tti_single": round(rec["us_per_tti_single"], 2),
-                  "us_per_tti_sharded": round(rec["us_per_tti_sharded"], 2),
-                  "sharded_vs_single_ratio": round(rec["ratio"], 3),
-                  "max_rel_err": rec["max_rel_err"], "gate": gate}
-        path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                            "BENCH_sharded.json")
-        with open(path, "w") as f:
-            json.dump(record, f, indent=2, sort_keys=True)
-            f.write("\n")
-        print(f"# sharded_episode: wrote {path}")
+        _write_record("BENCH_sharded.json", {
+            "bench": "sharded_episode", "n_ues": n_ues,
+            "n_cells": n_cells, "n_tti": n_tti, "n_devices": n_dev,
+            "us_per_tti_single": round(rec["us_per_tti_single"], 2),
+            "us_per_tti_sharded": round(rec["us_per_tti_sharded"], 2),
+            "sharded_vs_single_ratio": round(rec["ratio"], 3),
+            "max_rel_err": rec["max_rel_err"],
+            "gated_metric": "sharded_vs_single_ratio",
+            "gate_direction": "max", "gate": gate,
+            "smoke_gate": SHARDED_MAX_SLOWDOWN_SMOKE})
     return "sharded_episode_cost_ratio", rec["us_per_tti_sharded"], \
         rec["ratio"]
 
 
+# -- smart update INSIDE the compiled TTI engine (ISSUE 5 tentpole) ----------
+#: a 100k-UE episode with 10% of UEs moving per TTI must run >= this factor
+#: faster per TTI in radio_mode="incremental" than the dense recompute
+#: (stored-record gate; the measured speedup target is 3x).
+SMART_UPDATE_MIN_SPEEDUP = 2.0
+#: CI smoke shapes are small enough that dispatch overhead narrows the gap;
+#: the smoke gate only requires the incremental path to win at all.
+SMART_UPDATE_MIN_SPEEDUP_SMOKE = 1.05
+
+
+def smart_update_scan(n_ues=100_000, n_cells=127, n_tti=20, frac=0.10):
+    """us/TTI for the digital-twin mobility regime (10% of UEs walk per
+    TTI): radio_mode="incremental" (dirty rows only, inside the scan) vs
+    the dense full-chain recompute, trajectories asserted equal to 1e-5.
+    A 127-cell metro grid: the dense-interference regime where the
+    O(n_ue x n_cell) chain recompute dominates the per-TTI budget.
+    Seeds/updates ``benchmarks/BENCH_smart_update.json`` (full mode)."""
+    if SMOKE:
+        n_ues, n_cells, n_tti = 4096, 57, 10
+    gate = SMART_UPDATE_MIN_SPEEDUP_SMOKE if SMOKE \
+        else SMART_UPDATE_MIN_SPEEDUP
+    # full-buffer pf: the O(n_ue) scatter-add scheduler (rr's within-cell
+    # rank cumsum is O(n_ue x n_cell) and would dominate the MAC floor),
+    # so the ratio isolates the radio-chain recompute the smart update
+    # elides; single-device float reductions keep dense-vs-incremental
+    # bitwise-clean
+    kw = dict(n_ues=n_ues, n_cells=n_cells, n_sectors=1, seed=3,
+              pathloss_model_name="UMa", power_W=10.0,
+              scheduler_policy="pf", fairness_p=0.5,
+              mobility_step_m=20.0, mobility_move_frac=frac)
+    key = jax.random.PRNGKey(0)
+    reps = 3
+
+    def run(mode):
+        sim = CRRM(CRRM_parameters(radio_mode=mode, **kw))
+        fns = sim.episode_fns()
+        static, state = sim.episode_static(), sim.init_episode_state(key)
+        out = fns.rollout(static, state, n_tti)       # compile + warm
+        jax.block_until_ready(out)
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = fns.rollout(static, state, n_tti)
+            jax.block_until_ready(out)
+            best = min(best, time.perf_counter() - t0)
+        return best / n_tti * 1e6, np.asarray(out[1])
+
+    us_dense, t_dense = run("dense")
+    us_inc, t_inc = run("incremental")
+    rel = float(np.abs(t_inc - t_dense).max()
+                / max(np.abs(t_dense).max(), 1.0))
+    assert rel < 1e-5, (
+        f"incremental trajectory deviates from dense: {rel:.3e}")
+    speedup = us_dense / us_inc
+    print(f"# smart_update_scan: {n_ues} UEs x {n_cells} cells x {n_tti} "
+          f"TTIs at {frac:.0%} dirty: dense {us_dense:.1f} us/TTI, "
+          f"incremental {us_inc:.1f} us/TTI -> x{speedup:.2f} "
+          f"(gate {gate}x), max rel err {rel:.2e}")
+    assert speedup > gate, (
+        f"incremental path only x{speedup:.2f} vs dense (gate {gate}x)")
+    if not SMOKE:
+        _write_record("BENCH_smart_update.json", {
+            "bench": "smart_update_scan", "n_ues": n_ues,
+            "n_cells": n_cells, "n_tti": n_tti, "dirty_frac": frac,
+            "us_per_tti_dense": round(us_dense, 2),
+            "us_per_tti_incremental": round(us_inc, 2),
+            "incremental_speedup": round(speedup, 3),
+            "max_rel_err": rel,
+            "gated_metric": "incremental_speedup",
+            "gate_direction": "min", "gate": SMART_UPDATE_MIN_SPEEDUP,
+            "smoke_gate": SMART_UPDATE_MIN_SPEEDUP_SMOKE})
+    return "smart_update_scan_speedup", us_inc, speedup
+
+
 ALL = [fig2_pathloss_throughput, fig3_sectors, fig4_fairness,
        fig5_ppp_validation, tab_smart_update, tab_mobility_sweep,
-       kernel_fused_sinr, mac_episode, env_episode, sharded_episode]
+       kernel_fused_sinr, mac_episode, env_episode, sharded_episode,
+       smart_update_scan]

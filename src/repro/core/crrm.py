@@ -317,19 +317,25 @@ class CRRM:
             bore=self.boresight._data, fad=self.fading._data)
 
     def episode_fns(self, mobility_step_m=None, per_tti_fading: bool = False,
-                    use_harq=None, mesh=None, ue_axis=("ue",)):
+                    use_harq=None, mesh=None, ue_axis=("ue",),
+                    radio_mode=None, mobility_move_frac=None):
         """The pure ``(step, rollout)`` episode functions for this
         simulator's topology and MAC parameters (``EpisodeFns``), cached
         per trace-time switch combination.  Both are jit-compiled and
         vmap-compatible: N parallel episodes = ``vmap`` over the state
         (see ``repro.env.CrrmEnv``).  ``mesh`` shard_maps the rollout over
         the UE axis of a device mesh (``ue_axis`` names the mesh axes) for
-        >100k-UE episodes -- see DESIGN.md §Radio-fns."""
+        >100k-UE episodes -- see DESIGN.md §Radio-fns.
+        ``radio_mode="incremental"`` recomputes only dirty UE rows of the
+        radio chain inside the scan and ``mobility_move_frac`` bounds the
+        per-TTI dirtiness (DESIGN.md §Smart-update-in-scan); both default
+        to the corresponding ``CRRM_parameters`` fields."""
         from repro.mac import engine as mac_engine
         return mac_engine.episode_fns_for(
             self, mobility_step_m=mobility_step_m,
             per_tti_fading=per_tti_fading, use_harq=use_harq,
-            mesh=mesh, ue_axis=ue_axis)
+            mesh=mesh, ue_axis=ue_axis, radio_mode=radio_mode,
+            mobility_move_frac=mobility_move_frac)
 
     def sync_episode_state(self, state, positions: bool = False) -> None:
         """Write a final ``EpisodeState`` back into the graph (legacy
@@ -355,7 +361,8 @@ class CRRM:
 
     def run_episode(self, n_tti: int, key=None, mobility_step_m=None,
                     per_tti_fading: bool = False, sync_state: bool = True,
-                    use_harq=None):
+                    use_harq=None, radio_mode=None,
+                    mobility_move_frac=None):
         """Roll ``n_tti`` TTIs as one ``lax.scan`` program.
 
         Returns (n_tti, n_ues) delivered throughput in bits/s.  A thin
@@ -371,7 +378,8 @@ class CRRM:
         return mac_engine.run_episode(
             self, n_tti, key=key, mobility_step_m=mobility_step_m,
             per_tti_fading=per_tti_fading, sync_state=sync_state,
-            use_harq=use_harq)
+            use_harq=use_harq, radio_mode=radio_mode,
+            mobility_move_frac=mobility_move_frac)
 
     # -------------------------------------------------------------- introspection
     def update_counts(self):

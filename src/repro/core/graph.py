@@ -23,10 +23,15 @@ power-of-two bucket compiles exactly once.
 """
 from __future__ import annotations
 
-from typing import Iterable
-
 import jax.numpy as jnp
 import numpy as np
+
+# THE dirtiness convention (repeated-valid-index padding, idempotent row
+# recompute) lives in repro.sim.radio next to its traced twin
+# ``dirty_indices`` -- the scan-compiled incremental path and these graph
+# row buckets are two faces of one convention (DESIGN.md
+# §Smart-update-in-scan).  Re-exported here for the node machinery.
+from repro.sim.radio import pad_indices  # noqa: F401
 
 
 class _AllRows:
@@ -37,21 +42,6 @@ class _AllRows:
 
 
 ALL = _AllRows()
-
-
-def pad_indices(rows: Iterable[int]) -> np.ndarray:
-    """Pad a dirty-row index set to the next power-of-two bucket.
-
-    Padding repeats the first index, which makes the padded recompute
-    idempotent while keeping the number of distinct jit specialisations
-    logarithmic in the row count.
-    """
-    idx = np.asarray(sorted(rows), dtype=np.int32)
-    n = len(idx)
-    bucket = 1 << max(0, (n - 1).bit_length())
-    if bucket > n:
-        idx = np.concatenate([idx, np.full(bucket - n, idx[0], np.int32)])
-    return idx
 
 
 class Node:

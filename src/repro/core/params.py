@@ -100,6 +100,21 @@ class CRRM_parameters:
     #: geometry; an explicit ``mobility_step_m`` argument to
     #: ``run_episode``/``episode_fns`` overrides it (``0`` forces static).
     mobility_step_m: Optional[float] = None
+    #: fraction of UEs taking a mobility step each TTI (the digital-twin
+    #: regime: huge mostly-static UE fields where only a few move).  The
+    #: engine selects exactly ``round(frac * n_ues)`` movers per TTI
+    #: (``sim.mobility.window_movers``); ``None``/``1.0`` moves every UE
+    #: (the legacy walk).  This is also the dirty-row budget of
+    #: ``radio_mode="incremental"``.
+    mobility_move_frac: Optional[float] = None
+    #: execution mode of the radio chain inside the episode engine:
+    #: "dense" recomputes the full D..SE chain whenever the channel is
+    #: dynamic (legacy); "incremental" carries a ``radio.RadioState`` in
+    #: the scan and recomputes only dirty UE rows (the paper's smart
+    #: update, inside the compiled TTI engine -- DESIGN.md
+    #: §Smart-update-in-scan).  Equivalent within 1e-5 (bit-exact in the
+    #: non-handover regimes); incompatible with per-TTI fading.
+    radio_mode: str = "dense"
     #: A3-style handover inside the episode engine.  Disabled (False), the
     #: serving cell is the instantaneous strongest cell, recomputed per TTI
     #: when the channel is dynamic -- the legacy PR-1 behaviour.
@@ -149,6 +164,13 @@ class CRRM_parameters:
             raise ValueError("harq_comb_gain_db must be >= 0")
         if self.mobility_step_m is not None and self.mobility_step_m < 0.0:
             raise ValueError("mobility_step_m must be >= 0 (or None)")
+        if self.mobility_move_frac is not None and not (
+                0.0 < self.mobility_move_frac <= 1.0):
+            raise ValueError("mobility_move_frac must be in (0, 1] (or None)")
+        if self.radio_mode not in ("dense", "incremental"):
+            raise ValueError(
+                f"radio_mode must be 'dense' or 'incremental'; "
+                f"got {self.radio_mode!r}")
         if self.ho_hysteresis_db < 0.0:
             raise ValueError("ho_hysteresis_db must be >= 0")
         if self.ho_ttt_tti < 1:

@@ -115,6 +115,17 @@ class CrrmEnv:
         state becomes a :class:`TopoEnvState`.
     reward_fn:
         ``EnvObs -> scalar``; defaults to :func:`buffer_aware_reward`.
+    radio_mode:
+        Radio execution mode inside the scan (``"dense"`` |
+        ``"incremental"``; ``None`` defers to ``params.radio_mode``).
+        ``"incremental"`` removes the action step's radio-recompute tax:
+        the action is held constant over the ``tti_per_step`` scan, so
+        its radio chain is computed ONCE per ``step`` (the prepare-time
+        ``radio_init``) instead of every TTI -- asserted cheaper than the
+        dense recompute in ``benchmarks/BENCH_env.json``.  (The remaining
+        action-vs-passive gap is the schedulers' per-cell scatters over
+        *per-episode* attachment indices under ``vmap`` -- a MAC cost,
+        not a radio one; see DESIGN.md §Smart-update-in-scan.)
     """
 
     def __init__(self, params: Optional[CRRM_parameters] = None, *,
@@ -122,7 +133,8 @@ class CrrmEnv:
                  scenario_overrides: Optional[dict] = None,
                  episode_tti: int = 200, tti_per_step: int = 20,
                  per_tti_fading: bool = False,
-                 resample_topology: bool = False, reward_fn=None):
+                 resample_topology: bool = False, reward_fn=None,
+                 radio_mode: Optional[str] = None):
         if (params is None) == (scenario is None):
             raise ValueError("pass exactly one of params= or scenario=")
         if scenario is not None:
@@ -141,7 +153,8 @@ class CrrmEnv:
         self.n_ues, self.n_cells = self.sim.n_ues, self.sim.n_cells
         self.n_subbands = self.params.n_subbands
         self._reward_fn = reward_fn or buffer_aware_reward
-        self._fns = self.sim.episode_fns(per_tti_fading=per_tti_fading)
+        self._fns = self.sim.episode_fns(per_tti_fading=per_tti_fading,
+                                         radio_mode=radio_mode)
         self._static = self.sim.episode_static()
         self._radio_static = self.sim.radio_static()
         # the reset template: PF EWMA seeded at the stationary alpha-fair

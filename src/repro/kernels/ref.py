@@ -1,16 +1,21 @@
-"""Pure-jnp oracles for the Pallas kernels (the correctness references)."""
+"""Pure-jnp oracles for the Pallas kernels (the correctness references).
+
+Since PR 5 these are thin delegations into the pure radio chain of
+``repro.sim.radio`` -- the same functions the smart-update graph, the scan
+engine and ``radio_forward`` execute -- instead of a third hand-rolled copy
+of the pathgain/RSRP math.  A kernel-vs-reference check therefore also
+cross-validates the kernel against every other consumer of the chain
+(tests/test_kernel_vs_crrm.py runs the fused kernel against
+``radio_forward`` across all registry scenarios).
+"""
 from __future__ import annotations
 
-import jax.numpy as jnp
+from repro.sim import radio
 
 
 def pairwise_dist_ref(U, C):
-    """(d2d, d3d) for UE rows x cell columns; plain broadcasting."""
-    dx = U[:, None, 0] - C[None, :, 0]
-    dy = U[:, None, 1] - C[None, :, 1]
-    dz = U[:, None, 2] - C[None, :, 2]
-    d2d = jnp.sqrt(dx * dx + dy * dy)
-    d3d = jnp.sqrt(d2d * d2d + dz * dz)
+    """(d2d, d3d) for UE rows x cell columns (``radio.compute_distances``)."""
+    d2d, d3d, _ = radio.compute_distances(U, C)
     return d2d, d3d
 
 
@@ -18,16 +23,14 @@ def fused_sinr_ref(U, C, Pw, pathgain_fn, noise_w):
     """Materialised reference for the fused pipeline.
 
     Returns (gamma, a, w, u): per-UE-per-subband SINR, serving cell,
-    wanted and unwanted power.  Attachment = argmax of wideband RSRP,
-    ties broken toward the lowest cell index (matches jnp.argmax).
+    wanted and unwanted power -- the radio chain's unfaded
+    D -> G -> RSRP -> a -> w/u -> gamma composition.  Attachment = argmax
+    of wideband RSRP, ties broken toward the lowest cell index (matches
+    ``jnp.argmax``, and the kernel's tie-break).
     """
-    d2d, d3d = pairwise_dist_ref(U, C)
+    d2d, d3d, _ = radio.compute_distances(U, C)
     g = pathgain_fn(d2d, d3d, C[None, :, 2], U[:, None, 2])
-    r = g[:, :, None] * Pw[None, :, :]            # (N, M, K)
-    total = r.sum(axis=1)                          # (N, K)
-    wide = r.sum(axis=2)                           # (N, M)
-    a = jnp.argmax(wide, axis=1).astype(jnp.int32)
-    w = jnp.take_along_axis(r, a[:, None, None], axis=1)[:, 0, :]
-    u = total - w
-    gamma = w / (noise_w + u)
+    r = radio.rsrp(g, Pw)                          # (N, M, K)
+    a = radio.attachment(r)
+    gamma, w, u = radio.sinr(r, a, noise_w)
     return gamma, a, w, u

@@ -216,8 +216,9 @@ def stationary_served_tput(params, n_cells: int, se, cqi, a, backlog):
 def make_episode_fns(params, n_ues: int, n_cells: int,
                      radio_cfg: "radio.RadioConfig", traffic_step, *,
                      mobility_step_m=None, per_tti_fading: bool = False,
-                     use_harq=None, mesh=None,
-                     ue_axis=("ue",)) -> EpisodeFns:
+                     use_harq=None, mesh=None, ue_axis=("ue",),
+                     radio_mode: str = "dense",
+                     mobility_move_frac=None) -> EpisodeFns:
     """Build the pure ``step``/``rollout`` functions for one configuration.
 
     ``params`` is a ``CRRM_parameters``; ``radio_cfg`` the hashable pure-
@@ -234,8 +235,26 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
     single-device case; sharding is an execution detail.
 
     The trace-time feature switches (mobility / per-TTI fading / HARQ /
-    handover / per-RB grid) are baked here; ``n_tti`` and the presence of
-    an ``action`` specialise via the jit cache on the returned functions.
+    handover / per-RB grid / ``radio_mode`` / ``mobility_move_frac``) are
+    baked here; ``n_tti`` and the presence of an ``action`` specialise via
+    the jit cache on the returned functions.
+
+    ``radio_mode="incremental"`` carries a ``radio.RadioState`` alongside
+    the MAC carry and recomputes only the *dirty* UE rows of the radio
+    chain per TTI (DESIGN.md §Smart-update-in-scan): with
+    ``mobility_move_frac`` set, exactly that fraction of UEs walks per TTI
+    (``sim.mobility.window_movers``) and only their rows re-run
+    D→G→RSRP→SINR→CQI→SE; a power ``action`` is scan-constant, so its
+    cell dirt collapses into one prepare-time ``radio.radio_init`` and
+    the scan body is then MAC-only.  Equivalent to ``"dense"`` within the
+    sharded gate's 1e-5 (bit-exact in the non-handover regimes);
+    incompatible with ``per_tti_fading`` (every row dirty every TTI --
+    dense IS the smart update there).
+
+    ``mobility_move_frac`` also applies to the dense mode (the control
+    arm of the smart-update benchmark): the same window-mover draw, with
+    the full chain recomputed -- so dense and incremental trajectories
+    are comparable at identical dirtiness.
     """
     p = params
     cfg = radio_cfg
@@ -250,6 +269,29 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
     noise_w = p.chunk_noise_W
     attach_on_mean = p.rayleigh_fading and p.attach_ignores_fading
     static_geom = mobility_step_m is None
+    if radio_mode not in ("dense", "incremental"):
+        raise ValueError(f"radio_mode must be 'dense' or 'incremental'; "
+                         f"got {radio_mode!r}")
+    incremental = radio_mode == "incremental"
+    if incremental and per_tti_fading:
+        raise ValueError(
+            "radio_mode='incremental' is incompatible with per_tti_fading: "
+            "a per-TTI fading redraw dirties every UE row every TTI, so "
+            "the dense recompute IS the minimal update")
+    frac_on = (mobility_step_m is not None and mobility_move_frac is not None
+               and mobility_move_frac < 1.0)
+    n_move = (max(1, int(round(mobility_move_frac * n_ues))) if frac_on
+              else n_ues)
+
+    def use_rs(power_act: bool) -> bool:
+        """Does this specialisation run on a RadioState?  Incremental mode
+        with something to update: in-scan mobility dirt, or a power action
+        whose chain is initialised once at prepare time.  The state is
+        *carried* only when mobility mutates it; a static-geometry action
+        chain is loop-invariant and rides the hoisted constants instead
+        (a pass-through carry would defeat XLA's loop-invariant hoisting
+        of the downstream MAC subexpressions -- measured 2x per TTI)."""
+        return incremental and (not static_geom or power_act)
 
     # -- mesh layout (None = single device, the exact legacy program) ------
     if mesh is not None:
@@ -264,6 +306,12 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
     else:
         ue_axes, n_shards = None, 1
 
+    n_loc = n_ues // n_shards        # rows owned by one shard (= n_ues unsharded)
+
+    def local_offset():
+        """Global UE index of this shard's first row (0 unsharded)."""
+        return 0 if ue_axes is None else _axis_index(ue_axes) * n_loc
+
     def local_rows(x):
         """Slice a global-UE-axis array to this shard's contiguous block.
 
@@ -275,9 +323,7 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
         """
         if ue_axes is None:
             return x
-        n_loc = n_ues // n_shards
-        lo = _axis_index(ue_axes) * n_loc
-        return jax.lax.dynamic_slice_in_dim(x, lo, n_loc, axis=0)
+        return jax.lax.dynamic_slice_in_dim(x, local_offset(), n_loc, axis=0)
 
     def unfaded_gain(U, C, bore):
         return radio.pathgains(cfg, U, C, bore)
@@ -294,6 +340,84 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
         gamma, _, _ = radio.sinr(R, a, noise_w)
         se, cqi = radio.se_chain(cfg, gamma)
         return se, cqi, a
+
+    def gather_serving(se_all, cqi_all, a):
+        """(se, cqi) rows of the per-candidate-cell tables at serving
+        ``a`` -- the two-gather handover read shared by the hoisted dense
+        tables and the incremental RadioState."""
+        sel = a[:, None, None]
+        return (jnp.take_along_axis(se_all, sel, axis=1)[:, 0],
+                jnp.take_along_axis(cqi_all, sel, axis=1)[:, 0])
+
+    # -- incremental (smart-update-in-scan) helpers ------------------------
+    def inc_fad(static):
+        """The fading tensor the incremental chain consumes: ``None`` on
+        the unfaded channel (``G0 * ones == G0`` bitwise; eliding the
+        ones gather/multiply is pure profit on the 100k-row hot path)."""
+        return static.fad if p.rayleigh_fading else None
+
+    def init_rs(static, U, action):
+        """Prepare-time ``radio.RadioState``: the everything-dirty base
+        case, computed once outside the scan.  A power ``action`` is
+        scan-constant, so this is also where its cell dirt is absorbed
+        (the scan body then only patches mobility rows)."""
+        P = static.P if action is None else action
+        return radio.radio_init(cfg, U, static.C, static.bore,
+                                inc_fad(static), P, with_tables=ho_on)
+
+    def walk_displacements(k_mob):
+        """This TTI's per-row displacement + the window start (local rows).
+
+        ``mobility_move_frac`` set: the exact-count window-mover draw
+        (global draw, per-shard reconstruction).  Unset: the legacy
+        every-UE walk (start None = all rows dirty) -- the PR-4 stream,
+        bit-untouched.
+        """
+        if frac_on:
+            start, d = mobility.window_movers(k_mob, n_ues, n_move,
+                                              mobility_step_m)
+            rows = local_offset() + jnp.arange(n_loc)
+            d_loc, _ = mobility.window_displacements(start, d, rows, n_ues)
+            return d_loc, start
+        d = local_rows(mobility.walk_steps(k_mob, n_ues, mobility_step_m))
+        return d, None
+
+    def window_dirty_indices(start):
+        """The mover window's local dirty rows, enumerated in O(n_move).
+
+        The generic mask path (``radio.dirty_indices``) pays an O(n_ues)
+        compaction per TTI -- measurably the incremental path's largest
+        fixed cost at 100k UEs.  The window movers are *contiguous* global
+        indices, so each of the ``n_move`` window slots maps straight to a
+        local row: out-of-shard slots pad with row 0, THE idempotent
+        valid-index padding of the dirtiness convention.  When the window
+        covers the shard (n_move >= n_loc) every local row recomputes.
+        """
+        if n_move >= n_loc:
+            return jnp.arange(n_loc, dtype=jnp.int32)
+        g = (start + jnp.arange(n_move, dtype=jnp.int32)) % n_ues
+        local = g - local_offset()
+        valid = (local >= 0) & (local < n_loc)
+        return jnp.where(valid, local, 0).astype(jnp.int32)
+
+    def inc_channel(static, rs, U, P, k_mob):
+        """One incremental TTI of the radio chain: move, patch, read.
+
+        Only the moved rows re-run D→G→RSRP→SINR→CQI→SE
+        (``radio.radio_update_rows`` under THE dirtiness convention);
+        everything else is a carried value that a dense recompute would
+        reproduce bit-identically.  Returns the updated ``(U, rs)``.
+        """
+        if mobility_step_m is not None:
+            d, start = walk_displacements(k_mob)
+            U = mobility.apply_walk(U, d, p.extent_m)
+            if start is None:
+                idx = jnp.arange(n_loc, dtype=jnp.int32)
+            else:
+                idx = window_dirty_indices(start)
+            rs = radio.radio_update_rows(cfg, rs, U, static.C, static.bore,
+                                         inc_fad(static), P, idx)
+        return U, rs
 
     def allocate(se, cqi, a, buf, avg, cursor, harq_pending):
         demand = (buf[:, None] > 0.0) | harq_pending[:, None]
@@ -338,6 +462,9 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
         the unfaded gain -- pure geometry -- survives hoisting.
         """
         h = {}
+        if use_rs(power_act):
+            # the incremental path hoists through its RadioState instead
+            return h
         if static_geom and (per_tti_fading or ho_on or power_act):
             # static geometry: one unfaded gain/attachment pass, hoisted
             # out of the scan; only the fading factor varies per TTI.
@@ -364,8 +491,11 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
                     h["cqi_all"], h["se_all"] = cqi_all, se_all
         return h
 
-    def tti_step(h, static, state, action):
-        """One pure TTI: (hoisted, static, state, action) -> (state, tput)."""
+    def tti_step(h, static, state, action, rs=None):
+        """One pure TTI: (hoisted, static, state, action, radio-state) ->
+        (state, tput, radio-state).  ``rs`` is the incremental path's
+        carried ``radio.RadioState`` (None on the dense paths, threaded
+        unchanged)."""
         power_act = action is not None
         U, buf, avg = state.U, state.backlog, state.pf_avg
         cursor, key = state.rr_cursor, state.key
@@ -373,12 +503,24 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
                                        state.serving, state.ttt, state.t)
         P = action if power_act else static.P
         k_mob, k_fad, k_tr, k_harq = radio.tti_keys(key, t)
-        # -- channel: (R, R_meas) per TTI, or the hoisted constants --------
-        if mobility_step_m is not None:
+        # -- channel: incremental state (carried or hoisted), per-TTI
+        # recompute, or the hoisted dense constants -------------------------
+        r = rs if rs is not None else h.get("rs")
+        if r is not None:
+            if rs is not None:              # carried: mobility dirties rows
+                U, r = inc_channel(static, r, U, P, k_mob)
+                rs = r
+            if ho_on:
+                a_srv, ttt = a3_handover(a_srv, ttt, r.meas, hyst_db,
+                                         ttt_tti)
+                a_use = a_srv
+                se, cqi = gather_serving(r.se_all, r.cqi_all, a_use)
+            else:
+                se, cqi, a_use = r.se, r.cqi, r.a
+        elif mobility_step_m is not None:
             # random-walk displacement, clamped at the region border
             # (global draw, local slice when sharded)
-            d = local_rows(mobility.walk_steps(k_mob, n_ues,
-                                               mobility_step_m))
+            d, _ = walk_displacements(k_mob)
             U = mobility.apply_walk(U, d, p.extent_m)
             G0 = unfaded_gain(U, static.C, static.bore)
             fad = draw_fading(k_fad) if per_tti_fading else static.fad
@@ -398,23 +540,25 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
             R = R_meas = a_inst = None   # fully static radio chain
 
         # -- serving cell: A3 carried state, or instantaneous argmax ------
-        if ho_on:
-            meas_wb = (R_meas.sum(axis=-1) if R_meas is not None
-                       else h["meas_wb"])
-            a_srv, ttt = a3_handover(a_srv, ttt, meas_wb, hyst_db, ttt_tti)
-            a_use = a_srv
-            if R is not None:
-                se, cqi, _ = sinr_chain(R, a_use)
+        # (the incremental branch above already resolved se/cqi/a_use)
+        if r is None:
+            if ho_on:
+                meas_wb = (R_meas.sum(axis=-1) if R_meas is not None
+                           else h["meas_wb"])
+                a_srv, ttt = a3_handover(a_srv, ttt, meas_wb, hyst_db,
+                                         ttt_tti)
+                a_use = a_srv
+                if R is not None:
+                    se, cqi, _ = sinr_chain(R, a_use)
+                else:
+                    # static channel, evolving attachment: gather from the
+                    # hoisted all-cells SINR-chain tables
+                    se, cqi = gather_serving(h["se_all"], h["cqi_all"],
+                                             a_use)
+            elif R is not None:
+                se, cqi, a_use = sinr_chain(R, a_inst)
             else:
-                # static channel, evolving attachment: gather from the
-                # hoisted all-cells SINR-chain tables
-                sel = a_use[:, None, None]
-                se = jnp.take_along_axis(h["se_all"], sel, axis=1)[:, 0]
-                cqi = jnp.take_along_axis(h["cqi_all"], sel, axis=1)[:, 0]
-        elif R is not None:
-            se, cqi, a_use = sinr_chain(R, a_inst)
-        else:
-            se, cqi, a_use = static.se, static.cqi, static.a
+                se, cqi, a_use = static.se, static.cqi, static.a
 
         # -- MAC: traffic -> grant -> HARQ -> drain ------------------------
         buf = buf + local_rows(traffic_step(k_tr, t))
@@ -441,21 +585,44 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
         avg = (1.0 - beta) * avg + beta * tput
         state = EpisodeState(U, buf, avg, cursor + rb_chunk, key,
                              hbits, hretx, a_srv, ttt, t + 1)
-        return state, tput
+        return state, tput, rs
+
+    def setup(static, U, action):
+        """(hoisted constants, carried RadioState) for one specialisation.
+
+        The incremental modes split on loop-variance: a mobility episode's
+        RadioState mutates per TTI (scan carry ``rs0``); a static-geometry
+        action chain is computed once and *closed over* (``h["rs"]``) so
+        XLA hoists every downstream loop-invariant subexpression exactly
+        as it does for the dense hoisted tables.
+        """
+        h = prepare(static, U, action is not None)
+        rs0 = None
+        if use_rs(action is not None):
+            if static_geom:
+                h["rs"] = init_rs(static, U, action)
+            else:
+                rs0 = init_rs(static, U, action)
+        return h, rs0
 
     # ------------------------------------------------------- single device
     if mesh is None:
         def step(static, state, action=None):
-            h = prepare(static, state.U, action is not None)
-            return tti_step(h, static, state, action)
+            h, rs0 = setup(static, state.U, action)
+            state, tput, _ = tti_step(h, static, state, action, rs0)
+            return state, tput
 
         def rollout(static, state, n_tti, action=None):
-            h = prepare(static, state.U, action is not None)
+            h, rs0 = setup(static, state.U, action)
 
-            def body(s, _):
-                return tti_step(h, static, s, action)
+            def body(carry, _):
+                s, rs = carry
+                s, tput, rs = tti_step(h, static, s, action, rs)
+                return (s, rs), tput
 
-            return jax.lax.scan(body, state, None, length=n_tti)
+            (state, _), tput = jax.lax.scan(body, (state, rs0), None,
+                                            length=n_tti)
+            return state, tput
 
         return EpisodeFns(step=jax.jit(step),
                           rollout=jax.jit(rollout, static_argnums=(2,)))
@@ -501,11 +668,11 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
 
     def step(static, state, action=None):
         def one(static, state, *act):
-            h = prepare(static, state.U, bool(act))
             state = jax.tree_util.tree_map(
                 lambda x: _pvary(x, ue_axes), state)
-            state, tput = tti_step(h, static, state,
-                                   act[0] if act else None)
+            h, rs0 = setup(static, state.U, act[0] if act else None)
+            state, tput, _ = tti_step(h, static, state,
+                                      act[0] if act else None, rs0)
             return revar(state), tput
 
         act_spec = () if action is None else (PSpec(None, None),)
@@ -516,14 +683,18 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
 
     def rollout(static, state, n_tti, action=None):
         def roll(static, state, *act):
-            h = prepare(static, state.U, bool(act))
             init = jax.tree_util.tree_map(
                 lambda x: _pvary(x, ue_axes), state)
+            h, rs0 = setup(static, init.U, act[0] if act else None)
 
-            def body(s, _):
-                return tti_step(h, static, s, act[0] if act else None)
+            def body(carry, _):
+                s, rs = carry
+                s, tput, rs = tti_step(h, static, s,
+                                       act[0] if act else None, rs)
+                return (s, rs), tput
 
-            state, tput = jax.lax.scan(body, init, None, length=n_tti)
+            (state, _), tput = jax.lax.scan(body, (init, rs0), None,
+                                            length=n_tti)
             return revar(state), tput
 
         act_spec = () if action is None else (PSpec(None, None),)
@@ -537,7 +708,8 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
 
 
 def episode_fns_for(sim, *, mobility_step_m=None, per_tti_fading=False,
-                    use_harq=None, mesh=None, ue_axis=("ue",)) -> EpisodeFns:
+                    use_harq=None, mesh=None, ue_axis=("ue",),
+                    radio_mode=None, mobility_move_frac=None) -> EpisodeFns:
     """The :func:`make_episode_fns` bundle for ``sim``, cached on it.
 
     Keyed by the trace-time switches only -- ``n_tti`` and the presence of
@@ -546,26 +718,35 @@ def episode_fns_for(sim, *, mobility_step_m=None, per_tti_fading=False,
     ``mobility_step_m=None`` falls back to the simulator's
     ``params.mobility_step_m`` (scenario presets with a baked-in mobility
     trajectory); pass ``0`` to force the static-geometry program.
+    ``radio_mode``/``mobility_move_frac`` fall back to the corresponding
+    ``CRRM_parameters`` fields the same way.
     """
     if mobility_step_m is None:
         mobility_step_m = getattr(sim.params, "mobility_step_m", None)
     if not mobility_step_m:          # 0 / None -> static geometry
         mobility_step_m = None
+    if radio_mode is None:
+        radio_mode = getattr(sim.params, "radio_mode", "dense")
+    if mobility_move_frac is None:
+        mobility_move_frac = getattr(sim.params, "mobility_move_frac", None)
     ue_axis = (ue_axis,) if isinstance(ue_axis, str) else tuple(ue_axis)
-    cache_key = (mobility_step_m, per_tti_fading, use_harq, mesh, ue_axis)
+    cache_key = (mobility_step_m, per_tti_fading, use_harq, mesh, ue_axis,
+                 radio_mode, mobility_move_frac)
     cache = sim.__dict__.setdefault("_episode_fns_cache", {})
     if cache_key not in cache:
         cache[cache_key] = make_episode_fns(
             sim.params, sim.n_ues, sim.n_cells, sim.radio_config(),
             sim._traffic_step, mobility_step_m=mobility_step_m,
             per_tti_fading=per_tti_fading, use_harq=use_harq,
-            mesh=mesh, ue_axis=ue_axis)
+            mesh=mesh, ue_axis=ue_axis, radio_mode=radio_mode,
+            mobility_move_frac=mobility_move_frac)
     return cache[cache_key]
 
 
 def run_episode(sim, n_tti: int, key=None, mobility_step_m=None,
                 per_tti_fading: bool = False, sync_state: bool = True,
-                use_harq=None, mesh=None):
+                use_harq=None, mesh=None, radio_mode=None,
+                mobility_move_frac=None):
     """Run ``n_tti`` TTIs; returns (n_tti, n_ues) delivered throughput
     (bits/s).
 
@@ -582,7 +763,8 @@ def run_episode(sim, n_tti: int, key=None, mobility_step_m=None,
     """
     fns = episode_fns_for(sim, mobility_step_m=mobility_step_m,
                           per_tti_fading=per_tti_fading, use_harq=use_harq,
-                          mesh=mesh)
+                          mesh=mesh, radio_mode=radio_mode,
+                          mobility_move_frac=mobility_move_frac)
     state = sim.init_episode_state(key)
     static = sim.episode_static()
     state, tput = fns.rollout(static, state, n_tti)

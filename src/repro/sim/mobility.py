@@ -40,6 +40,41 @@ def apply_walk(positions, d, extent_m: float):
     return jnp.concatenate([new_xy, positions[:, 2:3]], axis=1)
 
 
+def window_movers(key, n: int, n_move: int, step_m: float):
+    """Exact-count mover selection: a random-offset circular index window.
+
+    The digital-twin mobility regime (``mobility_move_frac``): exactly
+    ``n_move`` of the ``n`` UEs take a walk step this TTI.  Movers are the
+    circular window ``[start, start + n_move) mod n`` at a uniformly random
+    ``start`` -- UE indices carry no spatial meaning (positions are i.i.d.
+    draws), so a random index window IS a uniform random subset spatially,
+    selected in O(n_move) with *no* permutation sort, and each UE's
+    marginal move probability per TTI is ``n_move / n``.  The exact static
+    count is what gives the incremental radio path its dirty-row budget.
+    Returns ``(start, d)`` with ``d`` the (n_move, 2) displacement draws
+    (global shapes -- the engine's global-draw-then-slice convention).
+    """
+    k_off, k_step = jax.random.split(key)
+    start = jax.random.randint(k_off, (), 0, n)
+    return start, walk_steps(k_step, n_move, step_m)
+
+
+def window_displacements(start, d, rows, n: int):
+    """Per-row displacement + mover mask for the window-mover convention.
+
+    ``rows`` are global UE indices (a shard passes its own block); row r
+    is a mover iff ``(r - start) mod n < n_move`` and then takes draw
+    ``d[(r - start) mod n]`` -- so every shard reconstructs exactly the
+    rows it owns from the same global draw, and a dense all-rows caller
+    gets a zero displacement for non-movers (branch-free).
+    """
+    n_move = d.shape[0]
+    j = (rows - start) % n
+    moved = j < n_move
+    dj = d[jnp.clip(j, 0, n_move - 1)]
+    return jnp.where(moved[:, None], dj, 0.0), moved
+
+
 def random_walk(key, positions, idx, step_m: float, extent_m: float):
     """Displace the selected UEs by a uniform step, clamped at borders."""
     d = walk_steps(key, idx.shape[0], step_m)

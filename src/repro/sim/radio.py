@@ -288,6 +288,233 @@ def se_chain(cfg: RadioConfig, gamma):
 
 
 # ---------------------------------------------------------------------------
+# THE dirtiness convention (DESIGN.md §Smart-update-in-scan)
+# ---------------------------------------------------------------------------
+# Both smart-update surfaces -- the host-driven graph (core/graph.py row
+# buckets) and the scan-compiled incremental path below -- speak one
+# convention: a dirty-row set becomes a *fixed-size index vector padded with
+# a repeated valid row index*.  Row recomputation is idempotent (same inputs
+# -> bit-identical outputs), so padded rows recompute and scatter their own
+# unchanged values; no masking, no `where`, no out-of-bounds clamping.  The
+# host side pads to power-of-two buckets (logarithmic jit specialisations);
+# the traced side compacts a boolean mask to a static budget (one
+# specialisation per budget), which is what survives `lax.scan`, `vmap`
+# batching and `shard_map` sharding unchanged.
+def pad_indices(rows) -> "np.ndarray":
+    """Pad a host-side dirty-row index set to the next power-of-two bucket.
+
+    Padding repeats the first index, which keeps the padded recompute
+    idempotent while bounding the number of distinct jit specialisations
+    logarithmically in the row count.  (Re-exported by ``core.graph`` --
+    the graph's row buckets and the scan's :func:`dirty_indices` are two
+    faces of this one convention.)
+    """
+    import numpy as np
+    idx = np.asarray(sorted(rows), dtype=np.int32)
+    n = len(idx)
+    bucket = 1 << max(0, (n - 1).bit_length())
+    if bucket > n:
+        idx = np.concatenate([idx, np.full(bucket - n, idx[0], np.int32)])
+    return idx
+
+
+def dirty_indices(mask, budget: int):
+    """Compact a traced boolean dirty mask to a ``budget``-sized index vector.
+
+    The traced twin of :func:`pad_indices`: the indices of the True entries,
+    padded with row 0 -- a *valid* row, so the padded recompute is
+    idempotent exactly like the graph's repeated-first-index buckets.
+    ``budget`` must be a static upper bound on the dirty count (dirt beyond
+    the budget would be silently dropped -- callers derive the bound from
+    the mover count).  Pure gather/scatter shapes: composes with ``vmap``
+    and ``shard_map`` (each shard compacts its local mask against the same
+    budget).
+    """
+    (idx,) = jnp.nonzero(mask, size=budget, fill_value=0)
+    return idx.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# the incremental (smart-update-in-scan) path
+# ---------------------------------------------------------------------------
+class RadioState(NamedTuple):
+    """The carried radio tensors of the incremental path.
+
+    Everything the MAC needs per TTI plus what a dirty-row patch must
+    scatter into.  A plain pytree, so it rides a ``lax.scan`` carry, a
+    ``vmap`` batch axis, or a ``shard_map`` UE shard like any other
+    per-UE state.  Optional leaves are ``None`` when the regime doesn't
+    need them (trace-time constant treedef):
+
+    * ``se``/``cqi``/``a`` -- the serving-chain outputs at the
+      instantaneous attachment (non-handover regimes; the O(n_ue) carry,
+      attachment being row-local);
+    * ``meas`` + ``se_all``/``cqi_all`` -- the (n_ue, n_cell) wideband
+      measurement and (n_ue, n_cell, n_freq) per-candidate-cell tables
+      (handover regimes, where the serving cell is *carried* MAC state
+      and any UE may switch cells without its radio row dirtying -- A3
+      reads the full measurement matrix every TTI);
+    * ``G``/``G0`` -- the faded / long-term gain matrices, kept only when
+      per-cell power deltas must be applied without re-running
+      geometry+pathloss (:func:`radio_update_cells`).
+
+    Leaves that a regime doesn't read are ``None`` rather than dead
+    weight: an (n_ue, n_cell) leaf in a scan carry costs a scatter *and*
+    a carry copy per TTI, which at 100k UEs x 57 cells is most of the
+    incremental path's budget.
+    """
+
+    meas: Any        # (n_ue, n_cell) wideband measurement RSRP | None
+    a: Any           # (n_ue,) i32 attachment (argmax of meas rows) | None
+    se: Any          # (n_ue, n_freq) | None
+    cqi: Any         # (n_ue, n_freq) | None
+    se_all: Any      # (n_ue, n_cell, n_freq) | None
+    cqi_all: Any     # (n_ue, n_cell, n_freq) | None
+    G: Any           # faded gain (n_ue, n_cell[, n_freq]) | None
+    G0: Any          # unfaded gain (n_ue, n_cell) | None
+
+
+def _chain_rows(cfg: RadioConfig, U_rows, C, bore, fad_rows, P, *,
+                with_tables: bool, with_gain: bool) -> RadioState:
+    """The D→G→RSRP→a→SINR→CQI→SE chain for a slab of UE rows.
+
+    Row-local by construction: every output row depends only on its own
+    position/fading row (plus the replicated cell state), which is what
+    makes the scatter-patch exact.  Called at full width by
+    :func:`radio_init` and on gathered dirty rows by
+    :func:`radio_update_rows` -- ONE implementation, so the incremental
+    path is bit-exact with its own init (and matches the dense engine
+    recompute, which composes the same pure functions).
+    """
+    geom = compute_distances(U_rows, C)
+    G0 = pathgains(cfg, U_rows, C, bore, geom=geom)
+    # fad_rows=None: the unfaded channel (skip the gather and the *1.0 --
+    # G0 * ones is bitwise G0, so this is a pure elision)
+    G = G0 if fad_rows is None else apply_fading(G0, fad_rows)
+    R = rsrp(G, P)
+    if cfg.rayleigh_fading and cfg.attach_ignores_fading:
+        meas = rsrp(G0, P).sum(axis=2)      # long-term association (L3)
+    else:
+        meas = R.sum(axis=2)
+    a = jnp.argmax(meas, axis=1).astype(jnp.int32)
+    se = cqi = se_all = cqi_all = None
+    if with_tables:
+        # the serving cell is carried MAC state (A3): tabulate the SINR
+        # chain for every candidate cell so a later handover is a gather
+        total = R.sum(axis=1)
+        gamma_all = R / (cfg.noise_w + (total[:, None, :] - R))
+        se_all, cqi_all = se_chain(cfg, gamma_all)
+    else:
+        gamma, _, _ = sinr(R, a, cfg.noise_w)
+        se, cqi = se_chain(cfg, gamma)
+    return RadioState(meas=meas if with_tables else None,
+                      a=None if with_tables else a, se=se,
+                      cqi=cqi, se_all=se_all, cqi_all=cqi_all,
+                      G=G if with_gain else None,
+                      G0=G0 if (with_gain and cfg.rayleigh_fading
+                                and cfg.attach_ignores_fading) else None)
+
+
+def radio_init(cfg: RadioConfig, U, C, bore, fad, P, *,
+               with_tables: bool = False,
+               with_gain: bool = False) -> RadioState:
+    """Full-width :class:`RadioState`: the everything-dirty base case.
+
+    Exactly :func:`_chain_rows` over all rows, so a subsequent
+    :func:`radio_update_rows` patch scatters values that are bitwise
+    consistent with what a full recompute would produce.
+    """
+    return _chain_rows(cfg, U, C, bore, fad, P, with_tables=with_tables,
+                       with_gain=with_gain)
+
+
+def _scatter(old, idx, new_rows):
+    return None if old is None else old.at[idx].set(new_rows)
+
+
+def radio_update_rows(cfg: RadioConfig, state: RadioState, U, C, bore,
+                      fad, P, idx) -> RadioState:
+    """Recompute the chain for UE rows ``idx`` and scatter them in place.
+
+    ``idx`` follows THE dirtiness convention (:func:`dirty_indices` /
+    :func:`pad_indices`): a fixed-size vector of dirty rows padded with
+    repeated valid indices, so duplicate writes are idempotent and no
+    validity mask is needed.  Cost is O(|idx| * n_cell) instead of the
+    dense O(n_ue * n_cell) -- the smart-update win, inside jit.
+    ``fad=None`` selects the unfaded chain (no gather, no multiply).
+    """
+    fad_rows = None if fad is None else fad[idx]
+    rows = _chain_rows(cfg, U[idx], C, bore, fad_rows, P,
+                       with_tables=state.se_all is not None,
+                       with_gain=state.G is not None)
+    return RadioState(*(_scatter(o, idx, n)
+                        for o, n in zip(state, rows)))
+
+
+def radio_update_cells(cfg: RadioConfig, state: RadioState, P,
+                       dirty_cell_mask) -> RadioState:
+    """Apply a per-cell power delta from the carried gain matrices.
+
+    A dirty cell column changes *every* UE's interference sum, so all
+    per-UE outputs recompute -- but from the carried ``G``/``G0`` (kept
+    with ``with_gain=True``), skipping geometry and pathloss, the
+    expensive transcendental half of the chain.  Branch-free: the new
+    tensors are computed unconditionally and ``jnp.where``-selected
+    against the carried ones on ``dirty_cell_mask.any()``, so the call
+    composes with ``vmap``/``shard_map`` (no data-dependent control
+    flow).  In the episode engine the power plan is scan-constant, so
+    cell dirt collapses into the prepare-time :func:`radio_init`; this
+    entry point serves callers that mutate ``P`` mid-stream.
+    """
+    R = rsrp(state.G, P)
+    if cfg.rayleigh_fading and cfg.attach_ignores_fading:
+        meas = rsrp(state.G0, P).sum(axis=2)
+    else:
+        meas = R.sum(axis=2)
+    a = jnp.argmax(meas, axis=1).astype(jnp.int32)
+    se = cqi = se_all = cqi_all = None
+    if state.se_all is not None:
+        total = R.sum(axis=1)
+        gamma_all = R / (cfg.noise_w + (total[:, None, :] - R))
+        se_all, cqi_all = se_chain(cfg, gamma_all)
+        a = None
+    else:
+        gamma, _, _ = sinr(R, a, cfg.noise_w)
+        se, cqi = se_chain(cfg, gamma)
+    new = RadioState(meas=meas, a=a, se=se, cqi=cqi, se_all=se_all,
+                     cqi_all=cqi_all, G=state.G, G0=state.G0)
+    any_dirty = jnp.any(dirty_cell_mask)
+    pick = lambda n, o: (None if o is None
+                         else jnp.where(any_dirty, n, o))
+    return RadioState(*(pick(n, o) for n, o in zip(new, state)))
+
+
+def radio_update(static: RadioStatic, state: RadioState, U,
+                 dirty_ue_mask, dirty_cell_mask=None, *, budget: int,
+                 fad=None, P=None) -> RadioState:
+    """One smart update: dirty UE rows + (optionally) dirty cell columns.
+
+    The mask-level façade over :func:`radio_update_rows` /
+    :func:`radio_update_cells`: ``dirty_ue_mask`` is compacted to a
+    ``budget``-sized index vector (:func:`dirty_indices`) and patched
+    row-locally; a non-None ``dirty_cell_mask`` then re-derives the
+    per-UE outputs from the carried gains under the (possibly new) power
+    matrix ``P``.  Everything is branch-free and shape-static, so the
+    call drops into ``lax.scan`` bodies, ``vmap`` batches and
+    ``shard_map`` shards unchanged (each shard passes its local mask and
+    rows).
+    """
+    cfg = static.cfg
+    P = static.P if P is None else P
+    idx = dirty_indices(dirty_ue_mask, budget)
+    state = radio_update_rows(cfg, state, U, static.C, static.bore,
+                              fad, P, idx)
+    if dirty_cell_mask is not None:
+        state = radio_update_cells(cfg, state, P, dirty_cell_mask)
+    return state
+
+
+# ---------------------------------------------------------------------------
 # fading + PRNG key conventions (DESIGN.md §Radio-fns)
 # ---------------------------------------------------------------------------
 #: fold_in tag deriving the per-simulation episode key from params.seed
@@ -369,16 +596,105 @@ se_jit = jax.jit(se_of)
 
 
 # ---------------------------------------------------------------------------
-# the one-call forward pass
+# the one-call forward pass (dense backends: fused Pallas pipeline | XLA)
 # ---------------------------------------------------------------------------
+#: cached result of the one-time Pallas capability probe (None = not probed)
+_PALLAS_PROBE = None
+
+
+def pallas_available() -> bool:
+    """One-time capability probe for the fused Pallas backend.
+
+    True iff a compiled (non-interpret) ``fused_sinr_accumulate`` builds
+    and runs on the default backend -- i.e. a real TPU (or compatible
+    Pallas lowering) is present.  On CPU containers this is False and
+    ``backend="auto"`` stays on XLA; an *explicit* ``backend="pallas"``
+    still runs there through the kernel's interpret mode (bit-faithful,
+    Python-speed -- the correctness path CI exercises).
+    """
+    global _PALLAS_PROBE
+    if _PALLAS_PROBE is None:
+        try:
+            from repro.kernels import ops
+            if jax.default_backend() == "cpu":
+                _PALLAS_PROBE = False
+            else:
+                ops.fused_sinr(
+                    jnp.zeros((8, 3)), jnp.ones((8, 3)),
+                    jnp.ones((8, 1)),
+                    pathgain_fn=lambda d2, d3, hb, hu: 1.0 / (1.0 + d3),
+                    noise_w=1e-12, interpret=False)
+                _PALLAS_PROBE = True
+        except Exception:                      # pragma: no cover - no TPU
+            _PALLAS_PROBE = False
+    return _PALLAS_PROBE
+
+
+def pallas_supported(cfg: RadioConfig, fad) -> bool:
+    """Can the fused kernel express this configuration?
+
+    The kernel streams cell tiles and recomputes gain *inside* the tile,
+    so it cannot ingest a materialised per-(UE, cell) fading tensor --
+    exactly the O(N x M) HBM traffic it exists to avoid.  It covers the
+    unfaded chain (any subband count, any pathloss strategy, sectored or
+    omni with the stock 3GPP pattern); faded configurations fall back to
+    XLA under ``backend="auto"``.
+    """
+    if fad is not None:
+        return False
+    if cfg.n_sectors > 1:
+        a = cfg.antenna
+        if (abs(getattr(a, "phi_3dB_deg", 65.0) - 65.0) > 1e-6
+                or abs(getattr(a, "A_max_dB", 30.0) - 30.0) > 1e-6
+                or abs(getattr(a, "max_gain_dBi", 0.0)) > 1e-6):
+            return False                       # kernel inlines the stock pattern
+    return True
+
+
+def _forward_pallas(static: RadioStatic, positions, P,
+                    interpret=None) -> RadioOutputs:
+    """Dense chain through the fused Pallas pipeline (kernels/fused_sinr).
+
+    The (n_ue, n_cell) distance/gain/RSRP matrices never materialise:
+    the kernel accumulates the O(N) state (total power, best server, its
+    RSRP row) and the CQI/SE tail runs on that.  ``G``/``rsrp`` are
+    therefore ``None`` in the returned :class:`RadioOutputs` -- callers
+    that need the full matrices want the XLA backend.
+    """
+    from repro.kernels import ops
+    cfg = static.cfg
+    gamma, a, w, u = ops.fused_sinr(
+        positions, static.C, P, pathgain_fn=cfg.pathgain_fn,
+        noise_w=cfg.noise_w, boresight=static.bore,
+        n_sectors=cfg.n_sectors, interpret=interpret)
+    cqi = cqi_report_jit(gamma, cfg.n_rb_subbands, cfg.cqi_wideband,
+                         cfg.eesm_beta)
+    mcs = mcs_jit(cqi)
+    se = se_jit(mcs, cqi)
+    return RadioOutputs(G=None, rsrp=None, a=a, gamma=gamma, cqi=cqi,
+                        mcs=mcs, se=se)
+
+
 def radio_forward(static: RadioStatic, positions, fad=None,
-                  fading_key=None, P=None) -> RadioOutputs:
+                  fading_key=None, P=None, backend=None) -> RadioOutputs:
     """The whole radio chain as one pure call.
 
     ``positions`` is (n_ue, 3); the fading factor comes from ``fad`` (an
     explicit tensor), from ``fading_key`` (a fresh :func:`draw_fading`,
     honouring ``cfg.rayleigh_fading``) or defaults to no fading.  ``P``
     overrides the static power matrix (the RL power-control hook).
+
+    ``backend`` selects the dense execution path: ``None``/``"xla"``
+    (the materialised chain below -- the default, and the branch every
+    bit-exactness claim below refers to), ``"pallas"`` (the fused
+    ``kernels/fused_sinr`` pipeline -- O(N) HBM traffic, interpret-mode
+    on CPU, ``G``/``rsrp`` returned as ``None`` since they are never
+    materialised, outputs within 1e-4 of XLA) or ``"auto"`` (Pallas iff
+    the capability probe and :func:`pallas_supported` both pass, else
+    XLA).  The flip is opt-in -- ``None`` never dispatches the kernel,
+    so existing callers keep materialised, bit-exact outputs on every
+    platform.  Both branches are parity-tested across every registry
+    scenario (tests/test_kernel_vs_crrm.py).
 
     Bit-exact with the smart-update graph's node queries for the same
     inputs (asserted in tests/test_radio_fns.py): the chain below mirrors
@@ -390,6 +706,21 @@ def radio_forward(static: RadioStatic, positions, fad=None,
     """
     cfg = static.cfg
     P = static.P if P is None else P
+    if backend not in (None, "auto", "xla", "pallas"):
+        raise ValueError(f"backend must be 'auto', 'xla' or 'pallas'; "
+                         f"got {backend!r}")
+    want_fad = fad is not None or (fading_key is not None
+                                   and cfg.rayleigh_fading)
+    if backend == "pallas":
+        if want_fad or not pallas_supported(cfg, None):
+            raise ValueError(
+                "backend='pallas' cannot express this configuration "
+                "(per-link fading tensors and non-stock sector patterns "
+                "need the XLA backend)")
+        return _forward_pallas(static, positions, P)
+    if (backend == "auto" and not want_fad
+            and pallas_supported(cfg, None) and pallas_available()):
+        return _forward_pallas(static, positions, P)
     n_ue, n_cell = positions.shape[0], static.C.shape[0]
     if fad is None:
         if fading_key is not None and cfg.rayleigh_fading:

@@ -117,6 +117,27 @@ _preset(
     harq_bler=0.1, seed=0)
 
 _preset(
+    "dense_urban_twin",
+    "The digital-twin regime of dense_urban_mobile: a mostly-static UE "
+    "field where only 10% of UEs move per TTI (mobility_move_frac), with "
+    "the radio chain running in the incremental (smart-update-in-scan) "
+    "mode -- only the movers' rows re-run D..SE inside the compiled "
+    "engine.  The preset that demonstrates the paper's compute-on-demand "
+    "contribution at episode scale (benchmarks/BENCH_smart_update.json).",
+    n_ues=200, n_cells=21, n_sectors=3, extent_m=1200.0,
+    pathloss_model_name="UMi", fc_GHz=3.5, h_bs_m=10.0,
+    power_W=6.3,
+    rayleigh_fading=True, n_rb_subbands=4, coherence_rb=3,
+    attach_ignores_fading=True,
+    mobility_step_m=5.0, mobility_move_frac=0.1,
+    radio_mode="incremental",
+    ho_enabled=True, ho_hysteresis_db=3.0, ho_ttt_tti=4,
+    scheduler_policy="pf", fairness_p=0.5,
+    traffic_model="poisson",
+    traffic_params=dict(arrival_rate_hz=400.0, packet_size_bits=12_000.0),
+    harq_bler=0.1, seed=0)
+
+_preset(
     "rural_macro",
     "Noise-limited wide-area coverage: RMa macro sites at 700 MHz over an "
     "8 km extent, bursty FTP-3 file downloads, round-robin airtime.",
