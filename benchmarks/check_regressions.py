@@ -19,7 +19,15 @@ so adding a new gated benchmark needs no checker change beyond the
 internal gates (equivalence tolerances etc.) while re-running, so this
 step subsumes the per-bench smoke invocations CI used to carry.
 
-Run:  PYTHONPATH=src python -m benchmarks.check_regressions [--smoke]
+Records that cannot be checked -- no registered rerun for their
+``bench``, or no ``gated_metric`` -- are reported as SKIPPED.  That is
+the right default for a half-migrated checkout, but in CI a skip is a
+silently-disabled gate: ``--strict`` turns every skip into a failure, so
+adding a record without wiring its rerun (or dropping a metric from a
+re-seed) fails the build instead of passing vacuously.
+
+Run:  PYTHONPATH=src python -m benchmarks.check_regressions \
+          [--smoke] [--strict]
 """
 from __future__ import annotations
 
@@ -44,6 +52,8 @@ def check(record_path: str, smoke: bool) -> str:
     """Rerun one record's bench; returns a human-readable verdict line.
 
     Raises ``AssertionError`` on a regression past the stored gate.
+    Unverifiable records return a verdict containing ``SKIPPED`` --
+    ``main`` fails on those under ``--strict``.
     """
     with open(record_path) as f:
         record = json.load(f)
@@ -69,7 +79,15 @@ def check(record_path: str, smoke: bool) -> str:
         # is authoritative (some benches return a different headline
         # number in full mode, e.g. mac_episode's scan-vs-graph speedup)
         with open(record_path) as f:
-            ratio = json.load(f)[metric]
+            reseeded = json.load(f)
+        if metric not in reseeded:
+            raise AssertionError(
+                f"{bench}: full-shape rerun re-seeded "
+                f"{os.path.basename(record_path)} WITHOUT its gated "
+                f"metric {metric!r} -- the bench stopped writing the "
+                f"field the gate reads (fix _write_record's payload or "
+                f"the record's gated_metric)")
+        ratio = reseeded[metric]
     healthy = ratio < gate if direction == "max" else ratio > gate
     verdict = (f"{bench}: {metric} rerun={ratio:.3f} vs stored "
                f"{record.get(metric)} (gate {'<' if direction == 'max' else '>'}"
@@ -82,28 +100,43 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="shrunken shapes + smoke gates (CI)")
+    ap.add_argument("--strict", action="store_true",
+                    help="fail on SKIPPED records too: every committed "
+                         "record must actually be gated (CI)")
     ap.add_argument("--only", default="",
                     help="check only records whose filename contains SUBSTR")
+    ap.add_argument("--dir", default=None,
+                    help="directory holding BENCH_*.json (default: next "
+                         "to this module)")
     args = ap.parse_args(argv)
     from benchmarks import paper_benches
     paper_benches.SMOKE = args.smoke
 
-    here = os.path.dirname(os.path.abspath(__file__))
+    here = args.dir or os.path.dirname(os.path.abspath(__file__))
     records = sorted(glob.glob(os.path.join(here, "BENCH_*.json")))
     records = [r for r in records if args.only in os.path.basename(r)]
     if not records:
         raise SystemExit(f"no BENCH_*.json records match {args.only!r}")
-    failures = []
+    failures, skips = [], []
     for path in records:
         try:
-            print(f"== {check(path, args.smoke)}")
+            verdict = check(path, args.smoke)
+            if "SKIPPED" in verdict:
+                skips.append(verdict)
+            print(f"== {verdict}")
         except AssertionError as e:
             failures.append(str(e))
             print(f"== {e}")
         sys.stdout.flush()
+    if skips and args.strict:
+        failures.append(
+            f"STRICT: {len(skips)} record(s) skipped -- every committed "
+            f"BENCH_*.json must be verifiable:\n  " + "\n  ".join(skips))
     if failures:
         raise SystemExit("\n".join(failures))
-    print(f"all {len(records)} recorded benchmarks within their gates")
+    checked = len(records) - len(skips)
+    print(f"all {checked} checked benchmarks within their gates"
+          + (f" ({len(skips)} skipped)" if skips else ""))
 
 
 if __name__ == "__main__":

@@ -237,11 +237,19 @@ def _write_record(filename, record):
     (``benchmarks.check_regressions``): ``gated_metric`` names the ratio
     field, ``gate``/``smoke_gate`` bound it at full/smoke shapes, and
     ``gate_direction`` says which side is healthy ("max" = must stay
-    below, "min" = must stay above).
+    below, "min" = must stay above).  Each write is provenance-stamped
+    (git SHA, UTC timestamp, jax/device -- ``benchmarks.trajectory``) so
+    ``python -m benchmarks.trajectory`` can render the per-PR perf table.
     """
     import json
     import os
 
+    try:
+        from benchmarks.trajectory import provenance
+    except ImportError:          # benchmarks/ imported as a bare dir
+        from trajectory import provenance
+
+    record = dict(record, provenance=provenance())
     path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                         filename)
     with open(path, "w") as f:
@@ -255,6 +263,8 @@ def mac_episode(n_ues=1000, n_cells=57, n_tti=100):
     per-TTI loop over the (smart) graph, plus the per-RB link-adaptation
     cost (fully frequency-selective CQI + HARQ vs the wideband path).
     Seeds/updates ``benchmarks/BENCH_mac.json`` (full mode only)."""
+    from repro.obs import StageTimer
+
     if SMOKE:
         n_ues, n_cells, n_tti = 200, 19, 20
     common = dict(n_ues=n_ues, n_cells=n_cells, n_sectors=1, seed=3,
@@ -265,9 +275,11 @@ def mac_episode(n_ues=1000, n_cells=57, n_tti=100):
     key = jax.random.PRNGKey(0)
     reps = 3          # best-of-N: the ratio gate must not eat timer noise
     gate = PER_RB_MAX_SLOWDOWN_SMOKE if SMOKE else PER_RB_MAX_SLOWDOWN
+    prof = StageTimer()            # compile+measure wall share per stage
 
     sim = CRRM(CRRM_parameters(**common))
-    us_scan = _episode_us_per_tti(sim, n_tti, key, reps=reps)
+    with prof.stage("wideband_scan"):
+        us_scan = _episode_us_per_tti(sim, n_tti, key, reps=reps)
 
     # per-RB: 12 CQI subbands, block fading, HARQ machine, A3 handover --
     # the full ISSUE-2 feature set in the same (static) channel regime as
@@ -275,7 +287,8 @@ def mac_episode(n_ues=1000, n_cells=57, n_tti=100):
     rb = CRRM(CRRM_parameters(
         n_rb_subbands=12, coherence_rb=4, rayleigh_fading=True,
         harq_bler=0.1, ho_enabled=True, **common))
-    us_rb = _episode_us_per_tti(rb, n_tti, key, reps=reps)
+    with prof.stage("per_rb_scan"):
+        us_rb = _episode_us_per_tti(rb, n_tti, key, reps=reps)
     rb_cost = us_rb / us_scan
     print(f"# mac_episode: per-RB+HARQ+HO scan {us_rb:.1f} us/TTI "
           f"({rb_cost:.2f}x wideband; gate {gate:.0f}x)")
@@ -286,24 +299,27 @@ def mac_episode(n_ues=1000, n_cells=57, n_tti=100):
     if SMOKE:
         print(f"# mac_episode: smoke mode, scan {us_scan:.1f} us/TTI "
               f"({n_ues} UEs x {n_tti} TTIs)")
+        print(prof.report(prefix="# profile: "))
         return "mac_episode_per_rb_cost", us_scan, rb_cost
 
     loop = CRRM(CRRM_parameters(**common))
-    loop.get_served_throughputs()                    # warm the graph
-    keys = jax.random.split(jax.random.PRNGKey(1), n_tti + 2)
-    for t in range(2):                               # warm row buckets
-        loop.step_traffic(keys[t], t)
-        loop.get_served_throughputs().block_until_ready()
-    t0 = time.perf_counter()
-    for t in range(n_tti):
-        loop.step_traffic(keys[t + 2], t)
-        out = loop.get_served_throughputs()
-    out.block_until_ready()
-    us_loop = (time.perf_counter() - t0) / n_tti * 1e6
+    with prof.stage("graph_loop"):
+        loop.get_served_throughputs()                # warm the graph
+        keys = jax.random.split(jax.random.PRNGKey(1), n_tti + 2)
+        for t in range(2):                           # warm row buckets
+            loop.step_traffic(keys[t], t)
+            loop.get_served_throughputs().block_until_ready()
+        t0 = time.perf_counter()
+        for t in range(n_tti):
+            loop.step_traffic(keys[t + 2], t)
+            out = loop.get_served_throughputs()
+        out.block_until_ready()
+        us_loop = (time.perf_counter() - t0) / n_tti * 1e6
 
     print(f"# mac_episode: scan {us_scan:.1f} us/TTI, "
           f"graph loop {us_loop:.1f} us/TTI "
           f"({n_ues} UEs x {n_tti} TTIs, poisson+pf)")
+    print(prof.report(prefix="# profile: "))
     _write_record("BENCH_mac.json", {
         "bench": "mac_episode", "n_ues": n_ues, "n_cells": n_cells,
         "n_tti": n_tti, "us_per_tti_scan": round(us_scan, 2),

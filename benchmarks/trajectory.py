@@ -1,0 +1,191 @@
+"""Provenance stamps and the per-PR perf trajectory over BENCH_*.json.
+
+Every seeded benchmark record (``paper_benches._write_record``) carries a
+``provenance`` block -- git SHA, UTC timestamp, jax version, backend and
+device -- so a number can always be traced to the commit and machine that
+produced it.  This module owns that stamp (:func:`provenance`) and renders
+the trajectory the ROADMAP asks to publish: for each record's gated
+metric, the value at every commit that touched the record, oldest to
+newest (``git log`` + ``git show`` -- no checkout needed).
+
+CLI::
+
+    python -m benchmarks.trajectory                 # table to stdout
+    python -m benchmarks.trajectory --out artifacts/obs/perf_trajectory.md
+    python -m benchmarks.trajectory --stamp         # backfill provenance
+                                                    # into unstamped records
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import subprocess
+from datetime import datetime, timezone
+from typing import Optional
+
+BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
+REPO_ROOT = os.path.dirname(BENCH_DIR)
+
+
+def _git(*args: str) -> Optional[str]:
+    """stdout of ``git <args>`` in the repo root; None when unavailable."""
+    try:
+        out = subprocess.run(["git", *args], cwd=REPO_ROOT, text=True,
+                             capture_output=True, timeout=60)
+    except (OSError, subprocess.SubprocessError):
+        return None
+    return out.stdout.strip() if out.returncode == 0 else None
+
+
+def provenance() -> dict:
+    """The stamp written into every benchmark record at seed time.
+
+    Answers "which code, when, on what" for any committed number: the
+    producing commit (plus a dirty flag when the working tree had
+    uncommitted changes), a UTC timestamp, and the jax version / backend /
+    device kind the measurement ran on.  Degrades gracefully: outside a
+    git checkout the SHA reads ``"unknown"``; without jax importable the
+    runtime fields do.
+    """
+    sha = _git("rev-parse", "HEAD") or "unknown"
+    dirty = bool(_git("status", "--porcelain")) if sha != "unknown" else False
+    stamp = {
+        "git_sha": sha,
+        "git_dirty": dirty,
+        "timestamp_utc": datetime.now(timezone.utc)
+        .strftime("%Y-%m-%dT%H:%M:%SZ"),
+    }
+    try:
+        import jax
+        stamp["jax_version"] = jax.__version__
+        stamp["backend"] = jax.default_backend()
+        stamp["device_kind"] = jax.devices()[0].device_kind
+    except Exception:               # pragma: no cover - jax-less tooling env
+        stamp.update(jax_version="unavailable", backend="unavailable",
+                     device_kind="unavailable")
+    return stamp
+
+
+def record_paths(bench_dir: str = BENCH_DIR) -> list:
+    return sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json")))
+
+
+def stamp_records(bench_dir: str = BENCH_DIR, force: bool = False) -> list:
+    """Backfill ``provenance`` into records missing it; returns the paths
+    touched.  ``force`` restamps even already-stamped records (after a
+    manual edit, say) -- the normal path is seed-time stamping in
+    ``paper_benches._write_record``."""
+    stamped = []
+    for path in record_paths(bench_dir):
+        with open(path) as f:
+            rec = json.load(f)
+        if "provenance" in rec and not force:
+            continue
+        rec["provenance"] = provenance()
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2, sort_keys=True)
+            f.write("\n")
+        stamped.append(path)
+    return stamped
+
+
+def metric_history(path: str, limit: int = 50) -> list:
+    """The gated metric's value at every commit touching ``path``.
+
+    ``git log --follow``-free on purpose (records never move), reading
+    each historic version with ``git show sha:relpath`` -- no checkout,
+    no worktree.  Returns ``[(short_sha, date, value), ...]`` oldest to
+    newest; commits whose version predates the gated-metric convention
+    (or fails to parse) are skipped.  Empty outside a git checkout.
+    """
+    rel = os.path.relpath(path, REPO_ROOT)
+    log = _git("log", f"--max-count={limit}", "--format=%h %cs", "--", rel)
+    if not log:
+        return []
+    out = []
+    for line in reversed(log.splitlines()):
+        sha, _, date = line.strip().partition(" ")
+        blob = _git("show", f"{sha}:{rel}")
+        if blob is None:
+            continue
+        try:
+            rec = json.loads(blob)
+            value = rec[rec["gated_metric"]]
+        except (ValueError, KeyError, TypeError):
+            continue
+        out.append((sha, date, float(value)))
+    return out
+
+
+def _fmt(v: float) -> str:
+    return f"{v:.3g}"
+
+
+def render_table(bench_dir: str = BENCH_DIR) -> str:
+    """The perf-trajectory markdown: one row per record's gated metric,
+    the committed value at each touching commit (oldest -> newest), and
+    the live provenance stamp of the current working tree."""
+    lines = ["# Perf trajectory", "",
+             "Gated benchmark metrics across the commits that re-seeded "
+             "each record (oldest -> newest; `*` marks the current "
+             "working-tree value when the record is unstamped history).",
+             "",
+             "| record | metric | healthy | gate | trajectory | current |",
+             "|---|---|---|---|---|---|"]
+    for path in record_paths(bench_dir):
+        with open(path) as f:
+            rec = json.load(f)
+        name = os.path.basename(path)
+        metric = rec.get("gated_metric")
+        if metric is None or metric not in rec:
+            lines.append(f"| {name} | (no gated metric) | - | - | - | - |")
+            continue
+        cur = float(rec[metric])
+        direction = rec.get("gate_direction", "max")
+        healthy = "<=" if direction == "max" else ">="
+        hist = metric_history(path)
+        if hist and abs(hist[-1][2] - cur) > 1e-12:
+            hist.append(("worktree", "*", cur))
+        traj = (" -> ".join(f"{_fmt(v)} ({d})" for _, d, v in hist)
+                or _fmt(cur))
+        lines.append(f"| {name} | `{metric}` | {healthy} | "
+                     f"{_fmt(float(rec.get('gate', float('nan'))))} | "
+                     f"{traj} | **{_fmt(cur)}** |")
+    p = provenance()
+    lines += ["",
+              f"_Rendered at {p['timestamp_utc']} on "
+              f"{p['backend']}/{p['device_kind']} (jax {p['jax_version']}), "
+              f"commit `{p['git_sha'][:12]}`"
+              + (" (dirty)" if p["git_dirty"] else "") + "._"]
+    return "\n".join(lines)
+
+
+def main(argv: Optional[list] = None) -> str:
+    ap = argparse.ArgumentParser(
+        description="render the per-PR perf trajectory over BENCH_*.json")
+    ap.add_argument("--dir", default=BENCH_DIR,
+                    help="directory holding the BENCH_*.json records")
+    ap.add_argument("--out", default=None,
+                    help="write the markdown here instead of stdout")
+    ap.add_argument("--stamp", action="store_true",
+                    help="backfill provenance into unstamped records")
+    args = ap.parse_args(argv)
+    if args.stamp:
+        for path in stamp_records(args.dir):
+            print(f"# stamped {path}")
+    table = render_table(args.dir)
+    if args.out:
+        os.makedirs(os.path.dirname(os.path.abspath(args.out)),
+                    exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(table + "\n")
+        print(f"# wrote {args.out}")
+    else:
+        print(table)
+    return table
+
+
+if __name__ == "__main__":
+    main()

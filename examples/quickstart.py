@@ -46,3 +46,12 @@ for name, counts in sim.update_counts().items():
         print(f"  {name:8s} {counts}")
 print("note Shannon=(0,0): compute-on-demand never touched what you "
       "didn't query.")
+
+# run a short compiled episode with in-scan KPI telemetry: the scan emits
+# a per-TTI Telemetry pytree alongside the trajectory (structurally free
+# when off -- same compiled program, bit-identical throughput)
+from repro.obs import format_summary, summarize
+
+tput_ep, telem = sim.run_episode(n_tti=50, telemetry=True)
+print("\n50-TTI episode KPIs (repro.obs telemetry):")
+print(format_summary(summarize(telem, tti_s=params.tti_s)))

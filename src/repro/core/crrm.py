@@ -318,7 +318,8 @@ class CRRM:
 
     def episode_fns(self, mobility_step_m=None, per_tti_fading: bool = False,
                     use_harq=None, mesh=None, ue_axis=("ue",),
-                    radio_mode=None, mobility_move_frac=None):
+                    radio_mode=None, mobility_move_frac=None,
+                    telemetry: bool = False):
         """The pure ``(step, rollout)`` episode functions for this
         simulator's topology and MAC parameters (``EpisodeFns``), cached
         per trace-time switch combination.  Both are jit-compiled and
@@ -329,13 +330,15 @@ class CRRM:
         ``radio_mode="incremental"`` recomputes only dirty UE rows of the
         radio chain inside the scan and ``mobility_move_frac`` bounds the
         per-TTI dirtiness (DESIGN.md §Smart-update-in-scan); both default
-        to the corresponding ``CRRM_parameters`` fields."""
+        to the corresponding ``CRRM_parameters`` fields.  ``telemetry``
+        adds a per-TTI KPI pytree to both functions' returns
+        (DESIGN.md §Observability) -- off, the exact legacy program."""
         from repro.mac import engine as mac_engine
         return mac_engine.episode_fns_for(
             self, mobility_step_m=mobility_step_m,
             per_tti_fading=per_tti_fading, use_harq=use_harq,
             mesh=mesh, ue_axis=ue_axis, radio_mode=radio_mode,
-            mobility_move_frac=mobility_move_frac)
+            mobility_move_frac=mobility_move_frac, telemetry=telemetry)
 
     def sync_episode_state(self, state, positions: bool = False) -> None:
         """Write a final ``EpisodeState`` back into the graph (legacy
@@ -362,10 +365,12 @@ class CRRM:
     def run_episode(self, n_tti: int, key=None, mobility_step_m=None,
                     per_tti_fading: bool = False, sync_state: bool = True,
                     use_harq=None, radio_mode=None,
-                    mobility_move_frac=None):
+                    mobility_move_frac=None, telemetry: bool = False):
         """Roll ``n_tti`` TTIs as one ``lax.scan`` program.
 
-        Returns (n_tti, n_ues) delivered throughput in bits/s.  A thin
+        Returns (n_tti, n_ues) delivered throughput in bits/s -- or
+        ``(tput, telem)`` with ``telemetry=True``, ``telem`` being the
+        stacked per-TTI ``repro.obs.Telemetry`` KPI pytree.  A thin
         wrapper over the functional episode API: ``init_episode_state`` ->
         ``episode_fns().rollout`` -> ``sync_episode_state`` (the
         write-back runs unless ``sync_state=False``; new code should use
@@ -379,7 +384,7 @@ class CRRM:
             self, n_tti, key=key, mobility_step_m=mobility_step_m,
             per_tti_fading=per_tti_fading, sync_state=sync_state,
             use_harq=use_harq, radio_mode=radio_mode,
-            mobility_move_frac=mobility_move_frac)
+            mobility_move_frac=mobility_move_frac, telemetry=telemetry)
 
     # -------------------------------------------------------------- introspection
     def update_counts(self):

@@ -126,6 +126,13 @@ class CrrmEnv:
         action-vs-passive gap is the schedulers' per-cell scatters over
         *per-episode* attachment indices under ``vmap`` -- a MAC cost,
         not a radio one; see DESIGN.md §Smart-update-in-scan.)
+    telemetry:
+        Stream per-TTI KPIs (``repro.obs.Telemetry``) out of the scan:
+        ``step`` then returns a fifth element, an info dict with a
+        ``"telemetry"`` entry stacked to (tti_per_step, ...)
+        (DESIGN.md §Observability).  A trace-time switch -- the
+        trajectory is bit-identical either way, and off (the default)
+        compiles the exact legacy program.
     """
 
     def __init__(self, params: Optional[CRRM_parameters] = None, *,
@@ -134,7 +141,8 @@ class CrrmEnv:
                  episode_tti: int = 200, tti_per_step: int = 20,
                  per_tti_fading: bool = False,
                  resample_topology: bool = False, reward_fn=None,
-                 radio_mode: Optional[str] = None):
+                 radio_mode: Optional[str] = None,
+                 telemetry: bool = False):
         if (params is None) == (scenario is None):
             raise ValueError("pass exactly one of params= or scenario=")
         if scenario is not None:
@@ -153,8 +161,10 @@ class CrrmEnv:
         self.n_ues, self.n_cells = self.sim.n_ues, self.sim.n_cells
         self.n_subbands = self.params.n_subbands
         self._reward_fn = reward_fn or buffer_aware_reward
+        self.telemetry = bool(telemetry)
         self._fns = self.sim.episode_fns(per_tti_fading=per_tti_fading,
-                                         radio_mode=radio_mode)
+                                         radio_mode=radio_mode,
+                                         telemetry=self.telemetry)
         self._static = self.sim.episode_static()
         self._radio_static = self.sim.radio_static()
         # the reset template: PF EWMA seeded at the stationary alpha-fair
@@ -256,14 +266,22 @@ class CrrmEnv:
         ``action`` is a (n_cells, n_subbands) power matrix (None keeps the
         construction-time power plan -- a pure traffic simulation step).
         Returns ``(state, EnvObs, reward, done)``; pure and vmap-able over
-        ``(state, action)``.
+        ``(state, action)``.  Constructed with ``telemetry=True`` a fifth
+        element is appended: ``{"telemetry": Telemetry}`` with each KPI
+        leaf stacked to (tti_per_step, ...).
         """
         if self.resample_topology:
             ep, static = state.ep, state.static
         else:
             ep, static = state, self._static
         power = None if action is None else self._expand_action(action)
-        ep, tput = self._fns.rollout(static, ep, self.tti_per_step, power)
+        telem = None
+        if self.telemetry:
+            ep, tput, telem = self._fns.rollout(static, ep,
+                                                self.tti_per_step, power)
+        else:
+            ep, tput = self._fns.rollout(static, ep, self.tti_per_step,
+                                         power)
         obs = EnvObs(tput=tput.mean(axis=0), backlog=ep.backlog)
         reward = self._reward_fn(obs)
         done = ep.t >= self.episode_tti
@@ -271,6 +289,8 @@ class CrrmEnv:
             state = TopoEnvState(ep=ep, static=static)
         else:
             state = ep
+        if self.telemetry:
+            return state, obs, reward, done, {"telemetry": telem}
         return state, obs, reward, done
 
     # ------------------------------------------------------------- batched

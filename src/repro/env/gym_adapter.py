@@ -32,6 +32,12 @@ def make_gym_env(env: CrrmEnv, seed: int = 0):
     throughput then residual backlog.  Action: ``Box(0, power_W,
     (n_cells, n_subbands))`` transmit powers in watts.  Episode end is
     reported as ``truncated`` (a time horizon, not a terminal MDP state).
+
+    A ``CrrmEnv(..., telemetry=True)`` surfaces its per-TTI KPI stream in
+    the gymnasium info dict: ``info["telemetry"]`` is the raw
+    ``repro.obs.Telemetry`` stack for the decision window and
+    ``info["kpis"]`` its ``repro.obs.summarize`` reduction to plain
+    floats (what RL loggers can emit directly).
     """
     try:
         import gymnasium
@@ -71,9 +77,18 @@ def make_gym_env(env: CrrmEnv, seed: int = 0):
         def step(self, action):
             action = np.clip(np.asarray(action, np.float32),
                              self.action_space.low, self.action_space.high)
-            self._state, obs, reward, done = self._env.step(
-                self._state, action)
+            out = self._env.step(self._state, action)
+            info = {}
+            if self._env.telemetry:
+                self._state, obs, reward, done, step_info = out
+                from repro.obs import summarize
+                telem = step_info["telemetry"]
+                info = {"telemetry": telem,
+                        "kpis": summarize(telem,
+                                          tti_s=self._env.params.tti_s)}
+            else:
+                self._state, obs, reward, done = out
             return (flatten_obs(obs), float(reward),
-                    False, bool(done), {})
+                    False, bool(done), info)
 
     return GymCrrmEnv(env, seed)

@@ -98,6 +98,7 @@ from jax.sharding import PartitionSpec as PSpec
 
 from repro.core.distributed import _axis_index, _pvary, _shard_map
 from repro.mac import scheduler as mac_sched
+from repro.obs.telemetry import Telemetry, tti_telemetry
 from repro.sim import mobility, radio
 
 
@@ -153,6 +154,13 @@ class EpisodeFns(NamedTuple):
     are pure and vmap over ``state``/``action`` for batched episodes
     (single-device configurations; a mesh-sharded bundle spans the devices
     instead of vmapping).
+
+    Built with ``telemetry=True`` both functions return one extra value --
+    a :class:`repro.obs.telemetry.Telemetry` of per-TTI KPIs (stacked to
+    (n_tti, ...) by ``rollout``): ``step -> (state, tput, telem)``,
+    ``rollout -> (state, tput, telem)``.  Telemetry rides the scan as an
+    *output*, never a carry, and is computed purely from intermediates the
+    step already produced, so the trajectory is bit-identical either way.
     """
 
     step: Any
@@ -218,7 +226,8 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
                      mobility_step_m=None, per_tti_fading: bool = False,
                      use_harq=None, mesh=None, ue_axis=("ue",),
                      radio_mode: str = "dense",
-                     mobility_move_frac=None) -> EpisodeFns:
+                     mobility_move_frac=None,
+                     telemetry: bool = False) -> EpisodeFns:
     """Build the pure ``step``/``rollout`` functions for one configuration.
 
     ``params`` is a ``CRRM_parameters``; ``radio_cfg`` the hashable pure-
@@ -255,6 +264,14 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
     arm of the smart-update benchmark): the same window-mover draw, with
     the full chain recomputed -- so dense and incremental trajectories
     are comparable at identical dirtiness.
+
+    ``telemetry`` is a fourth trace-time switch: True adds a per-TTI
+    :class:`repro.obs.telemetry.Telemetry` scan *output* to both returned
+    functions (see :class:`EpisodeFns`); False (the default) compiles the
+    exact legacy program -- telemetry touches no carry slot and draws no
+    PRNG, so the trajectory is bit-identical either way (gated in
+    tests/test_telemetry.py).  Under a mesh every KPI is psum-reduced
+    inside the shard_map body, so each shard returns global numbers.
     """
     p = params
     cfg = radio_cfg
@@ -392,13 +409,20 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
         local row: out-of-shard slots pad with row 0, THE idempotent
         valid-index padding of the dirtiness convention.  When the window
         covers the shard (n_move >= n_loc) every local row recomputes.
+
+        Returns ``(idx, count)``: the padded local index vector plus the
+        number of genuinely dirty local rows (= distinct recomputed rows;
+        the telemetry ``dirty_rows`` counter, psummed to the global
+        ``n_move`` under a mesh).
         """
         if n_move >= n_loc:
-            return jnp.arange(n_loc, dtype=jnp.int32)
+            return (jnp.arange(n_loc, dtype=jnp.int32),
+                    jnp.int32(n_loc))
         g = (start + jnp.arange(n_move, dtype=jnp.int32)) % n_ues
         local = g - local_offset()
         valid = (local >= 0) & (local < n_loc)
-        return jnp.where(valid, local, 0).astype(jnp.int32)
+        return (jnp.where(valid, local, 0).astype(jnp.int32),
+                valid.sum().astype(jnp.int32))
 
     def inc_channel(static, rs, U, P, k_mob):
         """One incremental TTI of the radio chain: move, patch, read.
@@ -406,18 +430,21 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
         Only the moved rows re-run D→G→RSRP→SINR→CQI→SE
         (``radio.radio_update_rows`` under THE dirtiness convention);
         everything else is a carried value that a dense recompute would
-        reproduce bit-identically.  Returns the updated ``(U, rs)``.
+        reproduce bit-identically.  Returns the updated ``(U, rs)`` plus
+        the local dirty-row count (dead code unless telemetry is on).
         """
+        n_dirty = jnp.int32(0)
         if mobility_step_m is not None:
             d, start = walk_displacements(k_mob)
             U = mobility.apply_walk(U, d, p.extent_m)
             if start is None:
                 idx = jnp.arange(n_loc, dtype=jnp.int32)
+                n_dirty = jnp.int32(n_loc)
             else:
-                idx = window_dirty_indices(start)
+                idx, n_dirty = window_dirty_indices(start)
             rs = radio.radio_update_rows(cfg, rs, U, static.C, static.bore,
                                          inc_fad(static), P, idx)
-        return U, rs
+        return U, rs, n_dirty
 
     def allocate(se, cqi, a, buf, avg, cursor, harq_pending):
         demand = (buf[:, None] > 0.0) | harq_pending[:, None]
@@ -437,6 +464,11 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
         ``max_retx`` retransmissions.  The retx TB is delivered at its
         stored size (real HARQ retransmits the same TB; the grant-size
         mismatch is absorbed by the soft-combining abstraction).
+
+        The fifth return is the TTI's KPI tuple
+        ``(acks, nacks, retx, dropped_bits)`` -- computed from the masks
+        the machine already holds, so it is dead code (XLA DCE) unless
+        telemetry consumes it.
         """
         pending = hbits > 0.0
         tb = jnp.where(pending, hbits, tb_new)
@@ -449,9 +481,13 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
         n_fail = attempt + 1
         keep = (fail & (n_fail <= max_retx)) | (pending & ~granted)
         delivered = jnp.where(ok, tb, 0.0)
+        stats = (ok.sum().astype(jnp.int32),
+                 fail.sum().astype(jnp.int32),
+                 (pending & attempting).sum().astype(jnp.int32),
+                 jnp.where(fail & (n_fail > max_retx), tb, 0.0).sum())
         hbits = jnp.where(keep, tb, 0.0)
         hretx = jnp.where(keep, jnp.where(fail, n_fail, hretx), 0)
-        return delivered, pending, hbits, hretx
+        return delivered, pending, hbits, hretx, stats
 
     def prepare(static, U, power_act: bool):
         """Hoistable constants of the static-geometry regime.
@@ -493,22 +529,25 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
 
     def tti_step(h, static, state, action, rs=None):
         """One pure TTI: (hoisted, static, state, action, radio-state) ->
-        (state, tput, radio-state).  ``rs`` is the incremental path's
-        carried ``radio.RadioState`` (None on the dense paths, threaded
-        unchanged)."""
+        (state, tput, radio-state, telemetry).  ``rs`` is the incremental
+        path's carried ``radio.RadioState`` (None on the dense paths,
+        threaded unchanged); telemetry is None unless built with
+        ``telemetry=True``."""
         power_act = action is not None
         U, buf, avg = state.U, state.backlog, state.pf_avg
         cursor, key = state.rr_cursor, state.key
         hbits, hretx, a_srv, ttt, t = (state.harq_bits, state.harq_retx,
                                        state.serving, state.ttt, state.t)
+        prev_srv = a_srv
         P = action if power_act else static.P
         k_mob, k_fad, k_tr, k_harq = radio.tti_keys(key, t)
+        n_dirty = jnp.int32(0) if incremental else None
         # -- channel: incremental state (carried or hoisted), per-TTI
         # recompute, or the hoisted dense constants -------------------------
         r = rs if rs is not None else h.get("rs")
         if r is not None:
             if rs is not None:              # carried: mobility dirties rows
-                U, r = inc_channel(static, r, U, P, k_mob)
+                U, r, n_dirty = inc_channel(static, r, U, P, k_mob)
                 rs = r
             if ho_on:
                 a_srv, ttt = a3_handover(a_srv, ttt, r.meas, hyst_db,
@@ -568,8 +607,9 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
         drainable = jnp.where(harq_pending, 0.0, buf)
         tb_new = mac_sched.served_bits(alloc, se, drainable, rb_bw,
                                        tti_s).sum(1)
+        hstats = None
         if harq_on:
-            bits, _, hbits, hretx = harq_step(
+            bits, _, hbits, hretx, hstats = harq_step(
                 k_harq, tb_new, hbits, hretx, alloc.sum(axis=1) > 0.0)
         elif bler > 0.0:   # HARQ-lite: lost blocks stay queued -> retx
             bits = tb_new * local_rows(jax.random.bernoulli(
@@ -585,7 +625,19 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
         avg = (1.0 - beta) * avg + beta * tput
         state = EpisodeState(U, buf, avg, cursor + rb_chunk, key,
                              hbits, hretx, a_srv, ttt, t + 1)
-        return state, tput, rs
+        telem = None
+        if telemetry:
+            # KPIs only from values computed above: no PRNG, no carry.
+            if hstats is None:
+                acks = (bits > 0.0).sum().astype(jnp.int32)
+                nacks = (((tb_new > 0.0) & (bits == 0.0)).sum()
+                         .astype(jnp.int32) if bler > 0.0 else jnp.int32(0))
+                hstats = (acks, nacks, jnp.int32(0), jnp.float32(0.0))
+            ho_fired = ((a_srv != prev_srv).sum().astype(jnp.int32)
+                        if ho_on else jnp.int32(0))
+            telem = tti_telemetry(n_cells, n_ues, a_use, alloc, bits, tput,
+                                  buf, hstats, ho_fired, n_dirty, ue_axes)
+        return state, tput, rs, telem
 
     def setup(static, U, action):
         """(hoisted constants, carried RadioState) for one specialisation.
@@ -609,20 +661,23 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
     if mesh is None:
         def step(static, state, action=None):
             h, rs0 = setup(static, state.U, action)
-            state, tput, _ = tti_step(h, static, state, action, rs0)
-            return state, tput
+            state, tput, _, telem = tti_step(h, static, state, action, rs0)
+            return (state, tput, telem) if telemetry else (state, tput)
 
         def rollout(static, state, n_tti, action=None):
             h, rs0 = setup(static, state.U, action)
 
             def body(carry, _):
                 s, rs = carry
-                s, tput, rs = tti_step(h, static, s, action, rs)
-                return (s, rs), tput
+                s, tput, rs, telem = tti_step(h, static, s, action, rs)
+                return (s, rs), ((tput, telem) if telemetry else tput)
 
-            (state, _), tput = jax.lax.scan(body, (state, rs0), None,
-                                            length=n_tti)
-            return state, tput
+            (state, _), ys = jax.lax.scan(body, (state, rs0), None,
+                                          length=n_tti)
+            if telemetry:
+                tput, telem = ys
+                return state, tput, telem
+            return state, ys
 
         return EpisodeFns(step=jax.jit(step),
                           rollout=jax.jit(rollout, static_argnums=(2,)))
@@ -641,6 +696,22 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
         U=PSpec(ue_axes, None), backlog=ue, pf_avg=ue, rr_cursor=PSpec(),
         key=PSpec(None), harq_bits=ue, harq_retx=ue, serving=ue, ttt=ue,
         t=PSpec())
+    # telemetry leaves leave the shard_map fully replicated: every KPI is
+    # psum-reduced inside tti_telemetry, so each shard holds the global
+    # value.  The None leaf (dirty_rows outside incremental mode) must be
+    # None in the spec tree too -- shard_map matches treedefs exactly.
+    telem_specs = Telemetry(
+        served_bits=PSpec(None), granted_rb=PSpec(None),
+        harq_acks=PSpec(), harq_nacks=PSpec(), harq_retx=PSpec(),
+        dropped_bits=PSpec(), ho_events=PSpec(), buffer_bits=PSpec(),
+        jain=PSpec(), dirty_rows=PSpec() if incremental else None)
+    # stacked (n_tti, ...) variant for the rollout's scan output
+    telem_stack_specs = Telemetry(
+        served_bits=PSpec(None, None), granted_rb=PSpec(None, None),
+        harq_acks=PSpec(None), harq_nacks=PSpec(None),
+        harq_retx=PSpec(None), dropped_bits=PSpec(None),
+        ho_events=PSpec(None), buffer_bits=PSpec(None),
+        jain=PSpec(None), dirty_rows=PSpec(None) if incremental else None)
 
     def revar(state):
         """Re-establish the claimed replication of the scalar carry slots.
@@ -671,13 +742,16 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
             state = jax.tree_util.tree_map(
                 lambda x: _pvary(x, ue_axes), state)
             h, rs0 = setup(static, state.U, act[0] if act else None)
-            state, tput, _ = tti_step(h, static, state,
-                                      act[0] if act else None, rs0)
+            state, tput, _, telem = tti_step(h, static, state,
+                                             act[0] if act else None, rs0)
+            if telemetry:
+                return revar(state), tput, telem
             return revar(state), tput
 
         act_spec = () if action is None else (PSpec(None, None),)
-        f = sharded(one, (static_specs, state_specs) + act_spec,
-                    (state_specs, ue))
+        out_specs = ((state_specs, ue, telem_specs) if telemetry
+                     else (state_specs, ue))
+        f = sharded(one, (static_specs, state_specs) + act_spec, out_specs)
         args = (static, state) if action is None else (static, state, action)
         return f(*args)
 
@@ -689,17 +763,21 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
 
             def body(carry, _):
                 s, rs = carry
-                s, tput, rs = tti_step(h, static, s,
-                                       act[0] if act else None, rs)
-                return (s, rs), tput
+                s, tput, rs, telem = tti_step(h, static, s,
+                                              act[0] if act else None, rs)
+                return (s, rs), ((tput, telem) if telemetry else tput)
 
-            (state, _), tput = jax.lax.scan(body, (init, rs0), None,
-                                            length=n_tti)
-            return revar(state), tput
+            (state, _), ys = jax.lax.scan(body, (init, rs0), None,
+                                          length=n_tti)
+            if telemetry:
+                tput, telem = ys
+                return revar(state), tput, telem
+            return revar(state), ys
 
         act_spec = () if action is None else (PSpec(None, None),)
-        f = sharded(roll, (static_specs, state_specs) + act_spec,
-                    (state_specs, PSpec(None, ue_axes)))
+        out_specs = ((state_specs, PSpec(None, ue_axes), telem_stack_specs)
+                     if telemetry else (state_specs, PSpec(None, ue_axes)))
+        f = sharded(roll, (static_specs, state_specs) + act_spec, out_specs)
         args = (static, state) if action is None else (static, state, action)
         return f(*args)
 
@@ -709,7 +787,8 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
 
 def episode_fns_for(sim, *, mobility_step_m=None, per_tti_fading=False,
                     use_harq=None, mesh=None, ue_axis=("ue",),
-                    radio_mode=None, mobility_move_frac=None) -> EpisodeFns:
+                    radio_mode=None, mobility_move_frac=None,
+                    telemetry: bool = False) -> EpisodeFns:
     """The :func:`make_episode_fns` bundle for ``sim``, cached on it.
 
     Keyed by the trace-time switches only -- ``n_tti`` and the presence of
@@ -731,7 +810,7 @@ def episode_fns_for(sim, *, mobility_step_m=None, per_tti_fading=False,
         mobility_move_frac = getattr(sim.params, "mobility_move_frac", None)
     ue_axis = (ue_axis,) if isinstance(ue_axis, str) else tuple(ue_axis)
     cache_key = (mobility_step_m, per_tti_fading, use_harq, mesh, ue_axis,
-                 radio_mode, mobility_move_frac)
+                 radio_mode, mobility_move_frac, telemetry)
     cache = sim.__dict__.setdefault("_episode_fns_cache", {})
     if cache_key not in cache:
         cache[cache_key] = make_episode_fns(
@@ -739,16 +818,18 @@ def episode_fns_for(sim, *, mobility_step_m=None, per_tti_fading=False,
             sim._traffic_step, mobility_step_m=mobility_step_m,
             per_tti_fading=per_tti_fading, use_harq=use_harq,
             mesh=mesh, ue_axis=ue_axis, radio_mode=radio_mode,
-            mobility_move_frac=mobility_move_frac)
+            mobility_move_frac=mobility_move_frac, telemetry=telemetry)
     return cache[cache_key]
 
 
 def run_episode(sim, n_tti: int, key=None, mobility_step_m=None,
                 per_tti_fading: bool = False, sync_state: bool = True,
                 use_harq=None, mesh=None, radio_mode=None,
-                mobility_move_frac=None):
+                mobility_move_frac=None, telemetry: bool = False):
     """Run ``n_tti`` TTIs; returns (n_tti, n_ues) delivered throughput
-    (bits/s).
+    (bits/s) -- or ``(tput, telem)`` with ``telemetry=True``, where
+    ``telem`` is the stacked per-TTI :class:`repro.obs.telemetry.Telemetry`
+    (``repro.obs.summarize`` reduces it to a KPI dict).
 
     A thin wrapper over the functional API: ``sim.init_episode_state(key)``
     -> ``rollout`` -> ``sim.sync_episode_state``.  The PF average-rate
@@ -764,12 +845,17 @@ def run_episode(sim, n_tti: int, key=None, mobility_step_m=None,
     fns = episode_fns_for(sim, mobility_step_m=mobility_step_m,
                           per_tti_fading=per_tti_fading, use_harq=use_harq,
                           mesh=mesh, radio_mode=radio_mode,
-                          mobility_move_frac=mobility_move_frac)
+                          mobility_move_frac=mobility_move_frac,
+                          telemetry=telemetry)
     state = sim.init_episode_state(key)
     static = sim.episode_static()
-    state, tput = fns.rollout(static, state, n_tti)
+    telem = None
+    if telemetry:
+        state, tput, telem = fns.rollout(static, state, n_tti)
+    else:
+        state, tput = fns.rollout(static, state, n_tti)
     if mobility_step_m is None:
         mobility_step_m = getattr(sim.params, "mobility_step_m", None)
     if sync_state:
         sim.sync_episode_state(state, positions=bool(mobility_step_m))
-    return tput
+    return (tput, telem) if telemetry else tput

@@ -1,0 +1,131 @@
+"""In-scan KPI telemetry: the :class:`Telemetry` pytree and its reducers.
+
+The scan-compiled TTI engine returns throughput and nothing else; every
+other KPI a measurement-driven consumer needs (digital-twin calibration,
+RL diagnostics, load dashboards -- PAPERS.md) lives in intermediates that
+die inside the compiled program.  This module defines the ONE convention
+for getting them out:
+
+* :class:`Telemetry` is a NamedTuple pytree of per-TTI KPIs.  The engine
+  computes one per TTI (:func:`tti_telemetry`, called from
+  ``mac.engine.tti_step``) and stacks them as a ``lax.scan`` *output* --
+  never a carry, so telemetry adds zero carry growth and cannot perturb
+  the trajectory.
+* The switch is trace-time (``make_episode_fns(..., telemetry=True)``):
+  off compiles the exact legacy program (structural no-op); on computes
+  KPIs purely from values the step already produced -- the trajectory is
+  bit-identical either way (asserted across every registry scenario, under
+  ``vmap`` and on a 2-device mesh in tests/test_telemetry.py).
+* Under a mesh, every KPI is ``psum``-reduced over the UE axis inside the
+  ``shard_map`` body, so a sharded rollout reports the same *global*
+  numbers as a single device.
+
+Optional leaves are ``None`` when a regime cannot produce them (same
+trace-time-constant-treedef convention as ``radio.RadioState``):
+``dirty_rows`` exists only in ``radio_mode="incremental"``.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Telemetry(NamedTuple):
+    """Per-TTI KPIs of one engine step (stacked to (n_tti, ...) by scan).
+
+    Cell-indexed tensors are aggregated over the *serving* attachment of
+    the TTI; scalar counters are network-wide totals.  Under a mesh every
+    field is already psum-reduced -- global numbers on every shard.
+    """
+
+    served_bits: Any    # (n_cells,) f32 bits delivered per serving cell
+    granted_rb: Any     # (n_cells,) f32 resource blocks granted per cell
+    harq_acks: Any      # i32 transport blocks delivered this TTI
+    harq_nacks: Any     # i32 failed HARQ attempts this TTI
+    harq_retx: Any      # i32 retransmission attempts this TTI
+    dropped_bits: Any   # f32 TB bits dropped at harq_max_retx exhaustion
+    ho_events: Any      # i32 A3 handovers fired this TTI
+    buffer_bits: Any    # f32 total finite backlog after the TTI
+    jain: Any           # f32 Jain fairness of per-UE delivered throughput
+    dirty_rows: Any     # i32 radio rows recomputed | None (dense modes)
+
+
+def tti_telemetry(n_cells: int, n_ues: int, a, alloc, bits, tput, backlog,
+                  harq_stats, ho_events, n_dirty, ue_axes=None) -> Telemetry:
+    """Assemble one TTI's :class:`Telemetry` from step intermediates.
+
+    Pure: reads the serving attachment ``a``, the allocation matrix, the
+    delivered ``bits``/``tput`` and post-drain ``backlog`` the step already
+    computed -- no extra PRNG draws, no state, so enabling telemetry cannot
+    change the trajectory.  ``ue_axes`` names the shard_map mesh axes the
+    UE dimension is sharded over: all reductions then ``psum`` so every
+    shard carries the global KPI (None = single device, no collectives).
+
+    Jain's fairness index over the per-UE delivered throughput:
+    ``(sum x)^2 / (n * sum x^2)`` -- 1.0 when perfectly equal, ``1/n``
+    when one UE takes everything, 0.0 defined for an idle TTI.
+    """
+    acks, nacks, retx, dropped = harq_stats
+    served = jnp.zeros((n_cells,), jnp.float32).at[a].add(bits)
+    granted = jnp.zeros((n_cells,), jnp.float32).at[a].add(
+        alloc.sum(axis=-1))
+    occupancy = jnp.where(jnp.isfinite(backlog), backlog, 0.0).sum()
+    s = tput.sum()
+    ss = (tput * tput).sum()
+    if ue_axes is not None:
+        psum = lambda x: jax.lax.psum(x, ue_axes)
+        served, granted, occupancy, s, ss = map(
+            psum, (served, granted, occupancy, s, ss))
+        acks, nacks, retx, dropped, ho_events = map(
+            psum, (acks, nacks, retx, dropped, ho_events))
+        if n_dirty is not None:
+            n_dirty = psum(n_dirty)
+    jain = jnp.where(ss > 0.0, s * s / (n_ues * ss), 0.0)
+    return Telemetry(served_bits=served, granted_rb=granted,
+                     harq_acks=acks, harq_nacks=nacks, harq_retx=retx,
+                     dropped_bits=dropped, ho_events=ho_events,
+                     buffer_bits=occupancy, jain=jain, dirty_rows=n_dirty)
+
+
+def summarize(telem: Telemetry, tti_s: float | None = None) -> dict:
+    """Reduce a telemetry stack to a flat dict of python-float KPIs.
+
+    Accepts per-TTI stacks of any leading shape -- a rollout's
+    ``(n_tti, ...)``, an env batch's ``(batch, n_tti, ...)``, or a single
+    step -- and aggregates over all leading axes.  ``tti_s`` converts the
+    served-bits total into a mean offered-load figure (Mbit/s per cell).
+    The dict is plain host data: what ``CrrmEnv``'s gym adapter exposes in
+    its info dict and ``examples/quickstart.py`` prints.
+    """
+    import numpy as np
+
+    t = jax.tree_util.tree_map(np.asarray, telem)
+    n_tti = max(1, int(np.prod(t.jain.shape))) if t.jain.ndim else 1
+    attempts = float(t.harq_acks.sum() + t.harq_nacks.sum())
+    out = {
+        "served_mbits": float(t.served_bits.sum()) / 1e6,
+        "mean_cell_load_rb": float(t.granted_rb.mean()),
+        "harq_acks": float(t.harq_acks.sum()),
+        "harq_nacks": float(t.harq_nacks.sum()),
+        "harq_nack_rate": (float(t.harq_nacks.sum()) / attempts
+                           if attempts else 0.0),
+        "harq_retx": float(t.harq_retx.sum()),
+        "dropped_mbits": float(t.dropped_bits.sum()) / 1e6,
+        "ho_events": float(t.ho_events.sum()),
+        "mean_buffer_mbits": float(t.buffer_bits.mean()) / 1e6,
+        "mean_jain": float(t.jain.mean()),
+    }
+    if tti_s is not None:
+        busiest = t.served_bits.sum(axis=tuple(range(t.served_bits.ndim - 1)))
+        out["busiest_cell_mbps"] = float(busiest.max()) / (n_tti * tti_s) / 1e6
+    if t.dirty_rows is not None:
+        out["mean_dirty_rows"] = float(t.dirty_rows.mean())
+    return out
+
+
+def format_summary(kpis: dict) -> str:
+    """One aligned line per KPI -- the quickstart's printable view."""
+    width = max(len(k) for k in kpis)
+    return "\n".join(f"  {k:<{width}}  {v:,.3f}" for k, v in kpis.items())

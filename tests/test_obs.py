@@ -1,0 +1,195 @@
+"""ISSUE 6: compiled-step reports, perf trajectory, and the bench-harness
+satellites (run.py --json / stderr tracebacks, check_regressions --strict).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+from repro.core.crrm import CRRM
+from repro.sim import scenarios
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH = os.path.join(REPO, "benchmarks")
+
+
+def _sim(**kw):
+    base = dict(n_ues=24, n_cells=6)
+    base.update(kw)
+    return CRRM(scenarios.make_scenario("dense_urban", **base))
+
+
+# ---------------------------------------------------------------- reports
+def test_episode_report_artifact_and_roofline_table(tmp_path):
+    from repro.obs import report
+
+    sim = _sim()
+    art = report.episode_report(sim, 10, scenario="dense_urban")
+    for key in ("n_devices", "model_flops", "n_ues", "backend"):
+        assert key in art, key
+    if not art.get("skipped"):
+        assert art["hlo_flops"] > 0 and art["hlo_bytes"] > 0
+        assert art["collective_wire_bytes"] == 0.0   # single device
+    table = report.write_report(str(tmp_path), {"dense_urban": art})
+    assert "dense_urban" in table
+    assert (tmp_path / "roofline.md").exists()
+    with open(tmp_path / "dense_urban.json") as f:
+        assert json.load(f)["n_tti"] == 10
+
+
+def test_report_cli_writes_artifacts(tmp_path):
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.obs.report", "--scenario",
+         "dense_urban", "--n-ues", "16", "--n-tti", "5",
+         "--out", str(tmp_path)],
+        capture_output=True, text=True, timeout=600, cwd=REPO,
+        env={**os.environ, "PYTHONPATH": "src"})
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert (tmp_path / "roofline.md").exists()
+    assert "| dense_urban |" in out.stdout
+
+
+def test_skipped_artifact_renders_as_skipped_row():
+    from repro.obs import report
+
+    table = report.roofline_table(
+        {"broken": {"skipped": True, "reason": "no cost analysis"}})
+    assert "skipped" in table
+
+
+# ------------------------------------------------------------- trajectory
+def test_provenance_stamp_fields():
+    from benchmarks import trajectory
+
+    p = trajectory.provenance()
+    for key in ("git_sha", "git_dirty", "timestamp_utc", "jax_version",
+                "backend", "device_kind"):
+        assert key in p, key
+    assert p["jax_version"] == jax.__version__
+    assert len(p["git_sha"]) in (7, 40) or p["git_sha"] == "unknown"
+
+
+def test_trajectory_table_covers_all_records():
+    from benchmarks import trajectory
+
+    table = trajectory.render_table()
+    for path in trajectory.record_paths():
+        assert os.path.basename(path) in table
+    # every committed record carries a gated metric by now
+    assert "(no gated metric)" not in table
+    assert "Rendered at" in table
+
+
+def test_trajectory_cli_and_stamping(tmp_path):
+    src = os.path.join(BENCH, "BENCH_mac.json")
+    with open(src) as f:
+        rec = json.load(f)
+    rec.pop("provenance", None)
+    with open(tmp_path / "BENCH_mac.json", "w") as f:
+        json.dump(rec, f)
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.trajectory", "--stamp",
+         "--dir", str(tmp_path), "--out", str(tmp_path / "traj.md")],
+        capture_output=True, text=True, timeout=300, cwd=REPO,
+        env={**os.environ, "PYTHONPATH": "src"})
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    with open(tmp_path / "BENCH_mac.json") as f:
+        stamped = json.load(f)
+    assert "provenance" in stamped
+    assert (tmp_path / "traj.md").exists()
+    with open(tmp_path / "traj.md") as f:
+        assert "per_rb_cost" in f.read()
+
+
+def test_seeded_records_write_records_with_provenance(tmp_path, monkeypatch):
+    """_write_record stamps provenance into every record it writes."""
+    from benchmarks import paper_benches
+
+    monkeypatch.setattr(paper_benches, "__file__",
+                        str(tmp_path / "paper_benches.py"))
+    paper_benches._write_record("BENCH_x.json", {"bench": "x"})
+    with open(tmp_path / "BENCH_x.json") as f:
+        rec = json.load(f)
+    assert rec["provenance"]["jax_version"] == jax.__version__
+
+
+# -------------------------------------------------------- run.py satellite
+@pytest.mark.slow
+def test_run_json_mode_is_machine_readable():
+    """--json: stdout parses as one JSON document; bench detail lines and
+    tracebacks go to stderr."""
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--json", "--only", "fig4"],
+        capture_output=True, text=True, timeout=600, cwd=REPO,
+        env={**os.environ, "PYTHONPATH": "src"})
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    doc = json.loads(out.stdout)            # pure JSON or this throws
+    assert doc["failures"] == 0
+    assert doc["results"][0]["ok"] is True
+    assert "# fig4" in out.stderr           # detail rerouted off stdout
+
+
+def test_run_failures_traceback_on_stderr_csv_intact(tmp_path):
+    """A failing bench must not interleave its traceback with the CSV."""
+    driver = tmp_path / "driver.py"
+    driver.write_text(
+        "import sys; sys.path.insert(0, 'src'); sys.path.insert(0, '.')\n"
+        "from benchmarks import paper_benches, run\n"
+        "def boom():\n"
+        "    raise RuntimeError('synthetic bench failure')\n"
+        "paper_benches.ALL = [boom]\n"
+        "run.main(['--only', ''])\n")
+    out = subprocess.run([sys.executable, str(driver)], capture_output=True,
+                         text=True, timeout=120, cwd=REPO)
+    assert out.returncode != 0
+    assert "Traceback" not in out.stdout
+    assert "boom,FAILED,-" in out.stdout
+    assert "synthetic bench failure" in out.stderr
+
+
+# --------------------------------------------- check_regressions satellite
+def _checker(args, cwd=REPO):
+    return subprocess.run(
+        [sys.executable, "-m", "benchmarks.check_regressions", *args],
+        capture_output=True, text=True, timeout=600, cwd=cwd,
+        env={**os.environ, "PYTHONPATH": "src"})
+
+
+def test_strict_fails_on_unregistered_bench(tmp_path):
+    with open(tmp_path / "BENCH_orphan.json", "w") as f:
+        json.dump({"bench": "no_such_bench", "gated_metric": "r",
+                   "gate": 1.0}, f)
+    lenient = _checker(["--dir", str(tmp_path)])
+    assert lenient.returncode == 0, lenient.stdout + lenient.stderr
+    assert "SKIPPED" in lenient.stdout
+    strict = _checker(["--strict", "--dir", str(tmp_path)])
+    assert strict.returncode != 0
+    assert "STRICT" in strict.stderr + strict.stdout
+
+
+def test_strict_fails_on_missing_gated_metric(tmp_path):
+    with open(tmp_path / "BENCH_nometric.json", "w") as f:
+        json.dump({"bench": "mac_episode", "gate": 3.0}, f)
+    strict = _checker(["--strict", "--dir", str(tmp_path)])
+    assert strict.returncode != 0
+    assert "gated_metric" in strict.stdout + strict.stderr
+
+
+def test_full_rerun_missing_metric_errors_cleanly(tmp_path, monkeypatch):
+    """The full-shape KeyError path: a re-seeded record that lost its
+    gated metric must produce the diagnostic, not a bare KeyError."""
+    from benchmarks import check_regressions as cr
+
+    path = tmp_path / "BENCH_weird.json"
+    with open(path, "w") as f:
+        json.dump({"bench": "mac_episode", "gated_metric": "vanished",
+                   "gate": 3.0, "gate_direction": "max"}, f)
+    # stub the rerun so no heavy bench executes and no record is re-seeded
+    monkeypatch.setattr(cr, "_reruns",
+                        lambda: {"mac_episode":
+                                 lambda: ("stub", 0.0, 1.0)})
+    with pytest.raises(AssertionError, match="WITHOUT its gated metric"):
+        cr.check(str(path), smoke=False)
