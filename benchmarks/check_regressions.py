@@ -45,6 +45,7 @@ def _reruns():
         "env_episode": pb.env_episode,
         "sharded_episode": pb.sharded_episode,
         "smart_update_scan": pb.smart_update_scan,
+        "twin_serve": pb.twin_serve,
     }
 
 

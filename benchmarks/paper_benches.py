@@ -217,6 +217,13 @@ SMOKE = False
 PER_RB_MAX_SLOWDOWN = 3.0
 PER_RB_MAX_SLOWDOWN_SMOKE = 5.0
 
+#: rr episode vs pf episode at the same shapes (ISSUE 7): the sort-based
+#: segment-rank rr allocator is O(n log n) like pf's scatter floor, so the
+#: ratio should be ~1x; the old masked-cumsum rank was O(n_ue x n_cell)
+#: and blows past 2x as shapes grow.  Looser in smoke for dispatch noise.
+RR_VS_PF_MAX_RATIO = 2.0
+RR_VS_PF_MAX_RATIO_SMOKE = 3.0
+
 
 def _episode_us_per_tti(sim, n_tti, key, reps=1, **kw):
     """Best-of-``reps`` us/TTI (min filters scheduler/GC noise)."""
@@ -296,6 +303,21 @@ def mac_episode(n_ues=1000, n_cells=57, n_tti=100):
         f"per-RB episode {rb_cost:.2f}x slower than wideband "
         f"(gate {gate}x)")
 
+    # rr parity (ISSUE 7): round-robin's within-cell rank is a sort-based
+    # segment rank (O(n log n)), not the old O(n_ue x n_cell) masked
+    # cumsum that cost 52 ms/TTI at 100k UEs x 57 cells -- it must stay
+    # within a small factor of pf's scatter-add floor at the same shapes
+    rr_gate = RR_VS_PF_MAX_RATIO_SMOKE if SMOKE else RR_VS_PF_MAX_RATIO
+    rr = CRRM(CRRM_parameters(**{**common, "scheduler_policy": "rr"}))
+    with prof.stage("rr_scan"):
+        us_rr = _episode_us_per_tti(rr, n_tti, key, reps=reps)
+    rr_cost = us_rr / us_scan
+    print(f"# mac_episode: rr scan {us_rr:.1f} us/TTI "
+          f"({rr_cost:.2f}x pf; gate {rr_gate:.0f}x)")
+    assert rr_cost < rr_gate, (
+        f"rr episode {rr_cost:.2f}x slower than pf (gate {rr_gate}x): "
+        "the segment-rank allocator regressed to a per-cell cumsum")
+
     if SMOKE:
         print(f"# mac_episode: smoke mode, scan {us_scan:.1f} us/TTI "
               f"({n_ues} UEs x {n_tti} TTIs)")
@@ -324,9 +346,11 @@ def mac_episode(n_ues=1000, n_cells=57, n_tti=100):
         "bench": "mac_episode", "n_ues": n_ues, "n_cells": n_cells,
         "n_tti": n_tti, "us_per_tti_scan": round(us_scan, 2),
         "us_per_tti_per_rb": round(us_rb, 2),
+        "us_per_tti_rr": round(us_rr, 2),
         "us_per_tti_graph_loop": round(us_loop, 2),
         "scan_speedup_vs_graph_loop": round(us_loop / us_scan, 3),
         "per_rb_cost": round(rb_cost, 3),
+        "rr_vs_pf_cost": round(rr_cost, 3),
         "gated_metric": "per_rb_cost", "gate_direction": "max",
         "gate": PER_RB_MAX_SLOWDOWN,
         "smoke_gate": PER_RB_MAX_SLOWDOWN_SMOKE})
@@ -603,11 +627,10 @@ def smart_update_scan(n_ues=100_000, n_cells=127, n_tti=20, frac=0.10):
         n_ues, n_cells, n_tti = 4096, 57, 10
     gate = SMART_UPDATE_MIN_SPEEDUP_SMOKE if SMOKE \
         else SMART_UPDATE_MIN_SPEEDUP
-    # full-buffer pf: the O(n_ue) scatter-add scheduler (rr's within-cell
-    # rank cumsum is O(n_ue x n_cell) and would dominate the MAC floor),
-    # so the ratio isolates the radio-chain recompute the smart update
-    # elides; single-device float reductions keep dense-vs-incremental
-    # bitwise-clean
+    # full-buffer pf: the O(n_ue) scatter-add scheduler keeps the MAC
+    # floor low, so the ratio isolates the radio-chain recompute the
+    # smart update elides; single-device float reductions keep
+    # dense-vs-incremental bitwise-clean
     kw = dict(n_ues=n_ues, n_cells=n_cells, n_sectors=1, seed=3,
               pathloss_model_name="UMa", power_W=10.0,
               scheduler_policy="pf", fairness_p=0.5,
@@ -656,7 +679,107 @@ def smart_update_scan(n_ues=100_000, n_cells=127, n_tti=20, frac=0.10):
     return "smart_update_scan_speedup", us_inc, speedup
 
 
+# -- digital-twin serving: steady-state per-TTI cost under churn -----------------
+#: acceptance gate (ISSUE 7): birth-death churn runs the same dense
+#: dynamic-geometry chain as a mobility rollout plus O(n_ue) mask
+#: maintenance and an O(max_arrivals) newborn row scatter, so the
+#: steady-state per-TTI serving cost must stay within this factor of the
+#: churn-free mobility rollout of the same scenario.  >2x means the churn
+#: path fell off the one-program scan (per-chunk re-tracing) or a newborn
+#: scatter went dense over the capacity axis.  Smoke shapes are
+#: dispatch-dominated, hence the looser smoke gate.
+TWIN_CHURN_MAX_OVERHEAD = 2.0
+TWIN_CHURN_MAX_OVERHEAD_SMOKE = 3.0
+
+
+def twin_serve(n_ues=20_000, n_cells=57, chunk_tti=50, n_chunks=4):
+    """us/TTI for digital-twin serving (ISSUE 7): a chunked rollout under
+    the birth-death UE process (arrivals/departures inside the compiled
+    scan) vs the churn-free mobility rollout of the same scenario, plus
+    the full TwinServer serving cost (chunk + KPI summarize + host
+    transfer).  Seeds/updates ``benchmarks/BENCH_twin.json`` (full mode
+    only)."""
+    from repro.mac import engine as mac_engine
+    from repro.sim.mobility import ChurnConfig
+    from repro.twin import TwinServer
+
+    if SMOKE:
+        n_ues, n_cells, chunk_tti, n_chunks = 2048, 19, 10, 3
+    gate = TWIN_CHURN_MAX_OVERHEAD_SMOKE if SMOKE \
+        else TWIN_CHURN_MAX_OVERHEAD
+    # churn on top of a walking metro scenario: the realistic twin regime.
+    # The baseline drops only the churn, so the gated ratio isolates the
+    # birth-death machinery itself.
+    kw = dict(n_ues=n_ues, n_cells=n_cells, n_sectors=1, seed=3,
+              pathloss_model_name="UMa", power_W=10.0,
+              scheduler_policy="pf", fairness_p=0.5,
+              mobility_step_m=20.0, mobility_move_frac=0.10,
+              traffic_model="poisson", radio_mode="dense",
+              traffic_params=dict(arrival_rate_hz=300.0,
+                                  packet_size_bits=12_000.0))
+    # stationary occupancy = rate x lifetime = 0.7 x capacity
+    churn = ChurnConfig(arrival_rate_hz=0.35 * n_ues, mean_lifetime_s=2.0,
+                        max_arrivals_per_tti=max(8, n_ues // 512))
+    key = jax.random.PRNGKey(0)
+    reps = 3
+
+    def rollout_us(churn_cfg):
+        sim = CRRM(CRRM_parameters(**kw))
+        fns = sim.episode_fns(churn=churn_cfg)
+        static, state = sim.episode_static(), sim.init_episode_state(key)
+        if churn_cfg is not None:
+            state = mac_engine.seed_churn_state(state, static, sim.params)
+        out = fns.rollout(static, state, chunk_tti)   # compile + warm
+        jax.block_until_ready(out)
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = fns.rollout(static, state, chunk_tti)
+            jax.block_until_ready(out)
+            best = min(best, time.perf_counter() - t0)
+        return best / chunk_tti * 1e6
+
+    us_plain = rollout_us(None)
+    us_churn = rollout_us(churn)
+    overhead = us_churn / us_plain
+
+    # the serving layer end to end: donated-state chunk + KPI summary
+    srv = TwinServer(CRRM(CRRM_parameters(**kw)), churn,
+                     chunk_tti=chunk_tti)
+    kpis = srv.step_chunk()                           # compile + warm
+    best = float("inf")
+    for _ in range(n_chunks):
+        t0 = time.perf_counter()
+        kpis = srv.step_chunk()
+        best = min(best, time.perf_counter() - t0)
+    us_serve = best / chunk_tti * 1e6
+    assert 0.0 < kpis["active_ues"] < n_ues, (
+        f"churn never engaged: {kpis['active_ues']} of {n_ues} active")
+    assert kpis["served_mbits"] > 0.0
+
+    print(f"# twin_serve: {n_ues} UEs x {n_cells} cells, chunks of "
+          f"{chunk_tti} TTIs: plain {us_plain:.1f} us/TTI, churn "
+          f"{us_churn:.1f} us/TTI -> x{overhead:.2f} overhead (gate "
+          f"{gate}x), serving {us_serve:.1f} us/TTI")
+    assert overhead < gate, (
+        f"churn rollout x{overhead:.2f} vs churn-free (gate {gate}x)")
+    if not SMOKE:
+        _write_record("BENCH_twin.json", {
+            "bench": "twin_serve", "n_ues": n_ues, "n_cells": n_cells,
+            "chunk_tti": chunk_tti,
+            "arrival_rate_hz": churn.arrival_rate_hz,
+            "mean_lifetime_s": churn.mean_lifetime_s,
+            "us_per_tti_plain": round(us_plain, 2),
+            "us_per_tti_churn": round(us_churn, 2),
+            "us_per_tti_serving": round(us_serve, 2),
+            "churn_overhead": round(overhead, 3),
+            "gated_metric": "churn_overhead", "gate_direction": "max",
+            "gate": TWIN_CHURN_MAX_OVERHEAD,
+            "smoke_gate": TWIN_CHURN_MAX_OVERHEAD_SMOKE})
+    return "twin_serve_churn_overhead", us_serve, overhead
+
+
 ALL = [fig2_pathloss_throughput, fig3_sectors, fig4_fairness,
        fig5_ppp_validation, tab_smart_update, tab_mobility_sweep,
        kernel_fused_sinr, mac_episode, env_episode, sharded_episode,
-       smart_update_scan]
+       smart_update_scan, twin_serve]

@@ -99,7 +99,7 @@ from jax.sharding import PartitionSpec as PSpec
 from repro.core.distributed import _axis_index, _pvary, _shard_map
 from repro.mac import scheduler as mac_sched
 from repro.obs.telemetry import Telemetry, tti_telemetry
-from repro.sim import mobility, radio
+from repro.sim import deploy, mobility, radio
 
 
 class EpisodeState(NamedTuple):
@@ -110,6 +110,17 @@ class EpisodeState(NamedTuple):
     axis (N parallel episodes), checkpointed, or handed to an external RL
     loop.  Constructed by ``CRRM.init_episode_state``; advanced by the pure
     ``step``/``rollout`` functions of :func:`make_episode_fns`.
+
+    The two trailing leaves exist only under a birth-death churn process
+    (``make_episode_fns(..., churn=ChurnConfig(...))`` -- DESIGN.md
+    §Digital-twin-serving) and default to ``None`` otherwise, so legacy
+    states keep their treedef (and every positional 10-argument
+    construction site stays valid): ``active`` is the capacity-padded
+    live-UE mask; ``fad`` the *carried* fading factor, needed because
+    newborn UEs redraw their fading rows in-scan (``radio.churn_keys``)
+    -- with churn off (or per-TTI fading on) fading stays in
+    :class:`EpisodeStatic` exactly as before.  Seed both leaves with
+    :func:`seed_churn_state`.
     """
 
     U: Any           # (n_ues, 3) positions
@@ -122,6 +133,8 @@ class EpisodeState(NamedTuple):
     serving: Any     # (n_ues,) i32 serving-cell index (A3 carried state)
     ttt: Any         # (n_ues,) i32 A3 time-to-trigger counters
     t: Any           # i32 scalar: TTI index (drives PRNG folds + traffic)
+    active: Any = None   # (n_ues,) bool live-UE mask | None (no churn)
+    fad: Any = None      # carried fading factor | None (no churn)
 
 
 class EpisodeStatic(NamedTuple):
@@ -221,13 +234,52 @@ def stationary_served_tput(params, n_cells: int, se, cqi, a, backlog):
     return (bits / p.tti_s).sum(axis=1)
 
 
+def scatter_born(dst, idx, fresh, n_born):
+    """Scatter per-newborn *fresh* rows at the padded born-index vector.
+
+    Unlike the idempotent-recompute scatters of the dirtiness convention,
+    these write NEW values, so the row-0 padding of ``radio.dirty_indices``
+    would corrupt row 0 whenever it is not itself a newborn.  Every padded
+    slot is therefore re-aimed at ``idx[0]`` and writes exactly what slot 0
+    writes there (``fresh[0]`` when any birth happened; the row's current
+    value when none) -- all duplicate writes are identical, so the scatter
+    is deterministic, and a zero-birth TTI is a bitwise no-op.
+    """
+    k = idx.shape[0]
+    sel = jnp.arange(k, dtype=jnp.int32) < n_born
+    idx = jnp.where(sel, idx, idx[0])
+    base = jnp.where(n_born > 0, fresh[0], dst[idx[0]])
+    write = jnp.where(sel.reshape((k,) + (1,) * (fresh.ndim - 1)),
+                      fresh, base)
+    return dst.at[idx].set(write)
+
+
+def seed_churn_state(state, static, params, *, per_tti_fading: bool = False,
+                     active=None) -> EpisodeState:
+    """Attach the churn leaves to a legacy :class:`EpisodeState`.
+
+    ``active`` seeds the live-UE mask (default: every capacity slot live;
+    the birth-death process then relaxes toward its M/M/inf stationary
+    occupancy).  The carried-fading leaf is seeded from ``static.fad``
+    exactly when the engine will carry it (Rayleigh on, per-TTI fading
+    off) -- the same trace-time rule ``make_episode_fns`` applies, so the
+    treedefs agree.
+    """
+    n = state.U.shape[0]
+    if active is None:
+        active = jnp.ones((n,), bool)
+    fad = (static.fad
+           if params.rayleigh_fading and not per_tti_fading else None)
+    return state._replace(active=active, fad=fad)
+
+
 def make_episode_fns(params, n_ues: int, n_cells: int,
                      radio_cfg: "radio.RadioConfig", traffic_step, *,
                      mobility_step_m=None, per_tti_fading: bool = False,
                      use_harq=None, mesh=None, ue_axis=("ue",),
                      radio_mode: str = "dense",
                      mobility_move_frac=None,
-                     telemetry: bool = False) -> EpisodeFns:
+                     telemetry: bool = False, churn=None) -> EpisodeFns:
     """Build the pure ``step``/``rollout`` functions for one configuration.
 
     ``params`` is a ``CRRM_parameters``; ``radio_cfg`` the hashable pure-
@@ -272,6 +324,24 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
     PRNG, so the trajectory is bit-identical either way (gated in
     tests/test_telemetry.py).  Under a mesh every KPI is psum-reduced
     inside the shard_map body, so each shard returns global numbers.
+
+    ``churn`` (a ``sim.mobility.ChurnConfig``) is the digital-twin
+    birth-death switch (DESIGN.md §Digital-twin-serving): the UE axis
+    becomes *capacity-padded* -- ``state.active`` masks the live
+    population, UEs arrive (Poisson, fresh positions and fading rows
+    drawn from the dedicated ``radio.churn_keys`` streams) and depart
+    inside the compiled scan with no retracing.  Inactive rows are
+    structurally idle: their demand is masked out of every scheduler, so
+    they draw zero RBs and zero throughput, and their MAC state is zeroed
+    on departure.  Geometry is then dynamic even without mobility (births
+    move rows), so the radio chain recomputes per TTI (dense) or patches
+    newborn rows through the carried ``radio.RadioState`` (incremental).
+    Churn is single-host (``mesh`` raises) -- the twin serves unsharded.
+
+    Both returned functions also accept ``fairness_p=None``: a traced
+    scalar overriding ``params.fairness_p`` in the PF weight law -- the
+    twin server's live scheduler-control knob (None compiles the baked
+    constant, i.e. the legacy program).
     """
     p = params
     cfg = radio_cfg
@@ -299,16 +369,27 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
                and mobility_move_frac < 1.0)
     n_move = (max(1, int(round(mobility_move_frac * n_ues))) if frac_on
               else n_ues)
+    churn_on = churn is not None
+    if churn_on and mesh is not None:
+        raise ValueError(
+            "birth-death churn is single-host: the capacity-padded active "
+            "mask is not sharded over a mesh (the twin serves unsharded)")
+    # the fading factor is *carried* state exactly when newborns must
+    # redraw their rows into an otherwise-static fading tensor
+    fad_carried = churn_on and p.rayleigh_fading and not per_tti_fading
+    max_birth = churn.max_arrivals_per_tti if churn_on else 0
+    nb_backlog = churn.newborn_backlog_bits if churn_on else 0.0
 
     def use_rs(power_act: bool) -> bool:
         """Does this specialisation run on a RadioState?  Incremental mode
-        with something to update: in-scan mobility dirt, or a power action
-        whose chain is initialised once at prepare time.  The state is
-        *carried* only when mobility mutates it; a static-geometry action
-        chain is loop-invariant and rides the hoisted constants instead
-        (a pass-through carry would defeat XLA's loop-invariant hoisting
+        with something to update: in-scan mobility dirt, birth-death row
+        churn, or a power action whose chain is initialised once at
+        prepare time.  The state is *carried* only when the scan mutates
+        it (mobility or churn); a static-geometry action chain is
+        loop-invariant and rides the hoisted constants instead (a
+        pass-through carry would defeat XLA's loop-invariant hoisting
         of the downstream MAC subexpressions -- measured 2x per TTI)."""
-        return incremental and (not static_geom or power_act)
+        return incremental and (not static_geom or power_act or churn_on)
 
     # -- mesh layout (None = single device, the exact legacy program) ------
     if mesh is not None:
@@ -373,14 +454,17 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
         ones gather/multiply is pure profit on the 100k-row hot path)."""
         return static.fad if p.rayleigh_fading else None
 
-    def init_rs(static, U, action):
+    def init_rs(static, U, action, fad=None):
         """Prepare-time ``radio.RadioState``: the everything-dirty base
         case, computed once outside the scan.  A power ``action`` is
         scan-constant, so this is also where its cell dirt is absorbed
-        (the scan body then only patches mobility rows)."""
+        (the scan body then only patches mobility rows).  ``fad``
+        overrides the static fading tensor (the churn regimes' carried
+        leaf)."""
         P = static.P if action is None else action
+        f = fad if fad is not None else inc_fad(static)
         return radio.radio_init(cfg, U, static.C, static.bore,
-                                inc_fad(static), P, with_tables=ho_on)
+                                f, P, with_tables=ho_on)
 
     def walk_displacements(k_mob):
         """This TTI's per-row displacement + the window start (local rows).
@@ -402,29 +486,18 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
     def window_dirty_indices(start):
         """The mover window's local dirty rows, enumerated in O(n_move).
 
-        The generic mask path (``radio.dirty_indices``) pays an O(n_ues)
-        compaction per TTI -- measurably the incremental path's largest
-        fixed cost at 100k UEs.  The window movers are *contiguous* global
-        indices, so each of the ``n_move`` window slots maps straight to a
-        local row: out-of-shard slots pad with row 0, THE idempotent
-        valid-index padding of the dirtiness convention.  When the window
-        covers the shard (n_move >= n_loc) every local row recomputes.
-
-        Returns ``(idx, count)``: the padded local index vector plus the
-        number of genuinely dirty local rows (= distinct recomputed rows;
-        the telemetry ``dirty_rows`` counter, psummed to the global
-        ``n_move`` under a mesh).
+        Delegates to ``radio.window_indices`` -- the shared exact-count
+        enumeration that also backs ``radio.radio_update(window=...)`` --
+        with this shard's contiguous block as the (offset, n_loc)
+        restriction.  Returns ``(idx, count)``: the padded local index
+        vector plus the number of genuinely dirty local rows (the
+        telemetry ``dirty_rows`` counter; psums to the global ``n_move``
+        under a mesh).
         """
-        if n_move >= n_loc:
-            return (jnp.arange(n_loc, dtype=jnp.int32),
-                    jnp.int32(n_loc))
-        g = (start + jnp.arange(n_move, dtype=jnp.int32)) % n_ues
-        local = g - local_offset()
-        valid = (local >= 0) & (local < n_loc)
-        return (jnp.where(valid, local, 0).astype(jnp.int32),
-                valid.sum().astype(jnp.int32))
+        return radio.window_indices(start, n_move, n_ues,
+                                    offset=local_offset(), n_loc=n_loc)
 
-    def inc_channel(static, rs, U, P, k_mob):
+    def inc_channel(static, rs, U, P, k_mob, fad):
         """One incremental TTI of the radio chain: move, patch, read.
 
         Only the moved rows re-run D→G→RSRP→SINR→CQI→SE
@@ -443,14 +516,18 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
             else:
                 idx, n_dirty = window_dirty_indices(start)
             rs = radio.radio_update_rows(cfg, rs, U, static.C, static.bore,
-                                         inc_fad(static), P, idx)
+                                         fad, P, idx)
         return U, rs, n_dirty
 
-    def allocate(se, cqi, a, buf, avg, cursor, harq_pending):
+    def allocate(se, cqi, a, buf, avg, cursor, harq_pending, act, fair):
         demand = (buf[:, None] > 0.0) | harq_pending[:, None]
+        if act is not None:
+            # churn: inactive capacity slots are structurally idle -- no
+            # policy ever grants them an RB, whatever their stale state
+            demand = demand & act[:, None]
         active = demand & (se > 0.0)
-        log_w = mac_sched.pf_log_weights_ewma(rb_bw * se, avg[:, None],
-                                              p.fairness_p)
+        fp = p.fairness_p if fair is None else fair
+        log_w = mac_sched.pf_log_weights_ewma(rb_bw * se, avg[:, None], fp)
         return mac_sched.allocate(policy, active, cqi, a, n_cells, rb_chunk,
                                   cursor, log_w, ue_axes)
 
@@ -501,6 +578,9 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
         if use_rs(power_act):
             # the incremental path hoists through its RadioState instead
             return h
+        if churn_on:
+            # births move rows: nothing U-dependent is loop-invariant
+            return h
         if static_geom and (per_tti_fading or ho_on or power_act):
             # static geometry: one unfaded gain/attachment pass, hoisted
             # out of the scan; only the fading factor varies per TTI.
@@ -527,11 +607,12 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
                     h["cqi_all"], h["se_all"] = cqi_all, se_all
         return h
 
-    def tti_step(h, static, state, action, rs=None):
+    def tti_step(h, static, state, action, rs=None, fair=None):
         """One pure TTI: (hoisted, static, state, action, radio-state) ->
         (state, tput, radio-state, telemetry).  ``rs`` is the incremental
         path's carried ``radio.RadioState`` (None on the dense paths,
-        threaded unchanged); telemetry is None unless built with
+        threaded unchanged); ``fair`` the traced fairness override (None =
+        the baked constant); telemetry is None unless built with
         ``telemetry=True``."""
         power_act = action is not None
         U, buf, avg = state.U, state.backlog, state.pf_avg
@@ -542,27 +623,76 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
         P = action if power_act else static.P
         k_mob, k_fad, k_tr, k_harq = radio.tti_keys(key, t)
         n_dirty = jnp.int32(0) if incremental else None
+        # -- birth-death churn: departures idle out, newborns take free
+        # slots with fresh positions and fading rows (radio.churn_keys --
+        # a separate stream lineage, so churn-off trajectories are
+        # bit-untouched) ---------------------------------------------------
+        act, fad_c, born = state.active, state.fad, None
+        n_born = jnp.int32(0)
+        if churn_on:
+            k_birth, k_death, k_pos, k_fadc = radio.churn_keys(key, t)
+            act, born, n_born = mobility.birth_death_step(
+                k_birth, k_death, act, tti_s, churn)
+            # departed rows idle out; reborn slots then reset fresh (a
+            # slot can depart and be re-occupied within one TTI)
+            buf = jnp.where(act, buf, 0.0)
+            avg = jnp.where(act, avg, 0.0)
+            hbits = jnp.where(act, hbits, 0.0)
+            hretx = jnp.where(act, hretx, 0)
+            ttt = jnp.where(act, ttt, 0)
+            buf = jnp.where(born, nb_backlog, buf)
+            avg = jnp.where(born, 0.0, avg)
+            hbits = jnp.where(born, 0.0, hbits)
+            hretx = jnp.where(born, 0, hretx)
+            ttt = jnp.where(born, 0, ttt)
+            born_idx = radio.dirty_indices(born, max_birth)
+            U = scatter_born(
+                U, born_idx,
+                deploy.ppp_points(k_pos, max_birth, p.extent_m, z=p.h_ut_m),
+                n_born)
+            if fad_carried:
+                fad_c = scatter_born(
+                    fad_c, born_idx,
+                    radio.draw_fading(cfg, k_fadc, max_birth, n_cells),
+                    n_born)
         # -- channel: incremental state (carried or hoisted), per-TTI
         # recompute, or the hoisted dense constants -------------------------
         r = rs if rs is not None else h.get("rs")
         if r is not None:
+            f_inc = fad_c if fad_carried else inc_fad(static)
             if rs is not None:              # carried: mobility dirties rows
-                U, r, n_dirty = inc_channel(static, r, U, P, k_mob)
+                U, r, n_dirty = inc_channel(static, r, U, P, k_mob, f_inc)
+                if churn_on:
+                    # patch the newborn rows (idempotent row recompute, so
+                    # the row-0 padding of dirty_indices is safe here)
+                    r = radio.radio_update_rows(cfg, r, U, static.C,
+                                                static.bore, f_inc, P,
+                                                born_idx)
+                    n_dirty = n_dirty + n_born
                 rs = r
             if ho_on:
+                if churn_on:
+                    # newborns attach instantaneously to their best cell
+                    a_srv = jnp.where(
+                        born, jnp.argmax(r.meas, axis=1).astype(a_srv.dtype),
+                        a_srv)
                 a_srv, ttt = a3_handover(a_srv, ttt, r.meas, hyst_db,
                                          ttt_tti)
                 a_use = a_srv
                 se, cqi = gather_serving(r.se_all, r.cqi_all, a_use)
             else:
                 se, cqi, a_use = r.se, r.cqi, r.a
-        elif mobility_step_m is not None:
+        elif mobility_step_m is not None or churn_on:
             # random-walk displacement, clamped at the region border
-            # (global draw, local slice when sharded)
-            d, _ = walk_displacements(k_mob)
-            U = mobility.apply_walk(U, d, p.extent_m)
+            # (global draw, local slice when sharded); with churn alone
+            # the geometry still changes per TTI (births move rows), so
+            # the full chain recomputes from the current U
+            if mobility_step_m is not None:
+                d, _ = walk_displacements(k_mob)
+                U = mobility.apply_walk(U, d, p.extent_m)
             G0 = unfaded_gain(U, static.C, static.bore)
-            fad = draw_fading(k_fad) if per_tti_fading else static.fad
+            fad = (draw_fading(k_fad) if per_tti_fading
+                   else (fad_c if fad_carried else static.fad))
             R = faded_rsrp(G0, P, fad)
             R_meas = radio.rsrp(G0, P) if attach_on_mean else R
             a_inst = radio.attachment(R_meas)
@@ -584,6 +714,11 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
             if ho_on:
                 meas_wb = (R_meas.sum(axis=-1) if R_meas is not None
                            else h["meas_wb"])
+                if churn_on:
+                    a_srv = jnp.where(
+                        born,
+                        jnp.argmax(meas_wb, axis=1).astype(a_srv.dtype),
+                        a_srv)
                 a_srv, ttt = a3_handover(a_srv, ttt, meas_wb, hyst_db,
                                          ttt_tti)
                 a_use = a_srv
@@ -600,10 +735,14 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
                 se, cqi, a_use = static.se, static.cqi, static.a
 
         # -- MAC: traffic -> grant -> HARQ -> drain ------------------------
-        buf = buf + local_rows(traffic_step(k_tr, t))
+        arrivals = local_rows(traffic_step(k_tr, t))
+        if churn_on:
+            arrivals = jnp.where(act, arrivals, 0.0)
+        buf = buf + arrivals
         harq_pending = (hbits > 0.0) if harq_on else \
             jnp.zeros_like(buf, dtype=bool)
-        alloc = allocate(se, cqi, a_use, buf, avg, cursor, harq_pending)
+        alloc = allocate(se, cqi, a_use, buf, avg, cursor, harq_pending,
+                         act, fair)
         drainable = jnp.where(harq_pending, 0.0, buf)
         tb_new = mac_sched.served_bits(alloc, se, drainable, rb_bw,
                                        tti_s).sum(1)
@@ -624,7 +763,8 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
         tput = bits / tti_s
         avg = (1.0 - beta) * avg + beta * tput
         state = EpisodeState(U, buf, avg, cursor + rb_chunk, key,
-                             hbits, hretx, a_srv, ttt, t + 1)
+                             hbits, hretx, a_srv, ttt, t + 1,
+                             active=act, fad=fad_c)
         telem = None
         if telemetry:
             # KPIs only from values computed above: no PRNG, no carry.
@@ -635,41 +775,46 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
                 hstats = (acks, nacks, jnp.int32(0), jnp.float32(0.0))
             ho_fired = ((a_srv != prev_srv).sum().astype(jnp.int32)
                         if ho_on else jnp.int32(0))
+            n_act = act.sum().astype(jnp.int32) if churn_on else None
             telem = tti_telemetry(n_cells, n_ues, a_use, alloc, bits, tput,
-                                  buf, hstats, ho_fired, n_dirty, ue_axes)
+                                  buf, hstats, ho_fired, n_dirty, ue_axes,
+                                  n_act)
         return state, tput, rs, telem
 
-    def setup(static, U, action):
+    def setup(static, state, action):
         """(hoisted constants, carried RadioState) for one specialisation.
 
-        The incremental modes split on loop-variance: a mobility episode's
-        RadioState mutates per TTI (scan carry ``rs0``); a static-geometry
-        action chain is computed once and *closed over* (``h["rs"]``) so
-        XLA hoists every downstream loop-invariant subexpression exactly
-        as it does for the dense hoisted tables.
+        The incremental modes split on loop-variance: a mobility (or
+        churn) episode's RadioState mutates per TTI (scan carry ``rs0``);
+        a static-geometry action chain is computed once and *closed over*
+        (``h["rs"]``) so XLA hoists every downstream loop-invariant
+        subexpression exactly as it does for the dense hoisted tables.
         """
-        h = prepare(static, U, action is not None)
+        h = prepare(static, state.U, action is not None)
         rs0 = None
         if use_rs(action is not None):
-            if static_geom:
-                h["rs"] = init_rs(static, U, action)
+            if static_geom and not churn_on:
+                h["rs"] = init_rs(static, state.U, action)
             else:
-                rs0 = init_rs(static, U, action)
+                rs0 = init_rs(static, state.U, action,
+                              fad=state.fad if fad_carried else None)
         return h, rs0
 
     # ------------------------------------------------------- single device
     if mesh is None:
-        def step(static, state, action=None):
-            h, rs0 = setup(static, state.U, action)
-            state, tput, _, telem = tti_step(h, static, state, action, rs0)
+        def step(static, state, action=None, fairness_p=None):
+            h, rs0 = setup(static, state, action)
+            state, tput, _, telem = tti_step(h, static, state, action, rs0,
+                                             fairness_p)
             return (state, tput, telem) if telemetry else (state, tput)
 
-        def rollout(static, state, n_tti, action=None):
-            h, rs0 = setup(static, state.U, action)
+        def rollout(static, state, n_tti, action=None, fairness_p=None):
+            h, rs0 = setup(static, state, action)
 
             def body(carry, _):
                 s, rs = carry
-                s, tput, rs, telem = tti_step(h, static, s, action, rs)
+                s, tput, rs, telem = tti_step(h, static, s, action, rs,
+                                              fairness_p)
                 return (s, rs), ((tput, telem) if telemetry else tput)
 
             (state, _), ys = jax.lax.scan(body, (state, rs0), None,
@@ -737,34 +882,55 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
             except TypeError:       # pragma: no cover - version dependent
                 continue
 
-    def step(static, state, action=None):
-        def one(static, state, *act):
+    def extra_layout(action, fairness_p):
+        """(specs, args) for the optional trailing shard_map inputs: the
+        power action (replicated (n_cells, n_freq)) then the fairness
+        scalar (replicated) -- each present iff passed, so the disabled
+        combination compiles the exact legacy program."""
+        specs, args = (), ()
+        if action is not None:
+            specs, args = specs + (PSpec(None, None),), args + (action,)
+        if fairness_p is not None:
+            specs, args = specs + (PSpec(),), args + (fairness_p,)
+        return specs, args
+
+    def split_extra(has_act, extra):
+        act = extra[0] if has_act else None
+        fp = extra[-1] if len(extra) > int(has_act) else None
+        return act, fp
+
+    def step(static, state, action=None, fairness_p=None):
+        has_act = action is not None
+
+        def one(static, state, *extra):
+            act, fp = split_extra(has_act, extra)
             state = jax.tree_util.tree_map(
                 lambda x: _pvary(x, ue_axes), state)
-            h, rs0 = setup(static, state.U, act[0] if act else None)
-            state, tput, _, telem = tti_step(h, static, state,
-                                             act[0] if act else None, rs0)
+            h, rs0 = setup(static, state, act)
+            state, tput, _, telem = tti_step(h, static, state, act, rs0, fp)
             if telemetry:
                 return revar(state), tput, telem
             return revar(state), tput
 
-        act_spec = () if action is None else (PSpec(None, None),)
+        extra_specs, extra_args = extra_layout(action, fairness_p)
         out_specs = ((state_specs, ue, telem_specs) if telemetry
                      else (state_specs, ue))
-        f = sharded(one, (static_specs, state_specs) + act_spec, out_specs)
-        args = (static, state) if action is None else (static, state, action)
-        return f(*args)
+        f = sharded(one, (static_specs, state_specs) + extra_specs,
+                    out_specs)
+        return f(static, state, *extra_args)
 
-    def rollout(static, state, n_tti, action=None):
-        def roll(static, state, *act):
+    def rollout(static, state, n_tti, action=None, fairness_p=None):
+        has_act = action is not None
+
+        def roll(static, state, *extra):
+            act, fp = split_extra(has_act, extra)
             init = jax.tree_util.tree_map(
                 lambda x: _pvary(x, ue_axes), state)
-            h, rs0 = setup(static, init.U, act[0] if act else None)
+            h, rs0 = setup(static, init, act)
 
             def body(carry, _):
                 s, rs = carry
-                s, tput, rs, telem = tti_step(h, static, s,
-                                              act[0] if act else None, rs)
+                s, tput, rs, telem = tti_step(h, static, s, act, rs, fp)
                 return (s, rs), ((tput, telem) if telemetry else tput)
 
             (state, _), ys = jax.lax.scan(body, (init, rs0), None,
@@ -774,12 +940,12 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
                 return revar(state), tput, telem
             return revar(state), ys
 
-        act_spec = () if action is None else (PSpec(None, None),)
+        extra_specs, extra_args = extra_layout(action, fairness_p)
         out_specs = ((state_specs, PSpec(None, ue_axes), telem_stack_specs)
                      if telemetry else (state_specs, PSpec(None, ue_axes)))
-        f = sharded(roll, (static_specs, state_specs) + act_spec, out_specs)
-        args = (static, state) if action is None else (static, state, action)
-        return f(*args)
+        f = sharded(roll, (static_specs, state_specs) + extra_specs,
+                    out_specs)
+        return f(static, state, *extra_args)
 
     return EpisodeFns(step=jax.jit(step),
                       rollout=jax.jit(rollout, static_argnums=(2,)))
@@ -788,7 +954,7 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
 def episode_fns_for(sim, *, mobility_step_m=None, per_tti_fading=False,
                     use_harq=None, mesh=None, ue_axis=("ue",),
                     radio_mode=None, mobility_move_frac=None,
-                    telemetry: bool = False) -> EpisodeFns:
+                    telemetry: bool = False, churn=None) -> EpisodeFns:
     """The :func:`make_episode_fns` bundle for ``sim``, cached on it.
 
     Keyed by the trace-time switches only -- ``n_tti`` and the presence of
@@ -810,7 +976,7 @@ def episode_fns_for(sim, *, mobility_step_m=None, per_tti_fading=False,
         mobility_move_frac = getattr(sim.params, "mobility_move_frac", None)
     ue_axis = (ue_axis,) if isinstance(ue_axis, str) else tuple(ue_axis)
     cache_key = (mobility_step_m, per_tti_fading, use_harq, mesh, ue_axis,
-                 radio_mode, mobility_move_frac, telemetry)
+                 radio_mode, mobility_move_frac, telemetry, churn)
     cache = sim.__dict__.setdefault("_episode_fns_cache", {})
     if cache_key not in cache:
         cache[cache_key] = make_episode_fns(
@@ -818,14 +984,16 @@ def episode_fns_for(sim, *, mobility_step_m=None, per_tti_fading=False,
             sim._traffic_step, mobility_step_m=mobility_step_m,
             per_tti_fading=per_tti_fading, use_harq=use_harq,
             mesh=mesh, ue_axis=ue_axis, radio_mode=radio_mode,
-            mobility_move_frac=mobility_move_frac, telemetry=telemetry)
+            mobility_move_frac=mobility_move_frac, telemetry=telemetry,
+            churn=churn)
     return cache[cache_key]
 
 
 def run_episode(sim, n_tti: int, key=None, mobility_step_m=None,
                 per_tti_fading: bool = False, sync_state: bool = True,
                 use_harq=None, mesh=None, radio_mode=None,
-                mobility_move_frac=None, telemetry: bool = False):
+                mobility_move_frac=None, telemetry: bool = False,
+                churn=None):
     """Run ``n_tti`` TTIs; returns (n_tti, n_ues) delivered throughput
     (bits/s) -- or ``(tput, telem)`` with ``telemetry=True``, where
     ``telem`` is the stacked per-TTI :class:`repro.obs.telemetry.Telemetry`
@@ -846,9 +1014,12 @@ def run_episode(sim, n_tti: int, key=None, mobility_step_m=None,
                           per_tti_fading=per_tti_fading, use_harq=use_harq,
                           mesh=mesh, radio_mode=radio_mode,
                           mobility_move_frac=mobility_move_frac,
-                          telemetry=telemetry)
+                          telemetry=telemetry, churn=churn)
     state = sim.init_episode_state(key)
     static = sim.episode_static()
+    if churn is not None:
+        state = seed_churn_state(state, static, sim.params,
+                                 per_tti_fading=per_tti_fading)
     telem = None
     if telemetry:
         state, tput, telem = fns.rollout(static, state, n_tti)

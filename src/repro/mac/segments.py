@@ -1,0 +1,108 @@
+"""Segment reductions that lower well under ``vmap``.
+
+The schedulers and the telemetry reducers aggregate per-UE rows into
+per-cell bins with scatter ops (``zeros.at[a].add(w)``,
+``full.at[a].max(log_w)``).  Unbatched, XLA lowers those to a single
+1-D scatter -- cheap.  Under ``vmap`` with a *batched* index vector
+(every episode of a batch owns its own attachment ``a``), the batching
+rule turns them into a rank-2 scatter over (batch, segment) coordinate
+tuples, which lowers ~10x slower than the unbatched op -- the measured
+remaining cost of batched action steps (PR 5's diagnosis, ROADMAP).
+
+These helpers keep the *exact* unbatched op as the primal (the engine's
+bit-exactness claims ride on it -- the sharded 1e-5 gate, the telemetry
+structural no-op) and attach a ``jax.custom_batching.custom_vmap`` rule
+that flattens the batch axis into the segment ids:
+
+    ids[b, i] = seg[b, i] + n_seg * b
+
+one flat 1-D scatter over ``batch * n_seg`` bins instead of a rank-2
+scatter -- the same lowering the unbatched op gets.  Within one batch
+element the updates keep their row order, so per-element results match
+the unbatched scatter bitwise (asserted in tests/test_twin.py).
+
+``n_seg`` (and the ``fill`` value for :func:`segment_max`) are
+trace-time constants; the decorated callables are cached per value so
+repeated traces reuse one ``custom_vmap`` object.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+from jax.custom_batching import custom_vmap
+
+
+def _broadcast_unbatched(axis_size, in_batched, *args):
+    """Give every argument a leading batch axis of ``axis_size``."""
+    out = []
+    for batched, x in zip(in_batched, args):
+        out.append(x if batched
+                   else jnp.broadcast_to(x[None], (axis_size,) + x.shape))
+    return out
+
+
+def _flat_ids(seg, n_seg):
+    """Fold the batch coordinate into the segment ids: one 1-D id space."""
+    b = jnp.arange(seg.shape[0], dtype=seg.dtype)[:, None]
+    return (seg + n_seg * b).reshape(-1)
+
+
+@lru_cache(maxsize=None)
+def _segment_sum_fn(n_seg: int):
+    @custom_vmap
+    def seg_sum(data, seg):
+        # THE primal: exactly the scatter-add the callers used to inline.
+        shape = (n_seg,) + data.shape[1:]
+        return jnp.zeros(shape, data.dtype).at[seg].add(data)
+
+    @seg_sum.def_vmap
+    def seg_sum_vmap(axis_size, in_batched, data, seg):
+        data, seg = _broadcast_unbatched(axis_size, in_batched, data, seg)
+        b, n = data.shape[:2]
+        flat = data.reshape((b * n,) + data.shape[2:])
+        out = jnp.zeros((b * n_seg,) + flat.shape[1:], flat.dtype)
+        out = out.at[_flat_ids(seg, n_seg)].add(flat)
+        return out.reshape((b, n_seg) + flat.shape[1:]), True
+
+    return seg_sum
+
+
+@lru_cache(maxsize=None)
+def _segment_max_fn(n_seg: int, fill: float):
+    @custom_vmap
+    def seg_max(data, seg):
+        shape = (n_seg,) + data.shape[1:]
+        return jnp.full(shape, fill, data.dtype).at[seg].max(data)
+
+    @seg_max.def_vmap
+    def seg_max_vmap(axis_size, in_batched, data, seg):
+        data, seg = _broadcast_unbatched(axis_size, in_batched, data, seg)
+        b, n = data.shape[:2]
+        flat = data.reshape((b * n,) + data.shape[2:])
+        out = jnp.full((b * n_seg,) + flat.shape[1:], fill, flat.dtype)
+        out = out.at[_flat_ids(seg, n_seg)].max(flat)
+        return out.reshape((b, n_seg) + flat.shape[1:]), True
+
+    return seg_max
+
+
+def segment_sum(data, seg, n_seg: int):
+    """``out[j] = sum_{i: seg[i] == j} data[i]`` over ``data``'s axis 0.
+
+    ``data`` is (n, ...), ``seg`` (n,) int; returns (n_seg, ...).
+    Unbatched this IS ``zeros.at[seg].add(data)`` (bit-exact); under
+    ``vmap`` the custom rule scatters into a flattened (batch * n_seg)
+    id space instead of a rank-2 scatter.
+    """
+    return _segment_sum_fn(int(n_seg))(data, seg)
+
+
+def segment_max(data, seg, n_seg: int, fill=-jnp.inf):
+    """``out[j] = max(fill, max_{i: seg[i] == j} data[i])`` over axis 0.
+
+    Same contract as :func:`segment_sum` with a max combiner; ``fill``
+    seeds empty segments (trace-time constant).
+    """
+    return _segment_max_fn(int(n_seg), float(fill))(data, seg)

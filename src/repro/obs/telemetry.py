@@ -22,7 +22,10 @@ for getting them out:
 
 Optional leaves are ``None`` when a regime cannot produce them (same
 trace-time-constant-treedef convention as ``radio.RadioState``):
-``dirty_rows`` exists only in ``radio_mode="incremental"``.
+``dirty_rows`` exists only in ``radio_mode="incremental"``;
+``active_ues`` only under a birth-death churn process (where the UE axis
+is capacity-padded and KPIs must count the *live* population, not the
+slot capacity).
 """
 from __future__ import annotations
 
@@ -30,6 +33,8 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.mac import segments
 
 
 class Telemetry(NamedTuple):
@@ -50,10 +55,12 @@ class Telemetry(NamedTuple):
     buffer_bits: Any    # f32 total finite backlog after the TTI
     jain: Any           # f32 Jain fairness of per-UE delivered throughput
     dirty_rows: Any     # i32 radio rows recomputed | None (dense modes)
+    active_ues: Any = None   # i32 live UEs this TTI | None (no churn)
 
 
 def tti_telemetry(n_cells: int, n_ues: int, a, alloc, bits, tput, backlog,
-                  harq_stats, ho_events, n_dirty, ue_axes=None) -> Telemetry:
+                  harq_stats, ho_events, n_dirty, ue_axes=None,
+                  active_count=None) -> Telemetry:
     """Assemble one TTI's :class:`Telemetry` from step intermediates.
 
     Pure: reads the serving attachment ``a``, the allocation matrix, the
@@ -63,14 +70,21 @@ def tti_telemetry(n_cells: int, n_ues: int, a, alloc, bits, tput, backlog,
     UE dimension is sharded over: all reductions then ``psum`` so every
     shard carries the global KPI (None = single device, no collectives).
 
+    ``active_count`` is the live-population size of a birth-death churn
+    episode: KPIs normalised per UE (Jain) then count the active
+    population instead of the padded slot capacity, and the count itself
+    is published as the ``active_ues`` leaf (None = fixed population).
+
     Jain's fairness index over the per-UE delivered throughput:
     ``(sum x)^2 / (n * sum x^2)`` -- 1.0 when perfectly equal, ``1/n``
     when one UE takes everything, 0.0 defined for an idle TTI.
     """
     acks, nacks, retx, dropped = harq_stats
-    served = jnp.zeros((n_cells,), jnp.float32).at[a].add(bits)
-    granted = jnp.zeros((n_cells,), jnp.float32).at[a].add(
-        alloc.sum(axis=-1))
+    # per-cell scatters as segment reductions: identical unbatched, and
+    # they keep their one-flat-scatter lowering under a vmapped env batch
+    served = segments.segment_sum(bits.astype(jnp.float32), a, n_cells)
+    granted = segments.segment_sum(
+        alloc.sum(axis=-1).astype(jnp.float32), a, n_cells)
     occupancy = jnp.where(jnp.isfinite(backlog), backlog, 0.0).sum()
     s = tput.sum()
     ss = (tput * tput).sum()
@@ -82,11 +96,15 @@ def tti_telemetry(n_cells: int, n_ues: int, a, alloc, bits, tput, backlog,
             psum, (acks, nacks, retx, dropped, ho_events))
         if n_dirty is not None:
             n_dirty = psum(n_dirty)
-    jain = jnp.where(ss > 0.0, s * s / (n_ues * ss), 0.0)
+        if active_count is not None:
+            active_count = psum(active_count)
+    denom = n_ues if active_count is None else jnp.maximum(active_count, 1)
+    jain = jnp.where(ss > 0.0, s * s / (denom * ss), 0.0)
     return Telemetry(served_bits=served, granted_rb=granted,
                      harq_acks=acks, harq_nacks=nacks, harq_retx=retx,
                      dropped_bits=dropped, ho_events=ho_events,
-                     buffer_bits=occupancy, jain=jain, dirty_rows=n_dirty)
+                     buffer_bits=occupancy, jain=jain, dirty_rows=n_dirty,
+                     active_ues=active_count)
 
 
 def summarize(telem: Telemetry, tti_s: float | None = None) -> dict:
@@ -122,6 +140,8 @@ def summarize(telem: Telemetry, tti_s: float | None = None) -> dict:
         out["busiest_cell_mbps"] = float(busiest.max()) / (n_tti * tti_s) / 1e6
     if t.dirty_rows is not None:
         out["mean_dirty_rows"] = float(t.dirty_rows.mean())
+    if t.active_ues is not None:
+        out["mean_active_ues"] = float(t.active_ues.mean())
     return out
 
 

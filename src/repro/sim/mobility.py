@@ -2,11 +2,65 @@
 
 The paper's example 13 moves a fraction (10%) of UEs randomly each step; the
 smart-update mechanism then only recomputes the dirtied rows.
+
+Also home to the birth-death UE process of the digital-twin serving layer
+(DESIGN.md §Digital-twin-serving): :class:`ChurnConfig` is the hashable
+trace-time switch and :func:`birth_death_step` the pure per-TTI transition
+over a capacity-padded active mask -- UEs arrive (Poisson) into free
+capacity slots and depart (exponential lifetimes) inside the compiled scan,
+no retracing.
 """
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax
 import jax.numpy as jnp
+
+
+class ChurnConfig(NamedTuple):
+    """The birth-death process parameters (hashable -- a trace-time switch).
+
+    The UE axis is *capacity-padded*: ``n_ues`` is the slot capacity, the
+    live population is the ``active`` mask's popcount.  Stationary mean
+    occupancy is ``arrival_rate_hz * mean_lifetime_s`` (M/M/inf), so size
+    the capacity comfortably above it -- arrivals beyond free capacity are
+    blocked (dropped), which is the standard finite-capacity truncation.
+    """
+
+    arrival_rate_hz: float        # Poisson arrival intensity, UEs/second
+    mean_lifetime_s: float        # exponential lifetime -> per-TTI departure
+    max_arrivals_per_tti: int     # static cap = the birth dirty-row budget
+    newborn_backlog_bits: float = 0.0   # seed backlog (inf = full buffer)
+
+
+def birth_death_step(k_birth, k_death, active, tti_s: float,
+                     churn: ChurnConfig):
+    """One TTI of the birth-death process over the capacity-padded mask.
+
+    Departures first (each active UE leaves with probability
+    ``tti_s / mean_lifetime_s`` -- the exponential lifetime discretised at
+    TTI resolution), then arrivals: ``min(Poisson(rate * tti_s),
+    max_arrivals_per_tti, free slots)`` newborns occupy the lowest-index
+    free slots (slot ids carry no physical meaning -- position and fading
+    are freshly drawn per newborn, so any free slot is exchangeable).
+
+    Returns ``(active, born, n_born)``: the updated mask, the newborn
+    boolean mask and its popcount.  Pure and shape-static: drops into
+    ``lax.scan`` bodies and ``vmap`` batches unchanged.
+    """
+    n = active.shape[0]
+    p_dep = min(1.0, tti_s / churn.mean_lifetime_s)
+    depart = jax.random.bernoulli(k_death, p_dep, (n,)) & active
+    active = active & ~depart
+    lam = churn.arrival_rate_hz * tti_s
+    n_arrive = jnp.minimum(
+        jax.random.poisson(k_birth, lam, ()),
+        churn.max_arrivals_per_tti).astype(jnp.int32)
+    free = ~active
+    free_rank = jnp.cumsum(free.astype(jnp.int32)) - 1   # rank among free
+    born = free & (free_rank < n_arrive)
+    return active | born, born, born.sum().astype(jnp.int32)
 
 
 def random_moves(key, n_ues: int, n_move: int, extent_m: float):

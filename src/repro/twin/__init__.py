@@ -1,0 +1,19 @@
+"""Digital-twin serving: a long-running simulation server over the engine.
+
+``repro.twin.server`` hosts :class:`TwinServer` -- chunked stepping of the
+scan-compiled TTI engine under a birth-death UE process, with streaming KPI
+summaries, live control updates (cell power, scheduler fairness) and
+in-flight checkpoint/restore (DESIGN.md §Digital-twin-serving).
+"""
+
+__all__ = ["TwinServer"]
+
+
+def __getattr__(name):
+    # lazy: keeps ``python -m repro.twin.server`` free of the runpy
+    # double-import warning while preserving ``from repro.twin import
+    # TwinServer``
+    if name == "TwinServer":
+        from repro.twin.server import TwinServer
+        return TwinServer
+    raise AttributeError(name)

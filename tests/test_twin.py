@@ -1,0 +1,314 @@
+"""ISSUE 7: digital-twin serving -- birth-death churn invariants, in-flight
+checkpoint/restore resume-equivalence, live no-recompile control updates,
+and the measured MAC/dirtiness hot-spot rewrites (segment-rank rr,
+custom-vmap segment reductions, top-k dirty-index compaction) against
+brute-force oracles."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.crrm import CRRM
+from repro.core.params import CRRM_parameters
+from repro.mac import engine as mac_engine
+from repro.mac import scheduler as mac_sched
+from repro.mac import segments
+from repro.obs.profile import CompileCounter
+from repro.sim import mobility, radio
+from repro.sim.mobility import ChurnConfig
+from repro.twin.server import TwinServer
+
+
+def _params(**kw):
+    base = dict(n_ues=48, n_cells=7, n_sectors=1, seed=11,
+                pathloss_model_name="UMa", power_W=10.0,
+                traffic_model="poisson", scheduler_policy="pf",
+                traffic_params=dict(arrival_rate_hz=300.0,
+                                    packet_size_bits=12_000.0))
+    base.update(kw)
+    return CRRM_parameters(**base)
+
+
+CHURN = ChurnConfig(arrival_rate_hz=400.0, mean_lifetime_s=0.1,
+                    max_arrivals_per_tti=6)
+
+
+def _churn_setup(params=None, churn=CHURN, **fns_kw):
+    sim = CRRM(params or _params())
+    fns = sim.episode_fns(churn=churn, telemetry=True, **fns_kw)
+    static = sim.episode_static()
+    state = mac_engine.seed_churn_state(sim.init_episode_state(), static,
+                                        sim.params)
+    return sim, fns, static, state
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------- hot spots
+def _rr_oracle(active, a, n_cells, n_rb, cursor):
+    """The O(n_ue x n_cell) within-cell rank formulation, re-derived
+    brute-force: rank = active same-cell UEs at lower index."""
+    active, a = np.asarray(active), np.asarray(a)
+    n, K = active.shape
+    rank = np.zeros((n, K), np.int64)
+    count = np.zeros((n, K), np.int64)
+    for i in range(n):
+        same = a == a[i]
+        rank[i] = active[:i][same[:i]].sum(axis=0)
+        count[i] = active[same].sum(axis=0)
+    n_act = np.maximum(count, 1)
+    base = n_rb // n_act
+    extra = ((rank - cursor) % n_act) < (n_rb % n_act)
+    return np.where(active, (base + extra).astype(np.float32), 0.0)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_rr_segment_rank_matches_cumsum_oracle(seed):
+    """S1 acceptance: the segment-rank rr allocation is bitwise the
+    within-cell rank-cumsum formulation, for every row incl. inactive."""
+    rng = np.random.default_rng(seed)
+    n, n_cells, K, n_rb = 41, 6, 3, 13
+    active = jnp.asarray(rng.random((n, K)) < 0.6)
+    a = jnp.asarray(rng.integers(0, n_cells, n), dtype=jnp.int32)
+    cursor = jnp.int32(rng.integers(0, 100))
+    got = mac_sched.allocate_rr(active, a, n_cells, n_rb, cursor)
+    want = _rr_oracle(active, a, n_cells, n_rb, int(cursor))
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_segment_reductions_vmap_bitwise():
+    """The custom_vmap rule equals the per-element unbatched scatter --
+    bitwise, which is what lets the schedulers keep their exactness
+    claims under a batched env."""
+    rng = np.random.default_rng(3)
+    B, n, n_seg = 5, 37, 9
+    data = jnp.asarray(rng.normal(size=(B, n, 2)).astype(np.float32))
+    seg = jnp.asarray(rng.integers(0, n_seg, (B, n)), dtype=jnp.int32)
+    vsum = jax.vmap(lambda d, s: segments.segment_sum(d, s, n_seg))
+    vmax = jax.vmap(lambda d, s: segments.segment_max(d, s, n_seg))
+    got_s, got_m = vsum(data, seg), vmax(data, seg)
+    for b in range(B):
+        np.testing.assert_array_equal(
+            np.asarray(got_s[b]),
+            np.asarray(segments.segment_sum(data[b], seg[b], n_seg)))
+        np.testing.assert_array_equal(
+            np.asarray(got_m[b]),
+            np.asarray(segments.segment_max(data[b], seg[b], n_seg)))
+    # unbatched segment ops ARE the scatter they replaced
+    np.testing.assert_array_equal(
+        np.asarray(segments.segment_sum(data[0], seg[0], n_seg)),
+        np.asarray(jnp.zeros((n_seg, 2)).at[seg[0]].add(data[0])))
+
+
+@pytest.mark.parametrize("n,budget", [(16, 4), (16, 16), (8, 12), (16, 0)])
+def test_dirty_indices_topk_semantics(n, budget):
+    """S2 acceptance: the top-k compaction keeps THE convention --
+    ascending True indices, row-0 padding -- for every mask/budget."""
+    rng = np.random.default_rng(7)
+    for _ in range(20):
+        mask = rng.random(n) < 0.3
+        idx = np.asarray(radio.dirty_indices(jnp.asarray(mask), budget))
+        true_idx = np.flatnonzero(mask)[:budget]
+        assert idx.shape == (budget,)
+        np.testing.assert_array_equal(idx[:true_idx.size], true_idx)
+        assert set(idx[true_idx.size:].tolist()) <= {0}
+
+
+def test_radio_update_window_matches_mask_path():
+    """``radio_update(window=...)`` (O(n_move) enumeration) equals the
+    generic mask compaction, bitwise, through a full smart update."""
+    sim = CRRM(_params(n_ues=32))
+    static = sim.radio_static()
+    U = np.asarray(sim.U._data)
+    rs = radio.radio_init(static.cfg, jnp.asarray(U), static.C, static.bore,
+                          None, static.P)
+    start, n_win = 29, 6           # wraps around the axis end
+    rows = (start + np.arange(n_win)) % 32
+    U2 = U.copy()
+    U2[rows, :2] += 40.0
+    mask = np.zeros(32, bool)
+    mask[rows] = True
+    via_mask = radio.radio_update(static, rs, jnp.asarray(U2),
+                                  jnp.asarray(mask), budget=8)
+    via_win = radio.radio_update(static, rs, jnp.asarray(U2), None,
+                                 budget=8, window=(jnp.int32(start), n_win))
+    _leaves_equal(via_mask, via_win)
+
+
+# ----------------------------------------------------------- churn process
+def test_birth_death_step_invariants():
+    key = jax.random.PRNGKey(0)
+    act = jnp.ones(32, bool)
+    # stationary occupancy 800 * 0.02 = 16 of 32 slots: both births and
+    # free capacity are visible within the 50-TTI window
+    churn = ChurnConfig(arrival_rate_hz=800.0, mean_lifetime_s=0.02,
+                        max_arrivals_per_tti=4)
+    for t in range(50):
+        k_b, k_d, _, _ = radio.churn_keys(key, t)
+        prev = act
+        act, born, n_born = mobility.birth_death_step(k_b, k_d, prev,
+                                                      1e-3, churn)
+        born, n_born = np.asarray(born), int(n_born)
+        assert born.sum() == n_born <= churn.max_arrivals_per_tti
+        # newborns take only previously-free (or just-freed) slots, and
+        # every newborn is active afterwards
+        assert not np.any(born & ~np.asarray(act))
+    assert 0 < int(act.sum()) < 32          # churn actually happened
+
+
+def test_inactive_ues_zero_rb_zero_tput():
+    """Tentpole invariant: a capacity slot outside the active mask draws
+    zero RBs and zero throughput, every TTI, on both radio modes."""
+    for mode in ("dense", "incremental"):
+        _, fns, static, state = _churn_setup(radio_mode=mode)
+        saw_inactive = False
+        for _ in range(30):
+            state, tput, telem = fns.step(static, state)
+            inact = ~np.asarray(state.active)
+            saw_inactive |= bool(inact.any())
+            assert np.all(np.asarray(tput)[inact] == 0.0)
+            assert int(telem.active_ues) == int(np.asarray(
+                state.active).sum())
+        assert saw_inactive
+
+
+def test_telemetry_counts_only_active_ues():
+    _, fns, static, state = _churn_setup()
+    state, _, telem = fns.rollout(static, state, 40)
+    active_traj = np.asarray(telem.active_ues)
+    assert active_traj.shape == (40,)
+    assert active_traj.min() < 48          # departures visible
+    assert int(active_traj[-1]) == int(np.asarray(state.active).sum())
+    # summarize() publishes the mean live population
+    from repro.obs.telemetry import summarize
+    kpis = summarize(telem)
+    assert kpis["mean_active_ues"] == pytest.approx(active_traj.mean())
+
+
+def test_churn_incremental_matches_dense_bitwise():
+    """The carried-RadioState churn path reproduces the dense recompute
+    bitwise (static geometry, newborn rows patched through the state)."""
+    _, fns_d, static, state = _churn_setup()
+    _, fns_i, _, _ = _churn_setup(radio_mode="incremental")
+    sd, td, teld = fns_d.rollout(static, state, 30)
+    si, ti, teli = fns_i.rollout(static, state, 30)
+    np.testing.assert_array_equal(np.asarray(td), np.asarray(ti))
+    _leaves_equal(sd, si)
+    np.testing.assert_array_equal(np.asarray(teld.served_bits),
+                                  np.asarray(teli.served_bits))
+
+
+def test_churn_trajectory_chunk_invariant():
+    """Absolute-TTI PRNG folds make the trajectory partition-invariant:
+    3 chunks of 10 == one 30-TTI run, bitwise."""
+    _, fns, static, state = _churn_setup()
+    s_whole, t_whole, _ = fns.rollout(static, state, 30)
+    s, parts = state, []
+    for _ in range(3):
+        s, t, _ = fns.rollout(static, s, 10)
+        parts.append(np.asarray(t))
+    np.testing.assert_array_equal(np.vstack(parts), np.asarray(t_whole))
+    _leaves_equal(s, s_whole)
+
+
+def test_legacy_state_and_trajectory_untouched():
+    """Churn off: the new EpisodeState leaves default to None (legacy
+    treedef) and run_episode is bitwise the pre-churn program."""
+    sim = CRRM(_params())
+    state = sim.init_episode_state()
+    assert state.active is None and state.fad is None
+    t0 = mac_engine.run_episode(sim, 20, sync_state=False)
+    t1 = mac_engine.run_episode(CRRM(_params()), 20, sync_state=False)
+    np.testing.assert_array_equal(np.asarray(t0), np.asarray(t1))
+
+
+def test_scatter_born_duplicate_safety():
+    """Padded slots must not corrupt row 0: zero births is a bitwise
+    no-op, and duplicate writes are identical."""
+    dst = jnp.arange(12.0).reshape(6, 2)
+    idx = radio.dirty_indices(jnp.zeros(6, bool), 4)
+    out = mac_engine.scatter_born(dst, idx, jnp.full((4, 2), 99.0),
+                                  jnp.int32(0))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(dst))
+    born = jnp.asarray([False, False, True, False, True, False])
+    idx = radio.dirty_indices(born, 4)
+    fresh = jnp.asarray([[1.0, 1.0], [2.0, 2.0], [3.0, 3.0], [4.0, 4.0]])
+    out = np.asarray(mac_engine.scatter_born(dst, idx, fresh, jnp.int32(2)))
+    np.testing.assert_array_equal(out[2], [1.0, 1.0])
+    np.testing.assert_array_equal(out[4], [2.0, 2.0])
+    np.testing.assert_array_equal(out[0], np.asarray(dst)[0])   # untouched
+
+
+def test_churn_mesh_raises():
+    sim = CRRM(_params())
+    devs = jax.devices()
+    mesh = jax.sharding.Mesh(np.array(devs[:1]), ("ue",))
+    with pytest.raises(ValueError, match="single-host"):
+        sim.episode_fns(churn=CHURN, mesh=mesh)
+
+
+# ------------------------------------------------------------- twin server
+def _server(tmp_path, **kw):
+    sim = CRRM(_params())
+    return TwinServer(sim, CHURN, chunk_tti=10, ckpt_dir=str(tmp_path),
+                      **kw)
+
+
+def test_twin_restore_bitwise_resume(tmp_path):
+    """Tentpole acceptance: kill after N TTIs, restore, and the resumed
+    KPI trajectory + final state are bitwise the uninterrupted run's."""
+    srv = _server(tmp_path)
+    srv.step_chunk()
+    srv.checkpoint()
+    k_ref = [srv.step_chunk() for _ in range(2)]
+    tput_ref = np.asarray(srv.last_tput)
+    final_ref = jax.tree_util.tree_map(np.asarray, srv.state)
+
+    srv2 = _server(tmp_path)               # fresh process, same ckpt dir
+    step = srv2.restore()
+    assert step == 10 == srv2.t
+    k_res = [srv2.step_chunk() for _ in range(2)]
+    assert k_res == k_ref
+    np.testing.assert_array_equal(np.asarray(srv2.last_tput), tput_ref)
+    _leaves_equal(srv2.state, final_ref)
+
+
+def test_twin_restore_async_and_controls(tmp_path):
+    """save_async snapshots are restore-equivalent, and live control
+    updates (power, fairness) are part of the checkpointed tuple."""
+    srv = _server(tmp_path)
+    srv.step_chunk()
+    srv.set_power(np.asarray(srv.power) * 0.5)
+    srv.set_fairness(0.9)
+    thread = srv.checkpoint(block=False)
+    thread.join()
+    k_ref = srv.step_chunk()
+
+    srv2 = _server(tmp_path)
+    srv2.restore()
+    np.testing.assert_array_equal(np.asarray(srv2.power),
+                                  np.asarray(srv.power))
+    assert float(srv2.fairness) == pytest.approx(0.9)
+    assert srv2.step_chunk() == k_ref
+
+
+def test_twin_control_updates_do_not_recompile(tmp_path):
+    """Live power/fairness swaps are traced-argument updates: after
+    warmup, N chunks with changing controls trigger zero compiles."""
+    srv = _server(tmp_path)
+    srv.step_chunk()                       # warmup compile
+    counter = CompileCounter()
+    if not counter.supported:              # pragma: no cover
+        pytest.skip("jax.monitoring events unavailable")
+    with counter as c:
+        for i in range(3):
+            srv.set_power(np.asarray(srv.power) * (1.0 + 0.01 * i))
+            srv.set_fairness(0.5 + 0.1 * i)
+            srv.step_chunk()
+    assert c.count == 0, f"control updates recompiled {c.count}x"
