@@ -779,7 +779,94 @@ def twin_serve(n_ues=20_000, n_cells=57, chunk_tti=50, n_chunks=4):
     return "twin_serve_churn_overhead", us_serve, overhead
 
 
+# -- RL: PPO power-control baselines (ISSUE 8) -----------------------------------
+#: the learned policy's eval-selected served-throughput uplift over the
+#: uniform fixed-power plan on dense_urban must stay above this
+#: ("gate_direction": "min" -- learning must keep working).  The smoke
+#: run trains fewer iterations at the same tiny shapes; the pinned-seed
+#: trajectory peaks ~x1.15, so 1.05 absorbs cross-machine float drift.
+RL_UPLIFT_MIN = 1.05
+RL_UPLIFT_MIN_SMOKE = 1.05
+
+#: per-scenario training budgets of the seeded baselines (full mode)
+RL_BASELINE_SCENARIOS = ("dense_urban", "handover_stress",
+                        "dense_urban_twin")
+
+
+def rl_learning():
+    """PPO power-control baselines + rollout-collection cost (ISSUE 8).
+
+    Trains the tiny pinned-seed PPO recipe of
+    ``repro.rl.ppo.train_power_baseline`` and gates the dense_urban
+    served-throughput uplift of the learned (eval-selected) policy over
+    the uniform fixed-power plan.  Also times the jit(vmap) rollout
+    collection (us per env-step, each env-step = ``tti_per_step``
+    engine TTIs) -- the cost axis of population-batched training.  Full
+    mode additionally trains the handover_stress and dense_urban_twin
+    baselines and seeds ``benchmarks/BENCH_rl.json``.
+    """
+    import jax
+
+    from repro import rl
+    from repro.rl import ppo as rl_ppo
+
+    gate = RL_UPLIFT_MIN_SMOKE if SMOKE else RL_UPLIFT_MIN
+    iterations = 45 if SMOKE else 80
+    scenarios = RL_BASELINE_SCENARIOS[:1] if SMOKE \
+        else RL_BASELINE_SCENARIOS
+
+    results = {}
+    for scenario in scenarios:
+        out = rl_ppo.train_power_baseline(scenario, n_ues=12,
+                                          iterations=iterations, seed=0)
+        results[scenario] = out
+        print(f"# rl_learning[{scenario}]: best uplift "
+              f"x{out['best_uplift']:.3f} (iter {out['best_iteration']}"
+              f"/{iterations}), final x{out['final_uplift']:.3f}, "
+              f"fixed {out['fixed_mbits']:.2f} Mbit")
+
+    # rollout-collection cost: one compiled batch of n_envs streams
+    dense = results["dense_urban"]
+    env, pcfg, cfg = dense["env"], dense["pcfg"], dense["cfg"]
+    ts = dense["train_state"]
+    collect = rl.make_collect_fn(env, pcfg, cfg.n_steps)
+    key = jax.random.PRNGKey(7)
+    out = collect(ts.params, ts.env_states, ts.feats, key)  # warm
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(5):
+        t0 = time.perf_counter()
+        out = collect(ts.params, ts.env_states, ts.feats, key)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    us_per_env_step = best / (cfg.n_envs * cfg.n_steps) * 1e6
+
+    uplift = results["dense_urban"]["best_uplift"]
+    print(f"# rl_learning: collection {us_per_env_step:.1f} us/env-step "
+          f"({cfg.n_envs} envs x {cfg.n_steps} steps x "
+          f"{env.tti_per_step} TTIs), dense_urban uplift x{uplift:.3f} "
+          f"(gate >= {gate})")
+    assert uplift >= gate, (
+        f"PPO stopped learning: dense_urban uplift x{uplift:.3f} "
+        f"< {gate}")
+    if not SMOKE:
+        _write_record("BENCH_rl.json", {
+            "bench": "rl_learning", "iterations": iterations,
+            "n_envs": cfg.n_envs, "n_steps": cfg.n_steps,
+            "n_ues": 12, "us_per_env_step": round(us_per_env_step, 2),
+            "baselines": {
+                s: {"best_uplift": round(r["best_uplift"], 4),
+                    "final_uplift": round(r["final_uplift"], 4),
+                    "best_iteration": r["best_iteration"],
+                    "fixed_mbits": round(r["fixed_mbits"], 3)}
+                for s, r in results.items()},
+            "uplift": round(uplift, 4),
+            "gated_metric": "uplift", "gate_direction": "min",
+            "gate": RL_UPLIFT_MIN, "smoke_gate": RL_UPLIFT_MIN_SMOKE})
+    return "rl_learning_uplift", us_per_env_step, uplift
+
+
 ALL = [fig2_pathloss_throughput, fig3_sectors, fig4_fairness,
        fig5_ppp_validation, tab_smart_update, tab_mobility_sweep,
        kernel_fused_sinr, mac_episode, env_episode, sharded_episode,
-       smart_update_scan, twin_serve]
+       smart_update_scan, twin_serve, rl_learning]

@@ -1,0 +1,43 @@
+"""Differentiable CRRM: gradient-ascend a power plan through the engine.
+
+The RL loop in ``examples/rl_power_control.py`` treats the simulator as
+a black box; here we open it.  Built with a
+``repro.sim.radio.RelaxConfig``, the scan-compiled MAC engine is
+differentiable end to end -- argmax attachment becomes a temperature
+softmax over log-RSRP, the CQI staircase a sigmoid-sum surrogate, the
+schedulers' segment reductions plain (autodiff-able) scatters -- so
+``jax.grad`` of an episode's served throughput with respect to the
+*power-action trajectory* is exact for the relaxed program and within
+1e-3 of finite differences (tests/test_rl.py).
+
+``repro.rl.diffopt`` packages that into first-order planning: Adam
+ascent on the relaxed objective, scored every few steps on the exact
+(un-relaxed) engine so the printed trajectory is real simulator
+throughput, not the surrogate.  Tens of gradient steps find a plan that
+PPO needs hundreds of episodes to approach -- the case for
+differentiable system-level simulation.
+
+Run:  PYTHONPATH=src python examples/diff_power_plan.py
+"""
+from repro.core.crrm import CRRM
+from repro.rl import diffopt
+from repro.sim.scenarios import make_scenario
+
+sim = CRRM(make_scenario("dense_urban", n_ues=12,
+                         traffic_params=dict(arrival_rate_hz=2000.0,
+                                             packet_size_bits=12_000.0)))
+
+res = diffopt.optimize_power_plan(
+    sim,
+    n_segments=4,        # the plan: 4 power matrices, 10 TTIs each
+    tti_per_segment=10,
+    steps=40, lr=0.2,
+    score_every=5, verbose=True)
+
+first, last = res.history[0], res.history[-1]
+print(f"\nexact-engine served throughput: {first['hard_mbps']:.3f} -> "
+      f"{last['hard_mbps']:.3f} Mbit/s over {last['step']} gradient "
+      f"steps")
+print("per-segment per-cell power totals (W):")
+for i, seg in enumerate(res.power_plan.sum(-1)):
+    print(f"  seg {i}: " + " ".join(f"{float(p):.2f}" for p in seg))

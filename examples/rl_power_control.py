@@ -1,84 +1,40 @@
-"""RL-style power control against CRRM -- the paper's raison d'etre.
+"""PPO power control against CRRM -- the paper's raison d'etre.
 
-A small policy (pure JAX) controls each cell's per-subband transmit power;
-REINFORCE maximises the env's *buffer-aware* MAC objective: each candidate
-power plan is held for one episode of the scan-compiled TTI engine (Poisson
-traffic, proportional-fair scheduling) and scored on the geometric-mean
-served throughput minus a queueing penalty on the residual backlog.
+An MLP actor-critic (``repro.rl``) controls each cell's per-subband
+transmit power.  PPO replaces the original REINFORCE loop of this
+example: rollout collection is ONE compiled program (``jit(vmap)`` over
+``n_envs`` auto-resetting episode streams of the scan-compiled TTI
+engine), advantages come from GAE, and the update is the clipped
+surrogate -- the full recipe behind ``benchmarks/BENCH_rl.json``.
 
-Since the functional env API (DESIGN.md §Env-API) this is a pure-functional
-loop: ``CrrmEnv.reset(key)`` returns an explicit episode-state pytree (no
-private simulator attributes to reset by hand), and the whole REINFORCE
-population -- all ``batch`` perturbed candidates -- is evaluated by ONE
-``step_batch`` call: ``vmap`` turns the batch into a single compiled
-program, so a training iteration is a single device launch.
+The traffic is deliberately saturated (arrivals well past the serveable
+load) so throughput is interference-limited: the policy has to learn
+which cells' power to cut.  Every ``eval_every`` iterations the
+deterministic (mean-action) policy is scored against the uniform
+fixed-power plan on held-out seeds -- the uplift the bench gates.
 
 Run:  PYTHONPATH=src python examples/rl_power_control.py
 """
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core.params import CRRM_parameters
-from repro.env import CrrmEnv
+from repro.rl import policy as pol
+from repro.rl import ppo
 
-N_UE, N_CELL, K, N_TTI = 60, 12, 2, 30
-params = CRRM_parameters(n_ues=N_UE, n_cells=N_CELL, n_subbands=K,
-                         pathloss_model_name="UMa", power_W=20.0, seed=3,
-                         fairness_p=0.0, scheduler_policy="pf",
-                         traffic_model="poisson",
-                         traffic_params=dict(arrival_rate_hz=300.0,
-                                             packet_size_bits=12_000.0))
-# one env.step == one whole episode: the decision interval is the horizon
-env = CrrmEnv(params, episode_tti=N_TTI, tti_per_step=N_TTI)
-EP_KEY = jax.random.PRNGKey(7)          # frozen episode noise -> low variance
-batch = 8
-EP_KEYS = jnp.stack([EP_KEY] * batch)   # same episode for every candidate
+out = ppo.train_power_baseline(
+    "dense_urban",
+    n_ues=12,                # sparse UEs, 21 cells: empty cells only jam
+    arrival_rate_hz=2000.0,  # saturate -> power plan moves throughput
+    iterations=45, eval_every=5, seed=0, verbose=True)
 
+print(f"\nbest learned policy (iteration {out['best_iteration']}): "
+      f"x{out['best_uplift']:.3f} served-throughput uplift over uniform "
+      f"fixed power")
 
-def reward(power_matrix) -> float:
-    """Roll one episode under the candidate power plan and score it."""
-    state, _ = env.reset(EP_KEY)
-    _, _, r, _ = env.step(state, power_matrix)
-    return float(r)
-
-
-def reward_batch(power_matrices):
-    """All candidates at once: vmap compiles the batch to one program."""
-    states, _ = env.reset_batch(EP_KEYS)
-    _, _, rs, _ = env.step_batch(states, power_matrices)
-    return np.asarray(rs)
-
-
-base_pw = env.uniform_action()
-r0 = reward(base_pw)
-print(f"baseline buffer-aware reward (uniform power): {r0:+.3f}")
-
-
-# policy: per (cell, subband) logits -> power levels via softmax budget split
-def sample(key, theta, temp=0.3):
-    noise = jax.random.normal(key, theta.shape) * temp
-    logits = theta + noise
-    alloc = jax.nn.softmax(logits.reshape(-1)).reshape(theta.shape)
-    return 20.0 * N_CELL * alloc, noise
-
-
-theta = jnp.zeros((N_CELL, K))
-key = jax.random.PRNGKey(0)
-lr = 2.0
-r_base = r0
-for it in range(25):
-    key, *ks = jax.random.split(key, batch + 1)
-    pws, noises = zip(*(sample(k, theta) for k in ks))
-    rs = reward_batch(jnp.stack(pws))            # one launch, 8 episodes
-    adv = jnp.asarray(rs) - r_base               # REINFORCE
-    theta = theta + lr * (adv[:, None, None] * jnp.stack(noises)).mean(0)
-    r_base = 0.9 * r_base + 0.1 * float(np.mean(rs))
-    if (it + 1) % 5 == 0:
-        pw, _ = sample(jax.random.PRNGKey(99), theta, temp=0.0)
-        print(f"iter {it+1:3d}: mean episode reward {np.mean(rs):+.3f}  "
-              f"greedy reward {reward(pw):+.3f}")
-
-pw, _ = sample(jax.random.PRNGKey(99), theta, temp=0.0)
-print(f"learned power plan improves buffer-aware reward "
-      f"{r0:+.3f} -> {reward(pw):+.3f}")
+# what did it learn?  The deterministic plan for a fresh episode start.
+env, pcfg = out["env"], out["pcfg"]
+state, obs = env.reset(jax.random.PRNGKey(123))
+power, _ = pol.mean_action(pcfg, out["best_params"],
+                           pol.features(pcfg, obs))
+print(f"\nper-cell learned power (W; uniform budget is "
+      f"{env.max_cell_power_W:.2f} W/cell):")
+print("  " + " ".join(f"{float(p):.2f}" for p in power.sum(-1)))

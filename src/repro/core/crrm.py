@@ -319,7 +319,7 @@ class CRRM:
     def episode_fns(self, mobility_step_m=None, per_tti_fading: bool = False,
                     use_harq=None, mesh=None, ue_axis=("ue",),
                     radio_mode=None, mobility_move_frac=None,
-                    telemetry: bool = False, churn=None):
+                    telemetry: bool = False, churn=None, relax=None):
         """The pure ``(step, rollout)`` episode functions for this
         simulator's topology and MAC parameters (``EpisodeFns``), cached
         per trace-time switch combination.  Both are jit-compiled and
@@ -335,14 +335,17 @@ class CRRM:
         (DESIGN.md §Observability); ``churn`` a
         ``sim.mobility.ChurnConfig`` enabling the birth-death UE process
         of the digital-twin serving layer (DESIGN.md
-        §Digital-twin-serving) -- both off, the exact legacy program."""
+        §Digital-twin-serving); ``relax`` a ``sim.radio.RelaxConfig``
+        softening the chain's non-differentiable points for
+        gradient-based optimization (DESIGN.md §RL-and-differentiability)
+        -- all off, the exact legacy program."""
         from repro.mac import engine as mac_engine
         return mac_engine.episode_fns_for(
             self, mobility_step_m=mobility_step_m,
             per_tti_fading=per_tti_fading, use_harq=use_harq,
             mesh=mesh, ue_axis=ue_axis, radio_mode=radio_mode,
             mobility_move_frac=mobility_move_frac, telemetry=telemetry,
-            churn=churn)
+            churn=churn, relax=relax)
 
     def sync_episode_state(self, state, positions: bool = False) -> None:
         """Write a final ``EpisodeState`` back into the graph (legacy

@@ -76,6 +76,49 @@ class TopoEnvState(NamedTuple):
     static: Any
 
 
+def expand_action(params, action):
+    """(n_cells, n_subbands) watts -> the (n_cells, n_freq) power grid.
+
+    The one action-conditioning convention, shared by :class:`CrrmEnv`
+    and the differentiable optimizer (``repro.rl.diffopt``): clamp each
+    cell's total to the ``power_W`` budget (soft -- rows under budget
+    pass through, so the clamp is differentiable a.e.), then split each
+    subband's power evenly over its ``n_rb_subbands`` CQI chunks.
+    """
+    action = jnp.asarray(action, jnp.float32)
+    total = action.sum(axis=-1, keepdims=True)
+    budget = params.power_W
+    action = action * jnp.minimum(1.0, budget / jnp.maximum(total, 1e-30))
+    s = params.n_rb_subbands
+    if s > 1:
+        action = jnp.repeat(action, s, axis=-1) / s
+    return action
+
+
+def reward_components(obs: EnvObs, telem, tti_s: float):
+    """The per-cell / per-term decomposition of the default reward.
+
+    Returns a flat dict of traced arrays (vmap-able, so ``step_batch``
+    stacks each entry over the batch axis): the two scalar terms of
+    :func:`buffer_aware_reward` (``goodput_term`` minus ``queue_penalty``
+    IS the default reward) plus the per-cell credit assignment RL
+    diagnostics want -- which cells' serving throughput and grant share
+    moved under the candidate power plan.
+    """
+    goodput = jnp.log(jnp.maximum(obs.tput, 1e3)).mean()
+    queued = jnp.where(jnp.isfinite(obs.backlog),
+                       jnp.log1p(obs.backlog / 1e4), 0.0)
+    n_tti = telem.served_bits.shape[0]
+    return {
+        "goodput_term": goodput,
+        "queue_penalty": 0.05 * queued.mean(),
+        # (n_cells,) mean delivered rate / granted RBs per serving cell
+        "cell_tput_mbps": telem.served_bits.sum(axis=0)
+                          / (n_tti * tti_s) / 1e6,
+        "cell_granted_rb": telem.granted_rb.mean(axis=0),
+    }
+
+
 def buffer_aware_reward(obs: EnvObs):
     """Default reward: geometric-mean goodput minus a queueing penalty.
 
@@ -129,10 +172,23 @@ class CrrmEnv:
     telemetry:
         Stream per-TTI KPIs (``repro.obs.Telemetry``) out of the scan:
         ``step`` then returns a fifth element, an info dict with a
-        ``"telemetry"`` entry stacked to (tti_per_step, ...)
+        ``"telemetry"`` entry stacked to (tti_per_step, ...) plus the
+        ``"reward_components"`` decomposition RL logging wants
         (DESIGN.md §Observability).  A trace-time switch -- the
         trajectory is bit-identical either way, and off (the default)
         compiles the exact legacy program.
+    churn:
+        A ``sim.mobility.ChurnConfig``: the birth-death UE process runs
+        inside every decision window's scan (the capacity-padded
+        ``active`` mask rides the threaded state), and the telemetry
+        KPIs gain ``mean_active_ues`` (DESIGN.md §Digital-twin-serving).
+        Incompatible with ``resample_topology``.
+    mesh, ue_axis:
+        Shard the UE axis of the episode engine over a device mesh
+        (``episode_fns(mesh=)``).  The sharded program spans the
+        devices, so the ``vmap`` batch surfaces (``reset_batch`` /
+        ``step_batch`` / ``step_autoreset_batch``) raise -- batch over
+        seeds OR shard over UEs, not both.
     """
 
     def __init__(self, params: Optional[CRRM_parameters] = None, *,
@@ -142,7 +198,8 @@ class CrrmEnv:
                  per_tti_fading: bool = False,
                  resample_topology: bool = False, reward_fn=None,
                  radio_mode: Optional[str] = None,
-                 telemetry: bool = False):
+                 telemetry: bool = False, churn=None,
+                 mesh=None, ue_axis=("ue",)):
         if (params is None) == (scenario is None):
             raise ValueError("pass exactly one of params= or scenario=")
         if scenario is not None:
@@ -152,6 +209,12 @@ class CrrmEnv:
             raise ValueError("scenario_overrides requires scenario=")
         if episode_tti < 1 or tti_per_step < 1:
             raise ValueError("episode_tti and tti_per_step must be >= 1")
+        if churn is not None and resample_topology:
+            raise ValueError(
+                "churn= is incompatible with resample_topology=True: a "
+                "resampled reset rebuilds EpisodeStatic per topology draw "
+                "while churn carries its fading leaf in the state; run "
+                "churn on the fixed construction-time topology")
         self.scenario = scenario
         self.episode_tti = int(episode_tti)
         self.tti_per_step = int(tti_per_step)
@@ -162,14 +225,23 @@ class CrrmEnv:
         self.n_subbands = self.params.n_subbands
         self._reward_fn = reward_fn or buffer_aware_reward
         self.telemetry = bool(telemetry)
+        self.churn = churn
+        self.mesh = mesh
         self._fns = self.sim.episode_fns(per_tti_fading=per_tti_fading,
                                          radio_mode=radio_mode,
-                                         telemetry=self.telemetry)
+                                         telemetry=self.telemetry,
+                                         churn=churn, mesh=mesh,
+                                         ue_axis=ue_axis)
         self._static = self.sim.episode_static()
         self._radio_static = self.sim.radio_static()
         # the reset template: PF EWMA seeded at the stationary alpha-fair
         # point, empty HARQ processes, attachment-serving, t=0
         self._state0 = self.sim.init_episode_state()
+        if churn is not None:
+            from repro.mac.engine import seed_churn_state
+            self._state0 = seed_churn_state(
+                self._state0, self._static, self.params,
+                per_tti_fading=per_tti_fading)
         self._batched = {}          # cached jit(vmap(...)) wrappers
 
     # ------------------------------------------------------------- actions
@@ -199,15 +271,7 @@ class CrrmEnv:
         *requests*, the cell amplifier is the constraint), then splits
         each subband's power evenly over its CQI chunks (same convention
         as ``CRRM.set_power_matrix``)."""
-        action = jnp.asarray(action, jnp.float32)
-        total = action.sum(axis=-1, keepdims=True)
-        budget = self.params.power_W
-        action = action * jnp.minimum(
-            1.0, budget / jnp.maximum(total, 1e-30))
-        s = self.params.n_rb_subbands
-        if s > 1:
-            action = jnp.repeat(action, s, axis=-1) / s
-        return action
+        return expand_action(self.params, action)
 
     # ---------------------------------------------------------- pure core
     def _resampled_reset(self, key):
@@ -260,15 +324,20 @@ class CrrmEnv:
                      backlog=backlog)
         return state, obs
 
-    def step(self, state, action=None):
+    def step(self, state, action=None, fairness_p=None):
         """Hold ``action`` for ``tti_per_step`` TTIs; observe and score.
 
         ``action`` is a (n_cells, n_subbands) power matrix (None keeps the
-        construction-time power plan -- a pure traffic simulation step).
+        construction-time power plan -- a pure traffic simulation step);
+        ``fairness_p`` a traced scalar overriding the PF alpha-fairness
+        exponent for the window (None keeps ``params.fairness_p``) -- the
+        second control surface PPO policies steer.
         Returns ``(state, EnvObs, reward, done)``; pure and vmap-able over
-        ``(state, action)``.  Constructed with ``telemetry=True`` a fifth
-        element is appended: ``{"telemetry": Telemetry}`` with each KPI
-        leaf stacked to (tti_per_step, ...).
+        ``(state, action, fairness_p)``.  Constructed with
+        ``telemetry=True`` a fifth element is appended:
+        ``{"telemetry": Telemetry, "reward_components": dict}`` with each
+        KPI leaf stacked to (tti_per_step, ...) and the reward decomposed
+        per term and per cell (:func:`reward_components`).
         """
         if self.resample_topology:
             ep, static = state.ep, state.static
@@ -278,10 +347,11 @@ class CrrmEnv:
         telem = None
         if self.telemetry:
             ep, tput, telem = self._fns.rollout(static, ep,
-                                                self.tti_per_step, power)
+                                                self.tti_per_step, power,
+                                                fairness_p)
         else:
             ep, tput = self._fns.rollout(static, ep, self.tti_per_step,
-                                         power)
+                                         power, fairness_p)
         obs = EnvObs(tput=tput.mean(axis=0), backlog=ep.backlog)
         reward = self._reward_fn(obs)
         done = ep.t >= self.episode_tti
@@ -290,16 +360,62 @@ class CrrmEnv:
         else:
             state = ep
         if self.telemetry:
-            return state, obs, reward, done, {"telemetry": telem}
+            info = {"telemetry": telem,
+                    "reward_components": reward_components(
+                        obs, telem, self.params.tti_s)}
+            return state, obs, reward, done, info
         return state, obs, reward, done
+
+    def step_autoreset(self, state, action=None, reset_key=None,
+                       fairness_p=None):
+        """:meth:`step`, restarting finished episodes from ``reset_key``.
+
+        The continuous-rollout primitive PPO collection scans over: when
+        the stepped episode reports ``done``, every leaf of the returned
+        state is swapped (``jnp.where`` select, both branches computed --
+        no control flow, so the function stays pure, jit- and vmap-able)
+        for a fresh :meth:`reset` of ``reset_key``.  The *returned*
+        ``obs``/``reward``/``done``/info are the pre-reset ones -- the
+        terminal transition stays visible to GAE bootstrapping; only the
+        carried state jumps.  Requires ``resample_topology=False`` (a
+        resampled reset runs the radio chain per boundary -- pay for that
+        explicitly via :meth:`reset` if you want it).
+        """
+        if self.resample_topology:
+            raise ValueError(
+                "step_autoreset requires resample_topology=False: the "
+                "in-scan reset would recompute the radio chain at every "
+                "episode boundary; drive resampled episodes with explicit "
+                "reset() calls instead")
+        if reset_key is None:
+            raise ValueError("step_autoreset needs reset_key= (the seed "
+                             "of the replacement episode)")
+        out = self.step(state, action, fairness_p)
+        state, obs, reward, done = out[:4]
+        fresh, _ = self.reset(reset_key)
+        # done is a scalar here (vmap maps this whole function per
+        # episode), so one where() selects every leaf regardless of rank
+        state = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(done, new, old), fresh, state)
+        return (state, obs, reward, done) + out[4:]
 
     # ------------------------------------------------------------- batched
     def _vmapped(self, name):
         """jit(vmap(...)) wrappers, traced once per (name, batch shape)."""
+        if self.mesh is not None:
+            raise ValueError(
+                "batched env surfaces (reset_batch/step_batch/"
+                "step_autoreset_batch) are unsupported under mesh=: the "
+                "UE-sharded program already spans the devices; batch over "
+                "seeds OR shard over UEs, not both")
         if name not in self._batched:
             fn = {"reset": self.reset,
                   "step": self.step,
-                  "step_auto": lambda s: self.step(s, None)}[name]
+                  "step_fair": self.step,
+                  "step_auto": lambda s: self.step(s, None),
+                  "step_ar": lambda s, a, k: self.step_autoreset(s, a, k),
+                  "step_ar_fair": self.step_autoreset,
+                  }[name]
             self._batched[name] = jax.jit(jax.vmap(fn))
         return self._batched[name]
 
@@ -309,9 +425,22 @@ class CrrmEnv:
         axis runs over topologies."""
         return self._vmapped("reset")(keys)
 
-    def step_batch(self, states, actions=None):
-        """Advance N episodes (optionally under N candidate actions) as
-        one compiled program -- the batch axis is free parallelism."""
+    def step_batch(self, states, actions=None, fairness_p=None):
+        """Advance N episodes (optionally under N candidate actions /
+        alpha-fairness scalars) as one compiled program -- the batch axis
+        is free parallelism."""
         if actions is None:
             return self._vmapped("step_auto")(states)
-        return self._vmapped("step")(states, actions)
+        if fairness_p is None:
+            return self._vmapped("step")(states, actions)
+        return self._vmapped("step_fair")(states, actions, fairness_p)
+
+    def step_autoreset_batch(self, states, actions, reset_keys,
+                             fairness_p=None):
+        """Batched :meth:`step_autoreset`: N episodes stepped under N
+        actions, each restarting from its own ``reset_keys`` row when it
+        finishes -- the PPO rollout-collection kernel."""
+        if fairness_p is None:
+            return self._vmapped("step_ar")(states, actions, reset_keys)
+        return self._vmapped("step_ar_fair")(states, actions, reset_keys,
+                                             fairness_p)

@@ -37,7 +37,10 @@ def make_gym_env(env: CrrmEnv, seed: int = 0):
     the gymnasium info dict: ``info["telemetry"]`` is the raw
     ``repro.obs.Telemetry`` stack for the decision window and
     ``info["kpis"]`` its ``repro.obs.summarize`` reduction to plain
-    floats (what RL loggers can emit directly).
+    floats (what RL loggers can emit directly) -- including ``mean_jain``
+    and, under churn, ``mean_active_ues`` -- plus the per-cell/per-term
+    reward decomposition under ``reward/...`` keys
+    (``repro.env.crrm_env.reward_components``).
     """
     try:
         import gymnasium
@@ -83,9 +86,14 @@ def make_gym_env(env: CrrmEnv, seed: int = 0):
                 self._state, obs, reward, done, step_info = out
                 from repro.obs import summarize
                 telem = step_info["telemetry"]
-                info = {"telemetry": telem,
-                        "kpis": summarize(telem,
-                                          tti_s=self._env.params.tti_s)}
+                kpis = summarize(telem, tti_s=self._env.params.tti_s)
+                # flatten the reward decomposition into the KPI dict:
+                # scalars as floats, per-cell vectors as numpy arrays --
+                # what RL loggers can emit directly
+                for k, v in step_info["reward_components"].items():
+                    v = np.asarray(v)
+                    kpis[f"reward/{k}"] = (float(v) if v.ndim == 0 else v)
+                info = {"telemetry": telem, "kpis": kpis}
             else:
                 self._state, obs, reward, done = out
             return (flatten_obs(obs), float(reward),

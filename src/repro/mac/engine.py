@@ -279,7 +279,8 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
                      use_harq=None, mesh=None, ue_axis=("ue",),
                      radio_mode: str = "dense",
                      mobility_move_frac=None,
-                     telemetry: bool = False, churn=None) -> EpisodeFns:
+                     telemetry: bool = False, churn=None,
+                     relax=None) -> EpisodeFns:
     """Build the pure ``step``/``rollout`` functions for one configuration.
 
     ``params`` is a ``CRRM_parameters``; ``radio_cfg`` the hashable pure-
@@ -342,6 +343,18 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
     scalar overriding ``params.fairness_p`` in the PF weight law -- the
     twin server's live scheduler-control knob (None compiles the baked
     constant, i.e. the legacy program).
+
+    ``relax`` (a ``radio.RelaxConfig``) is the differentiable-CRRM switch
+    (DESIGN.md §RL-and-differentiability): the recomputed radio/MAC chain
+    softens its three non-differentiable points (argmax attachment, the
+    CQI staircase, max_cqi winner-take-all) so ``jax.grad`` through
+    ``rollout`` w.r.t. a power ``action`` is exact for the relaxed
+    program.  A trace-time switch like every other axis: ``relax=None``
+    compiles the bitwise legacy program (pinned in tests/test_rl.py).
+    The relaxations only reach the chain that is *recomputed* per TTI,
+    i.e. they are meaningful with a power ``action`` (or per-TTI fading /
+    mobility); single-device dense mode only -- ``mesh``, ``churn`` and
+    ``radio_mode="incremental"`` raise.
     """
     p = params
     cfg = radio_cfg
@@ -372,8 +385,33 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
     churn_on = churn is not None
     if churn_on and mesh is not None:
         raise ValueError(
-            "birth-death churn is single-host: the capacity-padded active "
-            "mask is not sharded over a mesh (the twin serves unsharded)")
+            "episode_fns(mesh=..., churn=...) is unsupported: birth-death "
+            "churn is single-host because newborn UEs scatter fresh "
+            "position/fading rows into the capacity-padded active mask, "
+            "and that scatter does not cross shard boundaries "
+            "(sim.mobility.birth_death_step draws global rows; a shard "
+            "cannot write a newborn born on another shard's block -- "
+            "ROADMAP 'mesh-sharded churn' tracks the cross-shard newborn "
+            "scatter).  Either drop mesh= and serve the twin unsharded, "
+            "or pass churn=None for a mesh-sharded fixed population.")
+    if relax is not None:
+        if mesh is not None:
+            raise ValueError(
+                "relax= (differentiable relaxations) is single-device: "
+                "the soft allocator shares pf's segment reductions but "
+                "has no cross-shard collectives; drop mesh= (shrink the "
+                "problem) or relax=None")
+        if churn_on:
+            raise ValueError(
+                "relax= is incompatible with churn=: the birth-death "
+                "scatter writes discrete rows (no gradient path through "
+                "births); differentiate a fixed population instead")
+        if radio_mode == "incremental":
+            raise ValueError(
+                "relax= requires radio_mode='dense': the incremental "
+                "path carries hard argmax attachment in its RadioState "
+                "(the dirty-row patching is integer gather/scatter); "
+                "pass radio_mode='dense' when differentiating")
     # the fading factor is *carried* state exactly when newborns must
     # redraw their rows into an otherwise-static fading tensor
     fad_carried = churn_on and p.rayleigh_fading and not per_tti_fading
@@ -433,10 +471,23 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
     def faded_rsrp(G0, P, fad):
         return radio.rsrp(radio.apply_fading(G0, fad), P)
 
-    def sinr_chain(R, a):
-        """(se, cqi, a) for serving assignment ``a``."""
-        gamma, _, _ = radio.sinr(R, a, noise_w)
-        se, cqi = radio.se_chain(cfg, gamma)
+    def sinr_chain(R, a, meas=None):
+        """(se, cqi, a) for serving assignment ``a``.
+
+        With ``relax.soft_attach`` the wanted/interference split softens
+        to the temperature-softmax combination over per-cell RSRP
+        (``radio.soft_attach_sinr``, fed the same ``meas`` matrix the
+        hard argmax ranks); the returned ``a`` stays the hard i32 index
+        either way -- schedulers gather with it.  ``relax=None`` is the
+        bitwise legacy chain (``se_chain_relaxed`` degenerates to
+        ``se_chain``).
+        """
+        if relax is not None and relax.soft_attach:
+            m = meas if meas is not None else R.sum(axis=-1)
+            gamma = radio.soft_attach_sinr(R, m, relax.attach_tau, noise_w)
+        else:
+            gamma, _, _ = radio.sinr(R, a, noise_w)
+        se, cqi = radio.se_chain_relaxed(cfg, gamma, relax)
         return se, cqi, a
 
     def gather_serving(se_all, cqi_all, a):
@@ -527,9 +578,16 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
             demand = demand & act[:, None]
         active = demand & (se > 0.0)
         fp = p.fairness_p if fair is None else fair
+        if relax is not None and relax.soft_sched and policy == "max_cqi":
+            # winner-take-all softened to a temperature softmax over the
+            # (relaxed) SE -- the third RelaxConfig gate; pf is already
+            # smooth and rr is CQI-independent, so they pass through
+            return mac_sched.allocate_max_cqi_soft(active, se, a, n_cells,
+                                                   rb_chunk, relax.sched_tau)
         log_w = mac_sched.pf_log_weights_ewma(rb_bw * se, avg[:, None], fp)
         return mac_sched.allocate(policy, active, cqi, a, n_cells, rb_chunk,
-                                  cursor, log_w, ue_axes)
+                                  cursor, log_w, ue_axes,
+                                  differentiable=relax is not None)
 
     def harq_step(k_harq, tb_new, hbits, hretx, granted):
         """One TTI of every UE's stop-and-wait process.
@@ -723,14 +781,15 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
                                          ttt_tti)
                 a_use = a_srv
                 if R is not None:
-                    se, cqi, _ = sinr_chain(R, a_use)
+                    se, cqi, _ = sinr_chain(R, a_use, meas=meas_wb)
                 else:
                     # static channel, evolving attachment: gather from the
                     # hoisted all-cells SINR-chain tables
                     se, cqi = gather_serving(h["se_all"], h["cqi_all"],
                                              a_use)
             elif R is not None:
-                se, cqi, a_use = sinr_chain(R, a_inst)
+                se, cqi, a_use = sinr_chain(R, a_inst,
+                                            meas=R_meas.sum(axis=-1))
             else:
                 se, cqi, a_use = static.se, static.cqi, static.a
 
@@ -744,8 +803,9 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
         alloc = allocate(se, cqi, a_use, buf, avg, cursor, harq_pending,
                          act, fair)
         drainable = jnp.where(harq_pending, 0.0, buf)
-        tb_new = mac_sched.served_bits(alloc, se, drainable, rb_bw,
-                                       tti_s).sum(1)
+        tb_new = mac_sched.served_bits(
+            alloc, se, drainable, rb_bw, tti_s,
+            floor=1e-6 if relax is not None else 1e-30).sum(1)
         hstats = None
         if harq_on:
             bits, _, hbits, hretx, hstats = harq_step(
@@ -954,7 +1014,8 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
 def episode_fns_for(sim, *, mobility_step_m=None, per_tti_fading=False,
                     use_harq=None, mesh=None, ue_axis=("ue",),
                     radio_mode=None, mobility_move_frac=None,
-                    telemetry: bool = False, churn=None) -> EpisodeFns:
+                    telemetry: bool = False, churn=None,
+                    relax=None) -> EpisodeFns:
     """The :func:`make_episode_fns` bundle for ``sim``, cached on it.
 
     Keyed by the trace-time switches only -- ``n_tti`` and the presence of
@@ -976,7 +1037,7 @@ def episode_fns_for(sim, *, mobility_step_m=None, per_tti_fading=False,
         mobility_move_frac = getattr(sim.params, "mobility_move_frac", None)
     ue_axis = (ue_axis,) if isinstance(ue_axis, str) else tuple(ue_axis)
     cache_key = (mobility_step_m, per_tti_fading, use_harq, mesh, ue_axis,
-                 radio_mode, mobility_move_frac, telemetry, churn)
+                 radio_mode, mobility_move_frac, telemetry, churn, relax)
     cache = sim.__dict__.setdefault("_episode_fns_cache", {})
     if cache_key not in cache:
         cache[cache_key] = make_episode_fns(
@@ -985,7 +1046,7 @@ def episode_fns_for(sim, *, mobility_step_m=None, per_tti_fading=False,
             per_tti_fading=per_tti_fading, use_harq=use_harq,
             mesh=mesh, ue_axis=ue_axis, radio_mode=radio_mode,
             mobility_move_frac=mobility_move_frac, telemetry=telemetry,
-            churn=churn)
+            churn=churn, relax=relax)
     return cache[cache_key]
 
 

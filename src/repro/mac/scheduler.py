@@ -56,6 +56,11 @@ SCHEDULER_POLICIES = ("rr", "max_cqi", "pf")
 #: realistic rate spread needs.
 _ALPHA_MAX = 63.0
 
+#: finite stand-in for -inf on the differentiable scheduler paths: deep
+#: enough that exp(_NEG - anything) underflows to exactly 0.0 (bitwise the
+#: -inf forward), finite so reverse-mode never forms inf - inf = nan.
+_NEG = -1e30
+
 
 def _cell_mask(active, a, n_cells):
     """M[i, j, k] = UE i is active on subband k and attached to cell j."""
@@ -63,7 +68,8 @@ def _cell_mask(active, a, n_cells):
     return active[:, None, :] & onehot[:, :, None]
 
 
-def allocate_rr(active, a, n_cells, n_rb, cursor, ue_axis=None):
+def allocate_rr(active, a, n_cells, n_rb, cursor, ue_axis=None,
+                differentiable=False):
     """Round-robin: even integer split, remainder rotated by ``cursor``.
 
     A UE's within-cell rank (its position in the cell's active roster) is
@@ -81,7 +87,8 @@ def allocate_rr(active, a, n_cells, n_rb, cursor, ue_axis=None):
     are psummed.
     """
     act_i = active.astype(jnp.int32)                   # (n_ue, K)
-    counts = segments.segment_sum(act_i, a, n_cells)   # (n_cells, K) local
+    counts = segments.segment_sum(act_i, a, n_cells,   # (n_cells, K) local
+                                  differentiable=differentiable)
     order = jnp.argsort(a)                 # stable: in-cell order preserved
     csum = jnp.cumsum(act_i[order], axis=0)            # actives at pos <= s
     offs = jnp.cumsum(counts, axis=0) - counts         # actives in cells < j
@@ -126,23 +133,62 @@ def allocate_max_cqi(active, cqi, a, n_cells, n_rb, ue_axis=None):
     return jnp.where(active & (mine == i), float(n_rb), 0.0)
 
 
-def allocate_pf(active, log_w, a, n_cells, n_rb, ue_axis=None):
+def allocate_max_cqi_soft(active, se, a, n_cells, n_rb, tau):
+    """Soft max_cqi: a temperature-``tau`` softmax share of the grid.
+
+    The differentiable relaxation of :func:`allocate_max_cqi`
+    (``RelaxConfig.soft_sched``): each cell's active UEs split its
+    ``n_rb`` RBs in proportion to ``softmax(se / tau)`` instead of
+    winner-take-all.  Scoring on the (smoothly relaxed) spectral
+    efficiency rather than the i32 CQI is what lets the gradient flow
+    from the allocation back into powers; as ``tau -> 0`` the share
+    collapses onto the best-SE UE and this reduces to the hard policy
+    (up to argmax tie-breaking).  Structurally the same log-space
+    segment-reduction program as :func:`allocate_pf`.  Single-device
+    only -- the relaxed engine path rejects meshes.
+    """
+    logits = jnp.where(active, se / tau, _NEG)
+    cell_max = segments.segment_max(logits, a, n_cells, fill=_NEG,
+                                    differentiable=True)
+    w = jnp.exp(logits - cell_max[a])
+    w = jnp.where(active, w, 0.0)
+    denom = segments.segment_sum(w, a, n_cells, differentiable=True)
+    # 1e-15 floor: the VJP squares the denominator (see served_bits)
+    share = jnp.where(denom[a] > 0.0, w / jnp.maximum(denom[a], 1e-15), 0.0)
+    return n_rb * share
+
+
+def allocate_pf(active, log_w, a, n_cells, n_rb, ue_axis=None,
+                differentiable=False):
     """Weight-proportional split of the grid (log-space for stability).
 
     Sharded (``ue_axis``): the per-cell weight maximum (the log-space
     stabiliser) and the weight sums reduce over the UE axis with
-    ``pmax``/``psum``.
+    ``pmax``/``psum``.  ``differentiable`` selects the plain-scatter
+    segment reductions (autodiff-traceable; the relaxed engine path).
     """
-    log_w = jnp.where(active, log_w, -jnp.inf)
+    # the idle sentinel: -inf is exact but poisons reverse-mode autodiff
+    # (-inf - -inf = nan in the exp's argument; the nan survives the
+    # where-mask's zero cotangent), so the differentiable path uses a
+    # finite sentinel -- exp(-1e30 - m) underflows to the same 0.0
+    # forward, with a clean zero gradient
+    neg = _NEG if differentiable else -jnp.inf
+    log_w = jnp.where(active, log_w, neg)
     # segment reductions: unbatched these ARE the .at[a].max/.at[a].add
     # scatters (bit-exact); under vmap their custom rule avoids the slow
     # rank-2 batched scatter (repro.mac.segments)
-    cell_max = segments.segment_max(log_w, a, n_cells)
+    cell_max = segments.segment_max(log_w, a, n_cells, fill=neg,
+                                    differentiable=differentiable)
     if ue_axis is not None:
         cell_max = jax.lax.pmax(cell_max, ue_axis)
     w = jnp.exp(log_w - cell_max[a])                   # in (0, 1], 0 if idle
     w = jnp.where(active, w, 0.0)
-    denom = segments.segment_sum(w, a, n_cells)
+    denom = segments.segment_sum(w, a, n_cells,
+                                 differentiable=differentiable)
+    if differentiable:
+        # the VJP squares the denominator; keep the square normal-range
+        return n_rb * jnp.where(denom[a] > 0.0,
+                                w / jnp.maximum(denom[a], 1e-15), 0.0)
     if ue_axis is not None:
         denom = jax.lax.psum(denom, ue_axis)
     share = jnp.where(denom[a] > 0.0, w / jnp.maximum(denom[a], 1e-30), 0.0)
@@ -150,20 +196,25 @@ def allocate_pf(active, log_w, a, n_cells, n_rb, ue_axis=None):
 
 
 def allocate(policy, active, cqi, a, n_cells, n_rb, cursor, log_w,
-             ue_axis=None):
+             ue_axis=None, differentiable=False):
     """Dispatch to a policy; single entry point for graph node and engine.
 
     ``log_w`` carries the PF weights (stationary from the single-shot
     graph, EWMA-temporal from the episode engine); the other policies
     ignore it.  ``ue_axis`` names the mesh axes the UE dimension is
     sharded over inside ``shard_map`` (None = single device).
+    ``differentiable`` routes the segment reductions around their
+    ``custom_vmap`` wrapper (no autodiff rule) -- set by the engine's
+    relaxed path, a trace-time switch with a bitwise-identical primal.
     """
     if policy == "rr":
-        return allocate_rr(active, a, n_cells, n_rb, cursor, ue_axis)
+        return allocate_rr(active, a, n_cells, n_rb, cursor, ue_axis,
+                           differentiable)
     if policy == "max_cqi":
         return allocate_max_cqi(active, cqi, a, n_cells, n_rb, ue_axis)
     if policy == "pf":
-        return allocate_pf(active, log_w, a, n_cells, n_rb, ue_axis)
+        return allocate_pf(active, log_w, a, n_cells, n_rb, ue_axis,
+                           differentiable)
     raise ValueError(
         f"unknown scheduler policy {policy!r}; choose from "
         f"{SCHEDULER_POLICIES}")
@@ -182,16 +233,23 @@ def pf_log_weights_ewma(rate, avg, fairness_p):
             - alpha * jnp.log(jnp.maximum(avg, 1e-3)))
 
 
-def served_bits(alloc, se, backlog, rb_bw_hz, tti_s):
+def served_bits(alloc, se, backlog, rb_bw_hz, tti_s, floor=1e-30):
     """Bits actually drained per (UE, subband) in one TTI.
 
     Capacity of the grant, capped by the UE's total backlog (a UE cannot
     transmit bits it does not have); the cap scales every subband of the
     grant uniformly.
+
+    ``floor`` guards the backlog/grant ratio.  The 1e-30 default is
+    forward-exact; the relaxed engine path raises it to 1e-6 bits because
+    reverse-mode forms ``tot**2`` in the division's VJP and a soft-SE
+    grant total of ~1e-25 bits underflows that square to 0.0 -> nan.  At
+    1e-6 the square stays normal; grants below a millionth of a bit are
+    physically nothing, so the relaxed forward is unchanged to f32.
     """
     cap = alloc * rb_bw_hz * se * tti_s                # (n_ue, K) bits
     tot = cap.sum(axis=-1)
     scale = jnp.where(tot > 0.0,
-                      jnp.minimum(backlog / jnp.maximum(tot, 1e-30), 1.0),
+                      jnp.minimum(backlog / jnp.maximum(tot, floor), 1.0),
                       0.0)
     return cap * scale[:, None]

@@ -88,21 +88,38 @@ def _segment_max_fn(n_seg: int, fill: float):
     return seg_max
 
 
-def segment_sum(data, seg, n_seg: int):
+def segment_sum(data, seg, n_seg: int, *, differentiable: bool = False):
     """``out[j] = sum_{i: seg[i] == j} data[i]`` over ``data``'s axis 0.
 
     ``data`` is (n, ...), ``seg`` (n,) int; returns (n_seg, ...).
     Unbatched this IS ``zeros.at[seg].add(data)`` (bit-exact); under
     ``vmap`` the custom rule scatters into a flattened (batch * n_seg)
     id space instead of a rank-2 scatter.
+
+    ``differentiable=True`` skips the ``custom_vmap`` wrapper and issues
+    the plain scatter directly: ``custom_vmap`` carries no JVP/transpose
+    rule, so any autodiff trace through the wrapped op fails to
+    linearize.  The primal is the identical scatter either way (bitwise
+    equal results); only the vmap lowering differs -- callers on the
+    differentiable-CRRM path (``RelaxConfig``) trade the batched-scatter
+    optimisation for a gradient.
     """
+    if differentiable:
+        shape = (int(n_seg),) + data.shape[1:]
+        return jnp.zeros(shape, data.dtype).at[seg].add(data)
     return _segment_sum_fn(int(n_seg))(data, seg)
 
 
-def segment_max(data, seg, n_seg: int, fill=-jnp.inf):
+def segment_max(data, seg, n_seg: int, fill=-jnp.inf, *,
+                differentiable: bool = False):
     """``out[j] = max(fill, max_{i: seg[i] == j} data[i])`` over axis 0.
 
     Same contract as :func:`segment_sum` with a max combiner; ``fill``
-    seeds empty segments (trace-time constant).
+    seeds empty segments (trace-time constant).  ``differentiable=True``
+    as in :func:`segment_sum` (scatter-max has an autodiff rule; the
+    ``custom_vmap`` wrapper does not).
     """
+    if differentiable:
+        shape = (int(n_seg),) + data.shape[1:]
+        return jnp.full(shape, float(fill), data.dtype).at[seg].max(data)
     return _segment_max_fn(int(n_seg), float(fill))(data, seg)

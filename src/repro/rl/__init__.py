@@ -1,0 +1,33 @@
+"""repro.rl: learned RRM policies over the CRRM engine.
+
+Two pillars (DESIGN.md §RL-and-differentiability):
+
+* **PPO baselines** -- an MLP actor-critic over the per-cell/subband
+  transmit-power action (optionally plus the PF alpha-fairness scalar),
+  trained on population-batched ``CrrmEnv`` rollouts: ``policy``
+  (network + action squash), ``rollout`` (jit(vmap) auto-resetting
+  collection), ``ppo`` (GAE + clipped surrogate + checkpointed loop).
+* **Differentiable CRRM** -- ``diffopt`` differentiates the engine's
+  ``rollout`` w.r.t. the power-action trajectory through the
+  flag-gated soft relaxations (``repro.sim.radio.RelaxConfig``) and
+  runs first-order power-plan optimisation.
+"""
+from repro.rl.policy import (PolicyConfig, init_policy, policy_apply,
+                             features, feature_dim, sample_action,
+                             logp_entropy, mean_action, squash_power,
+                             squash_fairness)
+from repro.rl.rollout import Trajectory, make_collect_fn
+from repro.rl.ppo import (PPOConfig, TrainState, ppo_init, make_train_step,
+                          train, evaluate_uplift)
+from repro.rl.diffopt import (make_power_objective, optimize_power_plan,
+                              plan_to_power)
+
+__all__ = [
+    "PolicyConfig", "init_policy", "policy_apply", "features",
+    "feature_dim", "sample_action", "logp_entropy", "mean_action",
+    "squash_power", "squash_fairness",
+    "Trajectory", "make_collect_fn",
+    "PPOConfig", "TrainState", "ppo_init", "make_train_step", "train",
+    "evaluate_uplift",
+    "make_power_objective", "optimize_power_plan", "plan_to_power",
+]

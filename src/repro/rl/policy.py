@@ -1,0 +1,163 @@
+"""MLP actor-critic over the CRRM power-control surface.
+
+Everything here is a pure function of an explicit ``params`` pytree
+(jit/vmap/grad-compatible; ``train.checkpoint`` snapshots it directly).
+
+The observation the network sees (:func:`features`) is deliberately
+cheap and size-stable: per-cell serving KPIs of the *previous* decision
+window (delivered Mbit/s and granted-RB share per cell -- the credit-
+assignment signal a power plan can actually move, taken from the env's
+``reward_components``) plus four global UE-population statistics of the
+raw :class:`~repro.env.crrm_env.EnvObs`.  At an episode start the
+per-cell block is zero -- the policy learns its own prior for the first
+window.
+
+The Gaussian policy lives in an *unconstrained* space ``u``; actions are
+deterministic squashes of the sample (:func:`squash_power` maps to
+``(0, power_W)`` per cell/subband, :func:`squash_fairness` to the
+alpha-fairness interval).  PPO ratios are computed on ``u`` itself, so
+the squash Jacobians cancel between behaviour and target policies and
+never need evaluating.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PolicyConfig(NamedTuple):
+    """Hashable trace-time description of the actor-critic.
+
+    ``learn_fairness`` appends the PF alpha-fairness exponent to the
+    action vector (squashed into ``fairness_range``); off, the action is
+    the (n_cells, n_subbands) power matrix alone.
+    """
+
+    n_cells: int
+    n_subbands: int
+    power_W: float
+    hidden: tuple = (64, 64)
+    learn_fairness: bool = False
+    fairness_range: tuple = (0.0, 2.0)
+    init_log_std: float = -0.5
+
+
+def action_dim(cfg: PolicyConfig) -> int:
+    return cfg.n_cells * cfg.n_subbands + (1 if cfg.learn_fairness else 0)
+
+
+def feature_dim(cfg: PolicyConfig) -> int:
+    return 2 * cfg.n_cells + 4
+
+
+def features(cfg: PolicyConfig, obs, cell_tput_mbps=None,
+             cell_granted_rb=None):
+    """Build the policy input vector for one (unbatched) episode.
+
+    ``cell_tput_mbps`` / ``cell_granted_rb`` are the previous window's
+    per-cell reward components (None at episode start -> zeros).
+    """
+    zc = jnp.zeros((cfg.n_cells,), jnp.float32)
+    ct = zc if cell_tput_mbps is None else cell_tput_mbps
+    cg = zc if cell_granted_rb is None else cell_granted_rb
+    log_t = jnp.log1p(jnp.maximum(obs.tput, 0.0) / 1e6)
+    finite = jnp.isfinite(obs.backlog)
+    log_b = jnp.where(finite, jnp.log1p(
+        jnp.where(finite, obs.backlog, 0.0) / 1e4), 0.0)
+    return jnp.concatenate([
+        jnp.log1p(jnp.maximum(ct, 0.0)),
+        cg / 100.0,
+        jnp.stack([log_t.mean(), log_t.std(), log_b.mean(),
+                   finite.mean(dtype=jnp.float32)]),
+    ]).astype(jnp.float32)
+
+
+def init_policy(key, cfg: PolicyConfig):
+    """Orthogonal-ish (scaled normal) init; small actor head so the
+    initial policy stays near the uniform plan."""
+    sizes = (feature_dim(cfg),) + tuple(cfg.hidden)
+    params = {"layers": [], "log_std": jnp.full((action_dim(cfg),),
+                                                cfg.init_log_std,
+                                                jnp.float32)}
+    keys = jax.random.split(key, len(sizes) + 1)
+    for i, (n_in, n_out) in enumerate(zip(sizes[:-1], sizes[1:])):
+        w = jax.random.normal(keys[i], (n_in, n_out),
+                              jnp.float32) * math.sqrt(2.0 / n_in)
+        params["layers"].append({"w": w, "b": jnp.zeros((n_out,),
+                                                        jnp.float32)})
+    n_last = sizes[-1]
+    k_pi, k_v = jax.random.split(keys[-1])
+    params["actor"] = {
+        "w": jax.random.normal(k_pi, (n_last, action_dim(cfg)),
+                               jnp.float32) * 0.01,
+        "b": jnp.zeros((action_dim(cfg),), jnp.float32)}
+    params["critic"] = {
+        "w": jax.random.normal(k_v, (n_last, 1), jnp.float32) * 0.1,
+        "b": jnp.zeros((1,), jnp.float32)}
+    return params
+
+
+def policy_apply(cfg: PolicyConfig, params, feat):
+    """feat (feature_dim,) -> (mean_u (action_dim,), log_std, value)."""
+    h = feat
+    for layer in params["layers"]:
+        h = jnp.tanh(h @ layer["w"] + layer["b"])
+    mean_u = h @ params["actor"]["w"] + params["actor"]["b"]
+    value = (h @ params["critic"]["w"] + params["critic"]["b"])[0]
+    log_std = jnp.clip(params["log_std"], -5.0, 1.0)
+    return mean_u, log_std, value
+
+
+def squash_power(cfg: PolicyConfig, u_power):
+    """Unconstrained (n_cells*n_subbands,) -> (n_cells, n_subbands) watts.
+
+    Per-entry ``power_W * sigmoid(u)``; the env's budget clamp
+    (``repro.env.crrm_env.expand_action``) then enforces the per-cell
+    total, so every sampled action is feasible.
+    """
+    p = cfg.power_W * jax.nn.sigmoid(u_power)
+    return p.reshape(cfg.n_cells, cfg.n_subbands)
+
+
+def squash_fairness(cfg: PolicyConfig, u_fair):
+    lo, hi = cfg.fairness_range
+    return lo + (hi - lo) * jax.nn.sigmoid(u_fair)
+
+
+def split_action(cfg: PolicyConfig, u):
+    """u (action_dim,) -> (power (n_cells, n_subbands), fairness|None)."""
+    n_p = cfg.n_cells * cfg.n_subbands
+    power = squash_power(cfg, u[:n_p])
+    fair = squash_fairness(cfg, u[n_p]) if cfg.learn_fairness else None
+    return power, fair
+
+
+def _gauss_logp(u, mean_u, log_std):
+    z = (u - mean_u) * jnp.exp(-log_std)
+    return jnp.sum(-0.5 * z * z - log_std
+                   - 0.5 * math.log(2.0 * math.pi))
+
+
+def sample_action(cfg: PolicyConfig, params, feat, key):
+    """Sample the behaviour action: ``(u, power, fairness, logp, value)``."""
+    mean_u, log_std, value = policy_apply(cfg, params, feat)
+    u = mean_u + jnp.exp(log_std) * jax.random.normal(key, mean_u.shape)
+    power, fair = split_action(cfg, u)
+    return u, power, fair, _gauss_logp(u, mean_u, log_std), value
+
+
+def logp_entropy(cfg: PolicyConfig, params, feat, u):
+    """Re-evaluate a stored sample under (new) params: PPO's ratio path."""
+    mean_u, log_std, value = policy_apply(cfg, params, feat)
+    logp = _gauss_logp(u, mean_u, log_std)
+    entropy = jnp.sum(log_std + 0.5 * math.log(2.0 * math.pi * math.e))
+    return logp, entropy, value
+
+
+def mean_action(cfg: PolicyConfig, params, feat):
+    """The deterministic (evaluation-time) action: squashed mean."""
+    mean_u, _, _ = policy_apply(cfg, params, feat)
+    return split_action(cfg, mean_u)

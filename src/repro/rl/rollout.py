@@ -1,0 +1,105 @@
+"""Population-batched, auto-resetting rollout collection.
+
+One compiled program collects the whole PPO batch: a ``lax.scan`` over
+the decision steps of ``n_envs`` vmapped episode streams, each stream
+restarting itself at its horizon through the env's pure
+``step_autoreset`` (terminal transitions stay visible for GAE; the
+carried state jumps to a fresh seed).  The scan carries the policy
+*features* alongside the env states, so the behaviour policy always acts
+on the previous window's KPIs without re-deriving them.
+
+The env must be constructed with ``telemetry=True`` (the per-cell reward
+components feed :func:`repro.rl.policy.features`) and
+``resample_topology=False`` (auto-reset contract).  An optional UE-axis
+``mesh`` env is supported only unbatched (``n_envs == 1`` without vmap)
+-- the sharded program already spans the devices.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl import policy as pol
+
+
+class Trajectory(NamedTuple):
+    """One collection batch, time-major: every leaf (n_steps, n_envs, ...)."""
+
+    feat: Any     # (T, B, feature_dim) what the behaviour policy saw
+    u: Any        # (T, B, action_dim) unconstrained action samples
+    logp: Any     # (T, B) behaviour log-probs of u
+    value: Any    # (T, B) critic estimates
+    reward: Any   # (T, B)
+    done: Any     # (T, B) bool episode boundaries (pre-reset)
+
+
+def _next_features(cfg, obs, info, done, feat0):
+    rc = info["reward_components"]
+    nf = pol.features(cfg, obs, rc["cell_tput_mbps"],
+                      rc["cell_granted_rb"])
+    # a finished stream restarts: its first decision of the fresh episode
+    # must see the reset features, not the dead episode's terminal KPIs
+    return jnp.where(done, feat0, nf)
+
+
+def make_collect_fn(env, cfg: pol.PolicyConfig, n_steps: int):
+    """Build ``collect(params, env_states, feats, key)`` for ``env``.
+
+    Returns a jitted pure function
+    ``(params, env_states, feats, key) ->
+    (env_states', feats', Trajectory, last_value)`` where the batch axis
+    of ``env_states``/``feats`` is ``n_envs`` and ``last_value`` is the
+    critic bootstrap at the post-rollout features.  Pair it with
+    ``env.reset_batch`` + :func:`initial_features` for the first call;
+    thereafter thread the returned carry (collection is a continuous
+    stream across train iterations, the PPO convention).
+    """
+    if not env.telemetry:
+        raise ValueError("rollout collection needs CrrmEnv(telemetry="
+                         "True): the per-cell reward components are the "
+                         "policy's input features")
+    if env.resample_topology:
+        raise ValueError("rollout collection auto-resets in-scan, which "
+                         "requires resample_topology=False")
+
+    # the reset observation is seed-independent under a fixed topology
+    # (zero tput, template backlog), so the reset features are a constant
+    _, obs0 = env.reset(jax.random.PRNGKey(0))
+    feat0 = pol.features(cfg, obs0)
+
+    def one_env_step(params, state, feat, key):
+        k_act, k_reset = jax.random.split(key)
+        u, power, fair, logp, value = pol.sample_action(cfg, params, feat,
+                                                        k_act)
+        state, obs, reward, done, info = env.step_autoreset(
+            state, power, k_reset, fair)
+        nf = _next_features(cfg, obs, info, done, feat0)
+        return state, nf, (feat, u, logp, value, reward, done)
+
+    def collect(params, env_states, feats, key):
+        n_envs = feats.shape[0]
+
+        def scan_step(carry, k):
+            states, feats = carry
+            keys = jax.random.split(k, n_envs)
+            states, feats, out = jax.vmap(
+                lambda s, f, kk: one_env_step(params, s, f, kk)
+            )(states, feats, keys)
+            return (states, feats), out
+
+        keys = jax.random.split(key, n_steps)
+        (env_states, feats), outs = jax.lax.scan(
+            scan_step, (env_states, feats), keys)
+        traj = Trajectory(*outs)
+        last_value = jax.vmap(
+            lambda f: pol.policy_apply(cfg, params, f)[2])(feats)
+        return env_states, feats, traj, last_value
+
+    return jax.jit(collect)
+
+
+def initial_features(env, cfg: pol.PolicyConfig, obs_batch):
+    """Features for a fresh ``reset_batch`` observation (zero KPI block)."""
+    return jax.vmap(lambda o: pol.features(cfg, o))(obs_batch)

@@ -8,6 +8,7 @@ efficiencies.  The Shannon block is the information-theoretic upper bound
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 # SINR (dB) above which CQI index i (1..15) is usable; CQI 0 = out of range.
@@ -58,6 +59,27 @@ def spectral_efficiency(sinr_linear):
     cqi = sinr_db_to_cqi(sinr_to_db(sinr_linear))
     se = mcs_to_efficiency(cqi_to_mcs(cqi))
     return jnp.where(cqi > 0, se, 0.0)
+
+
+def soft_spectral_efficiency(sinr_linear, sharpness_per_db=2.0):
+    """Smooth surrogate of :func:`spectral_efficiency` (differentiable CRRM).
+
+    The hard chain is a staircase: SE jumps by ``eff(i) - eff(i-1)`` each
+    time the SINR crosses ``CQI_SINR_THRESHOLDS_DB[i-1]``.  The surrogate
+    replaces every step with a sigmoid of slope ``sharpness_per_db`` (per
+    dB), so the function is C-infinity, monotone, agrees with the hard
+    staircase at plateau centres, and its gradient w.r.t. SINR (hence
+    w.r.t. upstream powers) is finite everywhere -- including below the
+    CQI-1 cutoff, where the hard chain is identically zero.  As
+    ``sharpness_per_db`` -> inf it converges pointwise to the staircase.
+    """
+    levels = jnp.where(jnp.arange(16) > 0,
+                       mcs_to_efficiency(cqi_to_mcs(jnp.arange(16))), 0.0)
+    deltas = levels[1:] - levels[:-1]                        # (15,)
+    g_db = sinr_to_db(sinr_linear)
+    steps = jax.nn.sigmoid(
+        sharpness_per_db * (g_db[..., None] - CQI_SINR_THRESHOLDS_DB))
+    return jnp.sum(deltas * steps, axis=-1)
 
 
 def shannon_capacity(sinr_linear, bandwidth_hz, n_tx=1, n_rx=1):

@@ -288,6 +288,86 @@ def se_chain(cfg: RadioConfig, gamma):
 
 
 # ---------------------------------------------------------------------------
+# differentiable relaxations (DESIGN.md §RL-and-differentiability)
+# ---------------------------------------------------------------------------
+class RelaxConfig(NamedTuple):
+    """Trace-time flags selecting soft relaxations of the MAC chain.
+
+    The forward chain has three non-differentiable points: argmax
+    attachment, the CQI quantisation staircase, and the max_cqi
+    scheduler's winner-take-all.  Each gets an independently flag-gated
+    relaxation; ``relax=None`` everywhere compiles the *exact* legacy
+    program (trace-time switch, bitwise pin in tests/test_rl.py).  A
+    NamedTuple of hashable scalars, so it rides jit static arguments and
+    the ``episode_fns_for`` cache key like :class:`RadioConfig`.
+
+    * ``soft_attach`` -- replace argmax attachment in the SINR chain by a
+      temperature-``attach_tau`` softmax over per-cell wideband RSRP (in
+      log domain, so the temperature is scale-free).  The *scheduling*
+      attachment stays the hard argmax (an i32 index must index arrays);
+      only the wanted/interference split softens, which is where the
+      gradient w.r.t. per-cell powers flows.
+    * ``cqi_mode`` -- ``"soft"``: SE from
+      :func:`phy.soft_spectral_efficiency` (a C-inf sigmoid-staircase;
+      the mode finite-difference checks validate); ``"ste"``:
+      straight-through -- hard SE forward, soft-surrogate gradient
+      (``soft + stop_gradient(hard - soft)``); ``"hard"``: quantised
+      staircase (zero gradient almost everywhere).
+    * ``soft_sched`` -- max_cqi's winner-take-all becomes a
+      temperature-``sched_tau`` softmax share over each cell's active
+      UEs (pf/rr are unaffected: pf is already smooth, rr is
+      CQI-independent).
+    """
+
+    soft_attach: bool = True
+    attach_tau: float = 0.1       # log-RSRP softmax temperature
+    cqi_mode: str = "soft"        # "soft" | "ste" | "hard"
+    se_sharpness: float = 2.0     # sigmoid slope of the soft staircase, /dB
+    soft_sched: bool = True
+    sched_tau: float = 1.0        # SE-softmax temperature (bits/s/Hz scale)
+
+
+def soft_attach_sinr(R, meas, tau: float, noise_w: float):
+    """Soft wanted/interference split: gamma under softmax attachment.
+
+    ``meas`` is the (n_ue, n_cell) wideband association measurement (the
+    same tensor the hard argmax reads).  Attachment weights are
+    ``softmax(log meas / tau)`` per UE; the wanted power is the weighted
+    combination of per-cell RSRP rows and everything else interferes:
+
+        w[i, k] = sum_j p_ij R[i, j, k],   u[i, k] = sum_j R[i, j, k] - w
+
+    As ``tau -> 0`` the weights collapse onto the argmax cell and this
+    reduces to :func:`sinr`.  Differentiable w.r.t. ``R`` *and* ``meas``
+    (so power changes can re-rank cells with a smooth effect).
+    """
+    logits = jnp.log(jnp.maximum(meas, 1e-30)) / tau
+    p = jax.nn.softmax(logits, axis=1)                     # (n_ue, n_cell)
+    w = jnp.einsum("uc,ucf->uf", p, R)
+    u = R.sum(axis=1) - w
+    return sinr_from_wu(w, u, noise_w)
+
+
+def se_chain_relaxed(cfg: RadioConfig, gamma, relax: "RelaxConfig | None"):
+    """(se, cqi): :func:`se_chain` with the CQI staircase optionally relaxed.
+
+    ``relax=None`` / ``cqi_mode="hard"`` is byte-for-byte :func:`se_chain`.
+    The reported ``cqi`` stays hard-quantised i32 in every mode (consumers
+    index tables with it); only the SE value softens.
+    """
+    if relax is None or relax.cqi_mode == "hard":
+        return se_chain(cfg, gamma)
+    if cfg.cqi_wideband and cfg.n_rb_subbands > 1:
+        gamma = pool_report(gamma, cfg.n_rb_subbands, cfg.eesm_beta)
+    cqi = quantize_cqi(gamma)
+    soft = phy.soft_spectral_efficiency(gamma, relax.se_sharpness)
+    if relax.cqi_mode == "ste":
+        hard = se_of(mcs_of(cqi), cqi)
+        return soft + jax.lax.stop_gradient(hard - soft), cqi
+    return soft, cqi
+
+
+# ---------------------------------------------------------------------------
 # THE dirtiness convention (DESIGN.md §Smart-update-in-scan)
 # ---------------------------------------------------------------------------
 # Both smart-update surfaces -- the host-driven graph (core/graph.py row
