@@ -46,6 +46,7 @@ def _reruns():
         "sharded_episode": pb.sharded_episode,
         "smart_update_scan": pb.smart_update_scan,
         "twin_serve": pb.twin_serve,
+        "million_episode": pb.million_episode,
         "rl_learning": pb.rl_learning,
     }
 

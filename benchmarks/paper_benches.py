@@ -866,7 +866,121 @@ def rl_learning():
     return "rl_learning_uplift", us_per_env_step, uplift
 
 
+# -- million-UE episodes (ISSUE 9): the scale ceiling of the scan engine ------
+#: the incremental episode at the equivalence scale (dense is still feasible
+#: there) must beat the dense recompute by this factor; the headline 1M-UE
+#: run is incremental-only (a dense 1M x 127 chain materialises the O(N x M)
+#: matrices the incremental path exists to avoid).
+MILLION_MIN_SPEEDUP = 2.0
+#: smoke shapes (the ISSUE's reduced --smoke recipe, 50k x 57) narrow the
+#: gap with dispatch overhead; the incremental path must still win.
+MILLION_MIN_SPEEDUP_SMOKE = 1.05
+
+
+def million_episode(n_ues=1_000_000, n_cells=127, n_tti=5,
+                    eq_ues=100_000, frac=0.10):
+    """Million-UE episodes (ISSUE 9 tentpole): per-TTI cost of the
+    incremental engine at 1M UEs x 127 cells, its dense-vs-incremental
+    speed-up and 1e-5 equivalence at the feasible comparison scale
+    (100k x 127, where the dense chain still fits), and the donated-state
+    rollout (``rollout_donated``) with a CompileCounter no-retrace gate.
+    ``inc_backend="auto"`` routes dirty rows through the fused Pallas
+    kernel on TPU and the XLA row recompute on CPU hosts.
+    Seeds/updates ``benchmarks/BENCH_million.json`` (full mode only);
+    smoke runs the reduced 50k x 57 recipe and gates the speed-up."""
+    from repro.obs.profile import CompileCounter
+
+    if SMOKE:
+        n_ues, n_cells = 50_000, 57
+        eq_ues = n_ues
+    gate = MILLION_MIN_SPEEDUP_SMOKE if SMOKE else MILLION_MIN_SPEEDUP
+    # full-buffer pf + 10% window movers: the smart_update_scan regime at
+    # the scale ceiling -- the MAC floor is O(n_ue log n_ue), so the gated
+    # ratio isolates the radio-chain recompute the dirty-row path elides
+    kw = dict(n_cells=n_cells, n_sectors=1, seed=3,
+              pathloss_model_name="UMa", power_W=10.0,
+              scheduler_policy="pf", fairness_p=0.5,
+              mobility_step_m=20.0, mobility_move_frac=frac)
+    key = jax.random.PRNGKey(0)
+    reps = 3
+
+    def run(n, mode):
+        """us/TTI via the donated rollout, threading the consumed state."""
+        sim = CRRM(CRRM_parameters(n_ues=n, radio_mode=mode, **kw))
+        fns = sim.episode_fns(
+            inc_backend="auto" if mode == "incremental" else None)
+        # fresh key per run: donation consumes every state buffer,
+        # including the embedded PRNG key -- a shared key array would be
+        # deleted for the next caller
+        static = sim.episode_static()
+        state = sim.init_episode_state(jax.random.PRNGKey(0))
+        state, out = fns.rollout_donated(static, state, n_tti)  # compile
+        jax.block_until_ready((state, out))
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            with CompileCounter() as c:
+                state, out = fns.rollout_donated(static, state, n_tti)
+                jax.block_until_ready((state, out))
+            best = min(best, time.perf_counter() - t0)
+            if c.supported:
+                assert c.count == 0, (
+                    f"donated {mode} rollout retraced ({c.count} compiles) "
+                    f"-- donation must reuse the one compiled program")
+        return best / n_tti * 1e6
+
+    def run_pair(n):
+        """Dense-vs-incremental trajectories (undonated: reps need the
+        same initial state) at a scale where dense is feasible."""
+        outs = {}
+        for mode in ("dense", "incremental"):
+            sim = CRRM(CRRM_parameters(n_ues=n, radio_mode=mode, **kw))
+            fns = sim.episode_fns(
+                inc_backend="auto" if mode == "incremental" else None)
+            static = sim.episode_static()
+            _, t = fns.rollout(static, sim.init_episode_state(key), n_tti)
+            outs[mode] = np.asarray(t)
+        rel = float(np.abs(outs["incremental"] - outs["dense"]).max()
+                    / max(np.abs(outs["dense"]).max(), 1.0))
+        return rel
+
+    rel = run_pair(eq_ues)
+    assert rel < 1e-5, (
+        f"incremental trajectory deviates from dense at {eq_ues} UEs: "
+        f"{rel:.3e}")
+    us_dense_eq = run(eq_ues, "dense")
+    us_inc_eq = run(eq_ues, "incremental")
+    speedup = us_dense_eq / us_inc_eq
+    print(f"# million_episode: {eq_ues} UEs x {n_cells} cells x {n_tti} "
+          f"TTIs: dense {us_dense_eq:.1f} us/TTI, incremental "
+          f"{us_inc_eq:.1f} us/TTI -> x{speedup:.2f} (gate {gate}x), "
+          f"max rel err {rel:.2e}")
+    assert speedup > gate, (
+        f"incremental episode only x{speedup:.2f} vs dense at {eq_ues} "
+        f"UEs (gate {gate}x)")
+    if SMOKE:
+        return "million_episode_speedup", us_inc_eq, speedup
+
+    # the headline: a full million-UE incremental episode, end to end
+    us_inc_1m = run(n_ues, "incremental")
+    print(f"# million_episode: {n_ues} UEs x {n_cells} cells x {n_tti} "
+          f"TTIs incremental: {us_inc_1m:.1f} us/TTI "
+          f"({us_inc_1m / 1e3:.1f} ms/TTI)")
+    _write_record("BENCH_million.json", {
+        "bench": "million_episode", "n_ues": n_ues, "n_cells": n_cells,
+        "n_tti": n_tti, "dirty_frac": frac, "eq_n_ues": eq_ues,
+        "us_per_tti_dense_eq": round(us_dense_eq, 2),
+        "us_per_tti_incremental_eq": round(us_inc_eq, 2),
+        "us_per_tti_incremental_million": round(us_inc_1m, 2),
+        "incremental_speedup": round(speedup, 3),
+        "max_rel_err": rel,
+        "gated_metric": "incremental_speedup",
+        "gate_direction": "min", "gate": MILLION_MIN_SPEEDUP,
+        "smoke_gate": MILLION_MIN_SPEEDUP_SMOKE})
+    return "million_episode_us_per_tti", us_inc_1m, speedup
+
+
 ALL = [fig2_pathloss_throughput, fig3_sectors, fig4_fairness,
        fig5_ppp_validation, tab_smart_update, tab_mobility_sweep,
        kernel_fused_sinr, mac_episode, env_episode, sharded_episode,
-       smart_update_scan, twin_serve, rl_learning]
+       smart_update_scan, twin_serve, million_episode, rl_learning]

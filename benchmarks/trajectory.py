@@ -146,10 +146,11 @@ def render_table(bench_dir: str = BENCH_DIR) -> str:
         direction = rec.get("gate_direction", "max")
         healthy = "<=" if direction == "max" else ">="
         hist = metric_history(path)
-        if hist and abs(hist[-1][2] - cur) > 1e-12:
+        if not hist or abs(hist[-1][2] - cur) > 1e-12:
+            # freshly seeded (no committed history yet) or re-seeded since
+            # the last commit: the worktree value is part of the trajectory
             hist.append(("worktree", "*", cur))
-        traj = (" -> ".join(f"{_fmt(v)} ({d})" for _, d, v in hist)
-                or _fmt(cur))
+        traj = " -> ".join(f"{_fmt(v)} ({d})" for _, d, v in hist)
         lines.append(f"| {name} | `{metric}` | {healthy} | "
                      f"{_fmt(float(rec.get('gate', float('nan'))))} | "
                      f"{traj} | **{_fmt(cur)}** |")

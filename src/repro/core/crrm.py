@@ -318,7 +318,8 @@ class CRRM:
 
     def episode_fns(self, mobility_step_m=None, per_tti_fading: bool = False,
                     use_harq=None, mesh=None, ue_axis=("ue",),
-                    radio_mode=None, mobility_move_frac=None,
+                    cell_axis=None, radio_mode=None,
+                    mobility_move_frac=None, inc_backend=None,
                     telemetry: bool = False, churn=None, relax=None):
         """The pure ``(step, rollout)`` episode functions for this
         simulator's topology and MAC parameters (``EpisodeFns``), cached
@@ -326,11 +327,17 @@ class CRRM:
         vmap-compatible: N parallel episodes = ``vmap`` over the state
         (see ``repro.env.CrrmEnv``).  ``mesh`` shard_maps the rollout over
         the UE axis of a device mesh (``ue_axis`` names the mesh axes) for
-        >100k-UE episodes -- see DESIGN.md §Radio-fns.
+        >100k-UE episodes; ``cell_axis`` additionally shards the cell
+        dimension (a UE x cell mesh) so the per-cell radio leaves scale
+        past a single device -- see DESIGN.md §Radio-fns and
+        §Million-UE-scaling.
         ``radio_mode="incremental"`` recomputes only dirty UE rows of the
         radio chain inside the scan and ``mobility_move_frac`` bounds the
         per-TTI dirtiness (DESIGN.md §Smart-update-in-scan); both default
-        to the corresponding ``CRRM_parameters`` fields.  ``telemetry``
+        to the corresponding ``CRRM_parameters`` fields.  ``inc_backend``
+        selects the dirty-row compute path: ``"xla"`` (default),
+        ``"pallas"`` (the fused VMEM-resident kernel; raises if the
+        configuration cannot be expressed) or ``"auto"``.  ``telemetry``
         adds a per-TTI KPI pytree to both functions' returns
         (DESIGN.md §Observability); ``churn`` a
         ``sim.mobility.ChurnConfig`` enabling the birth-death UE process
@@ -343,8 +350,10 @@ class CRRM:
         return mac_engine.episode_fns_for(
             self, mobility_step_m=mobility_step_m,
             per_tti_fading=per_tti_fading, use_harq=use_harq,
-            mesh=mesh, ue_axis=ue_axis, radio_mode=radio_mode,
-            mobility_move_frac=mobility_move_frac, telemetry=telemetry,
+            mesh=mesh, ue_axis=ue_axis, cell_axis=cell_axis,
+            radio_mode=radio_mode,
+            mobility_move_frac=mobility_move_frac,
+            inc_backend=inc_backend, telemetry=telemetry,
             churn=churn, relax=relax)
 
     def sync_episode_state(self, state, positions: bool = False) -> None:

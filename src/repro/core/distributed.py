@@ -19,6 +19,12 @@ Two implementations (both shard UEs over the ``data`` mesh axes and cells over
 
 All functions are mesh-agnostic: pass the relevant UE/cell axis names, which
 may be tuples (e.g. UE axis ("pod", "data") on the multi-pod mesh).
+
+The scan engine's UE x cell episode mesh (``episode_fns(cell_axis=...)``,
+DESIGN.md §Million-UE-scaling) reuses :func:`_global_best` and
+:func:`_axis_index` for its cross-cell-shard attachment and owning-shard
+serving-row gathers, so the tie-break contract (lowest global cell index,
+bitwise-equal to single-host ``jnp.argmax``) is defined once, here.
 """
 from __future__ import annotations
 

@@ -14,13 +14,20 @@ need:
 so the (N, M) distance/gain/RSRP matrices never touch HBM.  Tie-break matches
 ``jnp.argmax`` (lowest cell index wins).
 
+Per-link fading streams through the same tile pipeline: a ``fading`` tile --
+``(bn, bm)`` wideband or ``(bn, bm, K)`` per-RB -- multiplies the gain tile
+exactly as ``radio.apply_fading`` does, and ``attach_on_mean`` reproduces the
+``attach_ignores_fading`` regime by ranking servers on the *unfaded* RSRP row
+sum while still reporting the faded serving row.
+
 Grid: (UE tiles, cell tiles); the cell dimension is `arbitrary` (sequential)
 because every step read-modify-writes the same output block.  The pathloss
 strategy is traced *into* the kernel as pure jnp (any 38.901 model works).
 
 VMEM per step (defaults bn=256, bm=512, K<=8): the (bn, bm) gain tile +
-(bn, bm, K) RSRP tile ~= 0.5 + 4 MiB -- inside budget; the MXU computes the
-distance contraction as in pairwise_dist.
+(bn, bm, K) RSRP tile + optional (bn, bm[, K]) fading tile ~= 0.5 + 4 + 4 MiB
+-- inside budget; the MXU computes the distance contraction as in
+pairwise_dist.
 """
 from __future__ import annotations
 
@@ -39,9 +46,16 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) or \
 _NEG = -3.4e38  # python float: jnp constants would be captured consts
 
 
-def _make_kernel(pathgain_fn, n_sectors: int, bm: int, mxu: bool = True):
-    def kernel(u_ref, c_ref, p_ref, bore_ref,
-               total_ref, bval_ref, barg_ref, wbest_ref):
+def _make_kernel(pathgain_fn, n_sectors: int, bm: int, mxu: bool = True,
+                 fading: str | None = None, attach_on_mean: bool = False):
+    def kernel(*refs):
+        if fading is None:
+            (u_ref, c_ref, p_ref, bore_ref,
+             total_ref, bval_ref, barg_ref, wbest_ref) = refs
+            fad_ref = None
+        else:
+            (u_ref, c_ref, p_ref, bore_ref, fad_ref,
+             total_ref, bval_ref, barg_ref, wbest_ref) = refs
         j = pl.program_id(1)
 
         @pl.when(j == 0)
@@ -68,12 +82,14 @@ def _make_kernel(pathgain_fn, n_sectors: int, bm: int, mxu: bool = True):
             d3d = jnp.sqrt(sq3)
             d2d = jnp.sqrt(jnp.maximum(sq3 - dz2, 0.0))
         else:
-            # VPU broadcast-difference: exact-as-reference, no MXU
-            dxy = u[:, None, :2] - c[None, :, :2]
-            dzz = u[:, None, 2] - c[None, :, 2]
-            sq2 = jnp.sum(dxy * dxy, axis=2)
-            d2d = jnp.sqrt(sq2)
-            d3d = jnp.sqrt(sq2 + dzz * dzz)
+            # VPU broadcast-difference mirroring radio.compute_distances
+            # operation for operation (d3d built FROM d2d, not from the raw
+            # squared sum) so the kernel is bit-identical to the reference
+            dx = u[:, None, 0] - c[None, :, 0]
+            dy = u[:, None, 1] - c[None, :, 1]
+            dz = u[:, None, 2] - c[None, :, 2]
+            d2d = jnp.sqrt(dx * dx + dy * dy)
+            d3d = jnp.sqrt(d2d * d2d + dz * dz)
 
         # -- G: pluggable pathloss strategy (traced jnp) -------------------
         g = pathgain_fn(d2d, d3d, c[:, 2][None, :], u[:, 2][:, None])
@@ -89,11 +105,22 @@ def _make_kernel(pathgain_fn, n_sectors: int, bm: int, mxu: bool = True):
             g = g * jnp.power(10.0, -0.1 * att)
 
         # -- RSRP + online reductions ---------------------------------------
-        r = g[:, :, None] * p[None, :, :]            # (bn, bm, K)
+        if fading is None:
+            r = g[:, :, None] * p[None, :, :]        # (bn, bm, K)
+            meas = r.sum(axis=2)
+        elif fading == "wide":
+            gf = g * fad_ref[...]                    # apply_fading, 2-D
+            r = gf[:, :, None] * p[None, :, :]
+            meas = (g[:, :, None] * p[None, :, :]).sum(axis=2) \
+                if attach_on_mean else r.sum(axis=2)
+        else:                                        # "rb": per-RB fading
+            g3 = g[:, :, None] * fad_ref[...]        # apply_fading, 3-D
+            r = g3 * p[None, :, :]
+            meas = (g[:, :, None] * p[None, :, :]).sum(axis=2) \
+                if attach_on_mean else r.sum(axis=2)
         total_ref[...] += r.sum(axis=1)
-        wide = g * p.sum(axis=1)[None, :]            # sum_k p_jk * g_ij
-        t_max = wide.max(axis=1)
-        t_arg = jnp.argmax(wide, axis=1)
+        t_max = meas.max(axis=1)
+        t_arg = jnp.argmax(meas, axis=1)
         t_w = jnp.take_along_axis(r, t_arg[:, None, None], axis=1)[:, 0, :]
         prev = bval_ref[...][:, 0]
         better = t_max > prev
@@ -108,19 +135,46 @@ def _make_kernel(pathgain_fn, n_sectors: int, bm: int, mxu: bool = True):
 
 @partial(jax.jit,
          static_argnames=("pathgain_fn", "n_sectors", "bn", "bm", "interpret",
-                          "mxu"))
-def fused_sinr_accumulate(U, C, Pw, boresight, *, pathgain_fn,
+                          "mxu", "attach_on_mean"))
+def fused_sinr_accumulate(U, C, Pw, boresight, fad=None, *, pathgain_fn,
                           n_sectors: int = 1, bn: int = 256, bm: int = 512,
-                          interpret: bool = False, mxu: bool = False):
+                          interpret: bool = False, mxu: bool = False,
+                          attach_on_mean: bool = False):
     """Run the fused accumulator.  Returns (total, best_val, best_idx, w_best).
 
-    Shapes: U (N, 3), C (M, 3), Pw (M, K), boresight (M, 1).
-    N % bn == 0 and M % bm == 0 (ops.py pads; padded cells need power 0).
+    Shapes: U (N, 3), C (M, 3), Pw (M, K), boresight (M, 1), fad None /
+    (N, M) wideband / (N, M, K) per-RB.  N % bn == 0 and M % bm == 0
+    (ops.py pads; padded cells need power 0 and padded fading 0).
+    ``attach_on_mean`` ranks servers on the unfaded RSRP row sum
+    (``attach_ignores_fading``); it requires ``fad``.
     """
     n, m, k = U.shape[0], C.shape[0], Pw.shape[1]
     assert n % bn == 0 and m % bm == 0, (n, m, bn, bm)
+    if fad is None:
+        fading = None
+        assert not attach_on_mean, "attach_on_mean requires a fading tensor"
+    elif fad.ndim == 2:
+        fading = "wide"
+        assert fad.shape == (n, m), (fad.shape, n, m)
+    else:
+        fading = "rb"
+        assert fad.shape == (n, m, k), (fad.shape, n, m, k)
     grid = (n // bn, m // bm)
-    kernel = _make_kernel(pathgain_fn, n_sectors, bm, mxu)
+    kernel = _make_kernel(pathgain_fn, n_sectors, bm, mxu, fading,
+                          attach_on_mean)
+    in_specs = [
+        pl.BlockSpec((bn, 3), lambda i, j: (i, 0)),
+        pl.BlockSpec((bm, 3), lambda i, j: (j, 0)),
+        pl.BlockSpec((bm, k), lambda i, j: (j, 0)),
+        pl.BlockSpec((bm, 1), lambda i, j: (j, 0)),
+    ]
+    operands = [U, C, Pw, boresight]
+    if fading == "wide":
+        in_specs.append(pl.BlockSpec((bn, bm), lambda i, j: (i, j)))
+        operands.append(fad)
+    elif fading == "rb":
+        in_specs.append(pl.BlockSpec((bn, bm, k), lambda i, j: (i, j, 0)))
+        operands.append(fad)
     out_shape = [
         jax.ShapeDtypeStruct((n, k), jnp.float32),   # total
         jax.ShapeDtypeStruct((n, 1), jnp.float32),   # best_val
@@ -130,12 +184,7 @@ def fused_sinr_accumulate(U, C, Pw, boresight, *, pathgain_fn,
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bn, 3), lambda i, j: (i, 0)),
-            pl.BlockSpec((bm, 3), lambda i, j: (j, 0)),
-            pl.BlockSpec((bm, k), lambda i, j: (j, 0)),
-            pl.BlockSpec((bm, 1), lambda i, j: (j, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((bn, k), lambda i, j: (i, 0)),
             pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
@@ -146,4 +195,4 @@ def fused_sinr_accumulate(U, C, Pw, boresight, *, pathgain_fn,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(U, C, Pw, boresight)
+    )(*operands)

@@ -20,12 +20,18 @@ def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
 
 
-def _pad_rows(x, mult, fill=0.0):
-    pad = (-x.shape[0]) % mult
+def _pad_axis(x, mult, axis=0, fill=0.0):
+    pad = (-x.shape[axis]) % mult
     if pad == 0:
         return x
+    shape = list(x.shape)
+    shape[axis] = pad
     return jnp.concatenate(
-        [x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)], axis=0)
+        [x, jnp.full(tuple(shape), fill, x.dtype)], axis=axis)
+
+
+def _pad_rows(x, mult, fill=0.0):
+    return _pad_axis(x, mult, axis=0, fill=fill)
 
 
 def pairwise_dist(U, C, *, bn: int = 256, bm: int = 512, interpret=None):
@@ -42,6 +48,7 @@ def pairwise_dist(U, C, *, bn: int = 256, bm: int = 512, interpret=None):
 
 
 def fused_sinr(U, C, Pw, *, pathgain_fn, noise_w: float, boresight=None,
+               fad=None, attach_on_mean: bool = False,
                n_sectors: int = 1, bn: int = 256, bm: int = 512,
                interpret=None, mxu: bool = False):
     """Fused D->G->RSRP->w/u->SINR pipeline.
@@ -49,6 +56,14 @@ def fused_sinr(U, C, Pw, *, pathgain_fn, noise_w: float, boresight=None,
     Returns (gamma, a, w, u) exactly like ``ref.fused_sinr_ref`` but with
     O(N) HBM traffic.  Padded cells get zero power and a far position, so
     they can never win the attachment argmax or contribute interference.
+
+    ``fad`` streams per-link fading through the tile pipeline -- ``(N, M)``
+    wideband or ``(N, M, K)`` per-RB, multiplied onto the gain tile exactly
+    as ``radio.apply_fading``.  ``attach_on_mean`` attaches on the unfaded
+    RSRP row sum (the ``attach_ignores_fading`` regime).  The same entry
+    point serves the dirty-row incremental backend: callers gather the
+    dirty UE slab (rows of U and fad) and scatter the returned rows back
+    (``radio.radio_update_rows_fused``).
     """
     if interpret is None:
         interpret = _on_cpu()
@@ -62,9 +77,12 @@ def fused_sinr(U, C, Pw, *, pathgain_fn, noise_w: float, boresight=None,
         bore = jnp.zeros((Cp.shape[0], 1), jnp.float32)
     else:
         bore = _pad_rows(boresight.reshape(-1, 1), bm)
+    if fad is not None:
+        fad = _pad_axis(_pad_axis(fad, bn, axis=0), bm, axis=1)
     total, bval, barg, wbest = _fused.fused_sinr_accumulate(
-        Up, Cp, Pp, bore, pathgain_fn=pathgain_fn, n_sectors=n_sectors,
-        bn=bn, bm=bm, interpret=interpret, mxu=mxu)
+        Up, Cp, Pp, bore, fad, pathgain_fn=pathgain_fn, n_sectors=n_sectors,
+        bn=bn, bm=bm, interpret=interpret, mxu=mxu,
+        attach_on_mean=attach_on_mean)
     total, barg, wbest = total[:n], barg[:n, 0], wbest[:n]
     u = total - wbest
     gamma = wbest / (noise_w + u)

@@ -96,7 +96,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as PSpec
 
-from repro.core.distributed import _axis_index, _pvary, _shard_map
+from repro.core.distributed import (_axis_index, _global_best, _pvary,
+                                    _shard_map)
 from repro.mac import scheduler as mac_sched
 from repro.obs.telemetry import Telemetry, tti_telemetry
 from repro.sim import deploy, mobility, radio
@@ -174,10 +175,22 @@ class EpisodeFns(NamedTuple):
     ``rollout -> (state, tput, telem)``.  Telemetry rides the scan as an
     *output*, never a carry, and is computed purely from intermediates the
     step already produced, so the trajectory is bit-identical either way.
+
+    ``rollout_donated`` is the same rollout compiled with the *state*
+    buffers donated (``jit(..., donate_argnums=)``): at million-UE scale
+    the :class:`EpisodeState` carry is gigabytes, and donation lets XLA
+    reuse the input buffers for the output state instead of holding both
+    alive across the scan.  Same program, same jit cache discipline (the
+    CompileCounter no-retrace gate covers it); the one behavioural
+    difference is that the passed ``state`` is consumed -- callers that
+    re-time the same state across reps (the benches' default) must keep
+    using ``rollout``, and chained callers thread the returned state:
+    ``state, tput = fns.rollout_donated(static, state, n)``.
     """
 
     step: Any
     rollout: Any
+    rollout_donated: Any = None
 
 
 def harq_fail_prob(bler, comb_gain_db, retx):
@@ -277,8 +290,8 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
                      radio_cfg: "radio.RadioConfig", traffic_step, *,
                      mobility_step_m=None, per_tti_fading: bool = False,
                      use_harq=None, mesh=None, ue_axis=("ue",),
-                     radio_mode: str = "dense",
-                     mobility_move_frac=None,
+                     cell_axis=None, radio_mode: str = "dense",
+                     mobility_move_frac=None, inc_backend=None,
                      telemetry: bool = False, churn=None,
                      relax=None) -> EpisodeFns:
     """Build the pure ``step``/``rollout`` functions for one configuration.
@@ -295,6 +308,32 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
     every per-UE array sharded over the ``ue_axis`` mesh axes (``n_ues``
     must divide evenly).  Callers pass *global* arrays exactly as in the
     single-device case; sharding is an execution detail.
+
+    ``cell_axis`` (requires ``mesh``) additionally shards the *cell*
+    dimension over the named mesh axes -- the UE×cell mesh of DESIGN.md
+    §Million-UE-scaling.  ``RadioStatic``-shaped leaves (``C``/``P``/
+    ``bore`` and the cell columns of ``fad``) become per-shard blocks of
+    ``n_cells // m_shards`` cells; the dense interference total psums
+    across cell shards, attachment and A3 run through the cross-shard
+    argmax (``core.distributed._global_best`` -- lowest global index
+    wins ties, exactly ``jnp.argmax``), and the serving row is an
+    owning-shard gather + psum.  Per-UE leaves stay replicated along the
+    cell axes, so the scheduler's per-cell reductions (global
+    ``n_cells``-sized bins keyed by the global attachment) are untouched.
+    Equivalence contract vs single device: attachment/serving/positions
+    bitwise, float outputs to 1e-5 (the psum reorders the per-cell
+    interference sum) -- the same contract the UE-only mesh carries for
+    pf (tests/test_smart_update_scan.py, subprocess case).
+
+    ``inc_backend`` routes the incremental mode's dirty-row recompute:
+    ``None``/``"xla"`` is the legacy ``radio.radio_update_rows``;
+    ``"pallas"`` streams the gathered dirty slab through the fused
+    kernel (``radio.radio_update_rows_fused`` -- VMEM-resident
+    gain/RSRP, interpret mode on CPU) and raises where the kernel
+    cannot express the regime (handover tables, cell-sharded meshes,
+    non-stock sector patterns); ``"auto"`` picks Pallas exactly when
+    expressible and a real accelerator passed the capability probe,
+    else XLA.
 
     The trace-time feature switches (mobility / per-TTI fading / HARQ /
     handover / per-RB grid / ``radio_mode`` / ``mobility_move_frac``) are
@@ -441,6 +480,46 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
                 f"shards of mesh axes {ue_axes}")
     else:
         ue_axes, n_shards = None, 1
+        if cell_axis is not None:
+            raise ValueError("cell_axis= requires mesh= (the cell dimension "
+                             "shards over named mesh axes)")
+    if cell_axis is not None:
+        cell_axes = ((cell_axis,) if isinstance(cell_axis, str)
+                     else tuple(cell_axis))
+        m_shards = 1
+        for ax in cell_axes:
+            m_shards *= mesh.shape[ax]
+        if n_cells % m_shards:
+            raise ValueError(
+                f"n_cells={n_cells} must divide evenly over the {m_shards} "
+                f"shards of mesh axes {cell_axes}")
+    else:
+        cell_axes, m_shards = None, 1
+    m_loc = n_cells // m_shards      # cells owned by one shard
+
+    # -- incremental dirty-row backend (trace-time route) ------------------
+    if inc_backend not in (None, "auto", "xla", "pallas"):
+        raise ValueError(f"inc_backend must be None, 'auto', 'xla' or "
+                         f"'pallas'; got {inc_backend!r}")
+    inc_fused = False
+    if incremental and inc_backend in ("auto", "pallas"):
+        if ho_on:
+            reason = ("handover regimes carry per-candidate-cell tables "
+                      "(se_all) the streaming kernel never materialises")
+        elif cell_axes is not None:
+            reason = ("the fused kernel's attachment argmax spans all "
+                      "cells, but a cell-sharded shard holds only its "
+                      "cell block")
+        else:
+            reason = radio.pallas_unsupported_reason(cfg, None)
+        if inc_backend == "pallas":
+            if reason is not None:
+                raise ValueError(
+                    f"inc_backend='pallas' cannot express this "
+                    f"configuration: {reason}")
+            inc_fused = True
+        else:
+            inc_fused = reason is None and radio.pallas_available()
 
     n_loc = n_ues // n_shards        # rows owned by one shard (= n_ues unsharded)
 
@@ -464,12 +543,74 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
     def unfaded_gain(U, C, bore):
         return radio.pathgains(cfg, U, C, bore)
 
+    def local_cols(x, axis=1):
+        """Slice a global-cell-axis array to this shard's cell block
+        (identity without cell sharding)."""
+        if cell_axes is None:
+            return x
+        return jax.lax.dynamic_slice_in_dim(
+            x, _axis_index(cell_axes) * m_loc, m_loc, axis=axis)
+
     def draw_fading(key):
-        """Fresh per-TTI fading (global draw, local slice when sharded)."""
-        return local_rows(radio.draw_fading(cfg, key, n_ues, n_cells))
+        """Fresh per-TTI fading (global draw, local row/col slice when
+        sharded -- shard (s, c) consumes exactly the block it would own
+        on a single device, which is what keeps the mesh bit-equivalent)."""
+        return local_cols(local_rows(
+            radio.draw_fading(cfg, key, n_ues, n_cells)))
 
     def faded_rsrp(G0, P, fad):
         return radio.rsrp(radio.apply_fading(G0, fad), P)
+
+    def attach(R_like):
+        """``radio.attachment`` on a (possibly cell-sharded) RSRP tensor:
+        the global argmax cell index, cross-shard via ``_global_best``
+        (lowest global index wins ties, exactly ``jnp.argmax``)."""
+        if cell_axes is None:
+            return radio.attachment(R_like)
+        meas = R_like.sum(axis=2)
+        _, a, _ = _global_best(meas.max(axis=1),
+                               meas.argmax(axis=1).astype(jnp.int32),
+                               m_loc, cell_axes)
+        return a
+
+    def cell_take_rows(X, a):
+        """Serving-cell row ``X[i, a_i, ...]`` under a *global* ``a``.
+
+        Cell-sharded: the owning shard gathers its local column, every
+        other shard contributes an exact zero, and a psum re-replicates
+        the row -- bitwise the single-device ``take_along_axis`` (zeros
+        add exactly).  Identity-shaped gather when unsharded.
+        """
+        if cell_axes is None:
+            sel = a.reshape((-1, 1) + (1,) * (X.ndim - 2))
+            return jnp.take_along_axis(X, sel, axis=1)[:, 0]
+        my = _axis_index(cell_axes)
+        col = jnp.clip(a - my * m_loc, 0, m_loc - 1)
+        sel = col.reshape((-1, 1) + (1,) * (X.ndim - 2))
+        rows = jnp.take_along_axis(X, sel, axis=1)[:, 0]
+        mine = (a >= my * m_loc) & (a < (my + 1) * m_loc)
+        mask = mine.reshape((-1,) + (1,) * (X.ndim - 2))
+        return jax.lax.psum(jnp.where(mask, rows, jnp.zeros_like(rows)),
+                            cell_axes)
+
+    def a3_step(a, ttt, meas_wb):
+        """:func:`a3_handover` on a (possibly cell-sharded) wideband
+        measurement matrix.  Serving value via owning-shard gather + psum
+        (exact), best neighbour via the cross-shard argmax -- the A3
+        decisions are bitwise the single-device ones."""
+        if cell_axes is None:
+            return a3_handover(a, ttt, meas_wb, hyst_db, ttt_tti)
+        serving = cell_take_rows(meas_wb[:, :, None], a)[:, 0]
+        best_val, best, _ = _global_best(
+            meas_wb.max(axis=1), meas_wb.argmax(axis=1).astype(a.dtype),
+            m_loc, cell_axes)
+        hyst = 10.0 ** (hyst_db / 10.0)
+        entered = (best_val > serving * hyst) & (best != a)
+        ttt = jnp.where(entered, ttt + 1, 0)
+        fire = ttt >= ttt_tti
+        a = jnp.where(fire, best, a)
+        ttt = jnp.where(fire, 0, ttt)
+        return a, ttt
 
     def sinr_chain(R, a, meas=None):
         """(se, cqi, a) for serving assignment ``a``.
@@ -480,11 +621,17 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
         hard argmax ranks); the returned ``a`` stays the hard i32 index
         either way -- schedulers gather with it.  ``relax=None`` is the
         bitwise legacy chain (``se_chain_relaxed`` degenerates to
-        ``se_chain``).
+        ``se_chain``).  Cell-sharded: owning-shard wanted gather + the
+        psummed interference total (1e-5-class float reorder, the
+        documented mesh contract).
         """
         if relax is not None and relax.soft_attach:
             m = meas if meas is not None else R.sum(axis=-1)
             gamma = radio.soft_attach_sinr(R, m, relax.attach_tau, noise_w)
+        elif cell_axes is not None:
+            w = cell_take_rows(R, a)
+            total = jax.lax.psum(R.sum(axis=1), cell_axes)
+            gamma = radio.sinr_from_wu(w, total - w, noise_w)
         else:
             gamma, _, _ = radio.sinr(R, a, noise_w)
         se, cqi = radio.se_chain_relaxed(cfg, gamma, relax)
@@ -493,10 +640,9 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
     def gather_serving(se_all, cqi_all, a):
         """(se, cqi) rows of the per-candidate-cell tables at serving
         ``a`` -- the two-gather handover read shared by the hoisted dense
-        tables and the incremental RadioState."""
-        sel = a[:, None, None]
-        return (jnp.take_along_axis(se_all, sel, axis=1)[:, 0],
-                jnp.take_along_axis(cqi_all, sel, axis=1)[:, 0])
+        tables and the incremental RadioState (owning-shard gather + psum
+        when the tables are cell-sharded)."""
+        return cell_take_rows(se_all, a), cell_take_rows(cqi_all, a)
 
     # -- incremental (smart-update-in-scan) helpers ------------------------
     def inc_fad(static):
@@ -515,7 +661,8 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
         P = static.P if action is None else action
         f = fad if fad is not None else inc_fad(static)
         return radio.radio_init(cfg, U, static.C, static.bore,
-                                f, P, with_tables=ho_on)
+                                f, P, with_tables=ho_on,
+                                cell_axis=cell_axes)
 
     def walk_displacements(k_mob):
         """This TTI's per-row displacement + the window start (local rows).
@@ -552,10 +699,11 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
         """One incremental TTI of the radio chain: move, patch, read.
 
         Only the moved rows re-run D→G→RSRP→SINR→CQI→SE
-        (``radio.radio_update_rows`` under THE dirtiness convention);
-        everything else is a carried value that a dense recompute would
-        reproduce bit-identically.  Returns the updated ``(U, rs)`` plus
-        the local dirty-row count (dead code unless telemetry is on).
+        (``radio.radio_update_rows`` -- or its fused-kernel twin under
+        ``inc_backend`` -- under THE dirtiness convention); everything
+        else is a carried value that a dense recompute would reproduce
+        bit-identically.  Returns the updated ``(U, rs)`` plus the local
+        dirty-row count (dead code unless telemetry is on).
         """
         n_dirty = jnp.int32(0)
         if mobility_step_m is not None:
@@ -566,8 +714,13 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
                 n_dirty = jnp.int32(n_loc)
             else:
                 idx, n_dirty = window_dirty_indices(start)
-            rs = radio.radio_update_rows(cfg, rs, U, static.C, static.bore,
-                                         fad, P, idx)
+            if inc_fused:
+                rs = radio.radio_update_rows_fused(
+                    cfg, rs, U, static.C, static.bore, fad, P, idx)
+            else:
+                rs = radio.radio_update_rows(cfg, rs, U, static.C,
+                                             static.bore, fad, P, idx,
+                                             cell_axis=cell_axes)
         return U, rs, n_dirty
 
     def allocate(se, cqi, a, buf, avg, cursor, harq_pending, act, fair):
@@ -646,10 +799,11 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
             if not power_act:
                 R_mean = radio.rsrp(h["G"], static.P)
                 h["R_mean"] = R_mean
-                h["a"] = radio.attachment(R_mean) if attach_on_mean else None
+                h["a"] = attach(R_mean) if attach_on_mean else None
                 R_faded = faded_rsrp(h["G"], static.P, static.fad)
                 # A3 measures long-term RSRP iff association does (same
-                # convention as the dynamic paths' R_meas)
+                # convention as the dynamic paths' R_meas); cell-sharded
+                # it stays a local block -- a3_step gathers across shards
                 h["meas_wb"] = (R_mean if attach_on_mean
                                 else R_faded).sum(axis=-1)
                 if ho_on:
@@ -659,6 +813,8 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
                     # (n_ue, n_freq) instead of an (n_ue, n_cell, n_freq)
                     # reduction.
                     total = R_faded.sum(axis=1)
+                    if cell_axes is not None:
+                        total = jax.lax.psum(total, cell_axes)
                     gamma_all = R_faded / (
                         noise_w + (total[:, None, :] - R_faded))
                     se_all, cqi_all = radio.se_chain(cfg, gamma_all)
@@ -734,8 +890,7 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
                     a_srv = jnp.where(
                         born, jnp.argmax(r.meas, axis=1).astype(a_srv.dtype),
                         a_srv)
-                a_srv, ttt = a3_handover(a_srv, ttt, r.meas, hyst_db,
-                                         ttt_tti)
+                a_srv, ttt = a3_step(a_srv, ttt, r.meas)
                 a_use = a_srv
                 se, cqi = gather_serving(r.se_all, r.cqi_all, a_use)
             else:
@@ -753,16 +908,16 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
                    else (fad_c if fad_carried else static.fad))
             R = faded_rsrp(G0, P, fad)
             R_meas = radio.rsrp(G0, P) if attach_on_mean else R
-            a_inst = radio.attachment(R_meas)
+            a_inst = attach(R_meas)
         elif per_tti_fading or power_act:
             fad = draw_fading(k_fad) if per_tti_fading else static.fad
             R = faded_rsrp(h["G"], P, fad)
             if power_act:
                 R_meas = radio.rsrp(h["G"], P) if attach_on_mean else R
-                a_inst = radio.attachment(R_meas)
+                a_inst = attach(R_meas)
             else:
                 R_meas = h["R_mean"] if attach_on_mean else R
-                a_inst = h["a"] if attach_on_mean else radio.attachment(R)
+                a_inst = h["a"] if attach_on_mean else attach(R)
         else:
             R = R_meas = a_inst = None   # fully static radio chain
 
@@ -777,8 +932,7 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
                         born,
                         jnp.argmax(meas_wb, axis=1).astype(a_srv.dtype),
                         a_srv)
-                a_srv, ttt = a3_handover(a_srv, ttt, meas_wb, hyst_db,
-                                         ttt_tti)
+                a_srv, ttt = a3_step(a_srv, ttt, meas_wb)
                 a_use = a_srv
                 if R is not None:
                     se, cqi, _ = sinr_chain(R, a_use, meas=meas_wb)
@@ -884,19 +1038,25 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
                 return state, tput, telem
             return state, ys
 
-        return EpisodeFns(step=jax.jit(step),
-                          rollout=jax.jit(rollout, static_argnums=(2,)))
+        return EpisodeFns(
+            step=jax.jit(step),
+            rollout=jax.jit(rollout, static_argnums=(2,)),
+            rollout_donated=jax.jit(rollout, static_argnums=(2,),
+                                    donate_argnums=(1,)))
 
     # ------------------------------------------------------- mesh sharded
-    # pytree-structured PartitionSpecs: UE axes sharded, cells replicated
+    # pytree-structured PartitionSpecs: UE axes shard every per-UE leaf;
+    # cell axes (when named) shard the RadioStatic-shaped leaves, else the
+    # cells are replicated (cell_axes=None leaves the specs verbatim)
     ue = PSpec(ue_axes)
-    fad_spec = (PSpec(ue_axes, None, None)
+    mesh_axes = ue_axes if cell_axes is None else ue_axes + cell_axes
+    fad_spec = (PSpec(ue_axes, cell_axes, None)
                 if p.rayleigh_fading and p.n_rb_subbands > 1
-                else PSpec(ue_axes, None))
+                else PSpec(ue_axes, cell_axes))
     static_specs = EpisodeStatic(
         se=PSpec(ue_axes, None), cqi=PSpec(ue_axes, None), a=ue,
-        C=PSpec(None, None), P=PSpec(None, None), bore=PSpec(None),
-        fad=fad_spec)
+        C=PSpec(cell_axes, None), P=PSpec(cell_axes, None),
+        bore=PSpec(cell_axes), fad=fad_spec)
     state_specs = EpisodeState(
         U=PSpec(ue_axes, None), backlog=ue, pf_avg=ue, rr_cursor=PSpec(),
         key=PSpec(None), harq_bits=ue, harq_retx=ue, serving=ue, ttt=ue,
@@ -927,7 +1087,7 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
         they can leave the shard_map under a replicated out-spec.  No-ops
         on jax versions without varying-type tracking.
         """
-        fix = lambda x: jax.lax.pmax(x, ue_axes)
+        fix = lambda x: jax.lax.pmax(x, mesh_axes)
         return state._replace(rr_cursor=fix(state.rr_cursor),
                               key=fix(state.key), t=fix(state.t))
 
@@ -965,7 +1125,7 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
         def one(static, state, *extra):
             act, fp = split_extra(has_act, extra)
             state = jax.tree_util.tree_map(
-                lambda x: _pvary(x, ue_axes), state)
+                lambda x: _pvary(x, mesh_axes), state)
             h, rs0 = setup(static, state, act)
             state, tput, _, telem = tti_step(h, static, state, act, rs0, fp)
             if telemetry:
@@ -985,7 +1145,7 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
         def roll(static, state, *extra):
             act, fp = split_extra(has_act, extra)
             init = jax.tree_util.tree_map(
-                lambda x: _pvary(x, ue_axes), state)
+                lambda x: _pvary(x, mesh_axes), state)
             h, rs0 = setup(static, init, act)
 
             def body(carry, _):
@@ -1007,13 +1167,17 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
                     out_specs)
         return f(static, state, *extra_args)
 
-    return EpisodeFns(step=jax.jit(step),
-                      rollout=jax.jit(rollout, static_argnums=(2,)))
+    return EpisodeFns(
+        step=jax.jit(step),
+        rollout=jax.jit(rollout, static_argnums=(2,)),
+        rollout_donated=jax.jit(rollout, static_argnums=(2,),
+                                donate_argnums=(1,)))
 
 
 def episode_fns_for(sim, *, mobility_step_m=None, per_tti_fading=False,
                     use_harq=None, mesh=None, ue_axis=("ue",),
-                    radio_mode=None, mobility_move_frac=None,
+                    cell_axis=None, radio_mode=None,
+                    mobility_move_frac=None, inc_backend=None,
                     telemetry: bool = False, churn=None,
                     relax=None) -> EpisodeFns:
     """The :func:`make_episode_fns` bundle for ``sim``, cached on it.
@@ -1036,16 +1200,22 @@ def episode_fns_for(sim, *, mobility_step_m=None, per_tti_fading=False,
     if mobility_move_frac is None:
         mobility_move_frac = getattr(sim.params, "mobility_move_frac", None)
     ue_axis = (ue_axis,) if isinstance(ue_axis, str) else tuple(ue_axis)
+    if isinstance(cell_axis, str):
+        cell_axis = (cell_axis,)
+    elif cell_axis is not None:
+        cell_axis = tuple(cell_axis)
     cache_key = (mobility_step_m, per_tti_fading, use_harq, mesh, ue_axis,
-                 radio_mode, mobility_move_frac, telemetry, churn, relax)
+                 cell_axis, radio_mode, mobility_move_frac, inc_backend,
+                 telemetry, churn, relax)
     cache = sim.__dict__.setdefault("_episode_fns_cache", {})
     if cache_key not in cache:
         cache[cache_key] = make_episode_fns(
             sim.params, sim.n_ues, sim.n_cells, sim.radio_config(),
             sim._traffic_step, mobility_step_m=mobility_step_m,
             per_tti_fading=per_tti_fading, use_harq=use_harq,
-            mesh=mesh, ue_axis=ue_axis, radio_mode=radio_mode,
-            mobility_move_frac=mobility_move_frac, telemetry=telemetry,
+            mesh=mesh, ue_axis=ue_axis, cell_axis=cell_axis,
+            radio_mode=radio_mode, mobility_move_frac=mobility_move_frac,
+            inc_backend=inc_backend, telemetry=telemetry,
             churn=churn, relax=relax)
     return cache[cache_key]
 

@@ -41,6 +41,13 @@ become collectives: ``psum``/``pmax`` over the UE axis plus the cross-shard
 argmax of ``core.distributed._global_best`` (tie-break = lowest global UE
 index, matching single-device ``jnp.argmax``).  ``ue_axis=None`` (the
 default) compiles the exact legacy single-device program.
+
+On the UE x cell episode mesh (DESIGN.md §Million-UE-scaling) the scheduler
+is *deliberately not* cell-sharded: its per-cell bins are O(n_cells x K)
+scalars -- tiny next to the radio leaves -- so every shard keeps the full
+``n_cells`` bin range, attachment indices stay global, and the policies
+need only the UE-axis collectives above.  The engine replicates ``se`` /
+``cqi`` / ``a`` along the cell axes before calling ``allocate``.
 """
 from __future__ import annotations
 

@@ -496,7 +496,8 @@ class RadioState(NamedTuple):
 
 
 def _chain_rows(cfg: RadioConfig, U_rows, C, bore, fad_rows, P, *,
-                with_tables: bool, with_gain: bool) -> RadioState:
+                with_tables: bool, with_gain: bool,
+                cell_axis=None) -> RadioState:
     """The D→G→RSRP→a→SINR→CQI→SE chain for a slab of UE rows.
 
     Row-local by construction: every output row depends only on its own
@@ -506,6 +507,14 @@ def _chain_rows(cfg: RadioConfig, U_rows, C, bore, fad_rows, P, *,
     :func:`radio_update_rows` -- ONE implementation, so the incremental
     path is bit-exact with its own init (and matches the dense engine
     recompute, which composes the same pure functions).
+
+    ``cell_axis`` names the mesh axes the *cell* dimension is sharded
+    over (UE×cell meshes): ``C``/``bore``/``P`` and the fading columns
+    are then local shards, the interference total psums across shards,
+    and attachment runs through the cross-shard argmax
+    (``core.distributed._global_best`` -- lowest global cell index wins
+    ties, exactly like ``jnp.argmax``).  ``None`` compiles the verbatim
+    single-shard chain.
     """
     geom = compute_distances(U_rows, C)
     G0 = pathgains(cfg, U_rows, C, bore, geom=geom)
@@ -517,16 +526,39 @@ def _chain_rows(cfg: RadioConfig, U_rows, C, bore, fad_rows, P, *,
         meas = rsrp(G0, P).sum(axis=2)      # long-term association (L3)
     else:
         meas = R.sum(axis=2)
-    a = jnp.argmax(meas, axis=1).astype(jnp.int32)
+    if cell_axis is None:
+        a = jnp.argmax(meas, axis=1).astype(jnp.int32)
+        mine = my = m_loc = None
+    else:
+        from repro.core.distributed import _axis_index, _global_best
+        m_loc = C.shape[0]
+        _, a, mine = _global_best(meas.max(axis=1),
+                                  meas.argmax(axis=1).astype(jnp.int32),
+                                  m_loc, cell_axis)
+        my = _axis_index(cell_axis)
     se = cqi = se_all = cqi_all = None
     if with_tables:
         # the serving cell is carried MAC state (A3): tabulate the SINR
         # chain for every candidate cell so a later handover is a gather
         total = R.sum(axis=1)
+        if cell_axis is not None:
+            total = jax.lax.psum(total, cell_axis)
         gamma_all = R / (cfg.noise_w + (total[:, None, :] - R))
         se_all, cqi_all = se_chain(cfg, gamma_all)
     else:
-        gamma, _, _ = sinr(R, a, cfg.noise_w)
+        if cell_axis is None:
+            gamma, _, _ = sinr(R, a, cfg.noise_w)
+        else:
+            # owning-shard gather of the serving row, then the psummed
+            # interference split (total reorders the per-cell sum across
+            # shards: 1e-5-class, the documented mesh contract)
+            local_col = jnp.clip(a - my * m_loc, 0, m_loc - 1)
+            w_loc = jnp.take_along_axis(
+                R, local_col[:, None, None], axis=1)[:, 0, :]
+            w = jax.lax.psum(
+                jnp.where(mine[:, None], w_loc, 0.0), cell_axis)
+            total = jax.lax.psum(R.sum(axis=1), cell_axis)
+            gamma = sinr_from_wu(w, total - w, cfg.noise_w)
         se, cqi = se_chain(cfg, gamma)
     return RadioState(meas=meas if with_tables else None,
                       a=None if with_tables else a, se=se,
@@ -538,7 +570,7 @@ def _chain_rows(cfg: RadioConfig, U_rows, C, bore, fad_rows, P, *,
 
 def radio_init(cfg: RadioConfig, U, C, bore, fad, P, *,
                with_tables: bool = False,
-               with_gain: bool = False) -> RadioState:
+               with_gain: bool = False, cell_axis=None) -> RadioState:
     """Full-width :class:`RadioState`: the everything-dirty base case.
 
     Exactly :func:`_chain_rows` over all rows, so a subsequent
@@ -546,7 +578,7 @@ def radio_init(cfg: RadioConfig, U, C, bore, fad, P, *,
     consistent with what a full recompute would produce.
     """
     return _chain_rows(cfg, U, C, bore, fad, P, with_tables=with_tables,
-                       with_gain=with_gain)
+                       with_gain=with_gain, cell_axis=cell_axis)
 
 
 def _scatter(old, idx, new_rows):
@@ -554,7 +586,7 @@ def _scatter(old, idx, new_rows):
 
 
 def radio_update_rows(cfg: RadioConfig, state: RadioState, U, C, bore,
-                      fad, P, idx) -> RadioState:
+                      fad, P, idx, *, cell_axis=None) -> RadioState:
     """Recompute the chain for UE rows ``idx`` and scatter them in place.
 
     ``idx`` follows THE dirtiness convention (:func:`dirty_indices` /
@@ -563,11 +595,50 @@ def radio_update_rows(cfg: RadioConfig, state: RadioState, U, C, bore,
     validity mask is needed.  Cost is O(|idx| * n_cell) instead of the
     dense O(n_ue * n_cell) -- the smart-update win, inside jit.
     ``fad=None`` selects the unfaded chain (no gather, no multiply).
+    ``cell_axis`` shards the cell dimension (see :func:`_chain_rows`);
+    the scatter stays local (per-UE leaves are identical on every cell
+    shard after the psums, so patched rows agree across shards).
     """
     fad_rows = None if fad is None else fad[idx]
     rows = _chain_rows(cfg, U[idx], C, bore, fad_rows, P,
                        with_tables=state.se_all is not None,
-                       with_gain=state.G is not None)
+                       with_gain=state.G is not None, cell_axis=cell_axis)
+    return RadioState(*(_scatter(o, idx, n)
+                        for o, n in zip(state, rows)))
+
+
+def radio_update_rows_fused(cfg: RadioConfig, state: RadioState, U, C, bore,
+                            fad, P, idx, *, interpret=None) -> RadioState:
+    """:func:`radio_update_rows` through the fused Pallas pipeline.
+
+    The dirty-row kernel variant: gather the dirty UE slab (positions +
+    fading rows) with XLA, stream it through ``kernels.ops.fused_sinr``
+    (gain recomputed inside VMEM tiles against *all* cells -- the
+    (|idx|, n_cell) matrices never touch HBM), scatter the patched
+    a/se/cqi rows back.  Covers the O(n_ue)-carry regimes only: handover
+    tables (``se_all``) and carried gains (``G``) need O(n_cell)-per-row
+    outputs the streaming accumulator never materialises, so those
+    regimes raise and stay on the XLA row recompute.  Same dirtiness
+    convention, same idempotent padded scatter; parity vs the XLA rows
+    is asserted across every registry scenario in
+    tests/test_smart_update_scan.py.
+    """
+    if state.se_all is not None or state.G is not None:
+        raise ValueError(
+            "the fused dirty-row backend carries only the O(n_ue) "
+            "RadioState (a/se/cqi); handover tables (se_all) and carried "
+            "gains (G) need the XLA row recompute (radio_update_rows)")
+    from repro.kernels import ops
+    fad_rows = None if fad is None else fad[idx]
+    gamma, a_rows, _, _ = ops.fused_sinr(
+        U[idx], C, P, pathgain_fn=cfg.pathgain_fn, noise_w=cfg.noise_w,
+        boresight=bore, fad=fad_rows,
+        attach_on_mean=(fad_rows is not None and cfg.rayleigh_fading
+                        and cfg.attach_ignores_fading),
+        n_sectors=cfg.n_sectors, interpret=interpret)
+    se_rows, cqi_rows = se_chain(cfg, gamma)
+    rows = RadioState(meas=None, a=a_rows, se=se_rows, cqi=cqi_rows,
+                      se_all=None, cqi_all=None, G=None, G0=None)
     return RadioState(*(_scatter(o, idx, n)
                         for o, n in zip(state, rows)))
 
@@ -792,39 +863,54 @@ def pallas_available() -> bool:
 def pallas_supported(cfg: RadioConfig, fad) -> bool:
     """Can the fused kernel express this configuration?
 
-    The kernel streams cell tiles and recomputes gain *inside* the tile,
-    so it cannot ingest a materialised per-(UE, cell) fading tensor --
-    exactly the O(N x M) HBM traffic it exists to avoid.  It covers the
-    unfaded chain (any subband count, any pathloss strategy, sectored or
-    omni with the stock 3GPP pattern); faded configurations fall back to
-    XLA under ``backend="auto"``.
+    Per-link fading (wideband or per-RB, including the
+    ``attach_ignores_fading`` long-term-association regime) streams
+    through the kernel's tile pipeline since the incremental backend
+    landed, so ``fad`` no longer disqualifies.  The one remaining gap is
+    a *non-stock* sector pattern: the kernel inlines the 3GPP 65-deg /
+    30-dB horizontal pattern for fusion, so antennas with other
+    ``phi_3dB_deg`` / ``A_max_dB`` / ``max_gain_dBi`` values fall back
+    to XLA under ``backend="auto"`` (and raise under an explicit
+    ``backend="pallas"`` with a diagnostic naming the offending knob).
     """
-    if fad is not None:
-        return False
+    return pallas_unsupported_reason(cfg, fad) is None
+
+
+def pallas_unsupported_reason(cfg: RadioConfig, fad) -> "str | None":
+    """``None`` when the fused kernel covers the configuration, else a
+    precise human-readable diagnostic (the ``backend="pallas"`` error)."""
+    del fad                     # every fading layout is kernel-expressible
     if cfg.n_sectors > 1:
         a = cfg.antenna
-        if (abs(getattr(a, "phi_3dB_deg", 65.0) - 65.0) > 1e-6
-                or abs(getattr(a, "A_max_dB", 30.0) - 30.0) > 1e-6
-                or abs(getattr(a, "max_gain_dBi", 0.0)) > 1e-6):
-            return False                       # kernel inlines the stock pattern
-    return True
+        stock = {"phi_3dB_deg": 65.0, "A_max_dB": 30.0, "max_gain_dBi": 0.0}
+        for knob, want in stock.items():
+            have = getattr(a, knob, want)
+            if abs(have - want) > 1e-6:
+                return (f"non-stock sector pattern: antenna.{knob}={have!r} "
+                        f"(the kernel inlines the stock 3GPP pattern, "
+                        f"{knob}={want}); use the XLA backend")
+    return None
 
 
-def _forward_pallas(static: RadioStatic, positions, P,
+def _forward_pallas(static: RadioStatic, positions, P, fad=None,
                     interpret=None) -> RadioOutputs:
     """Dense chain through the fused Pallas pipeline (kernels/fused_sinr).
 
     The (n_ue, n_cell) distance/gain/RSRP matrices never materialise:
     the kernel accumulates the O(N) state (total power, best server, its
-    RSRP row) and the CQI/SE tail runs on that.  ``G``/``rsrp`` are
-    therefore ``None`` in the returned :class:`RadioOutputs` -- callers
-    that need the full matrices want the XLA backend.
+    RSRP row) and the CQI/SE tail runs on that.  A ``fad`` tensor streams
+    through the tile pipeline (it *is* materialised -- the caller drew
+    it -- but the gain/RSRP products stay in VMEM).  ``G``/``rsrp`` are
+    ``None`` in the returned :class:`RadioOutputs` -- callers that need
+    the full matrices want the XLA backend.
     """
     from repro.kernels import ops
     cfg = static.cfg
     gamma, a, w, u = ops.fused_sinr(
         positions, static.C, P, pathgain_fn=cfg.pathgain_fn,
-        noise_w=cfg.noise_w, boresight=static.bore,
+        noise_w=cfg.noise_w, boresight=static.bore, fad=fad,
+        attach_on_mean=(fad is not None and cfg.rayleigh_fading
+                        and cfg.attach_ignores_fading),
         n_sectors=cfg.n_sectors, interpret=interpret)
     cqi = cqi_report_jit(gamma, cfg.n_rb_subbands, cfg.cqi_wideband,
                          cfg.eesm_beta)
@@ -868,19 +954,21 @@ def radio_forward(static: RadioStatic, positions, fad=None,
     if backend not in (None, "auto", "xla", "pallas"):
         raise ValueError(f"backend must be 'auto', 'xla' or 'pallas'; "
                          f"got {backend!r}")
-    want_fad = fad is not None or (fading_key is not None
-                                   and cfg.rayleigh_fading)
-    if backend == "pallas":
-        if want_fad or not pallas_supported(cfg, None):
-            raise ValueError(
-                "backend='pallas' cannot express this configuration "
-                "(per-link fading tensors and non-stock sector patterns "
-                "need the XLA backend)")
-        return _forward_pallas(static, positions, P)
-    if (backend == "auto" and not want_fad
-            and pallas_supported(cfg, None) and pallas_available()):
-        return _forward_pallas(static, positions, P)
     n_ue, n_cell = positions.shape[0], static.C.shape[0]
+    use_pallas = False
+    if backend == "pallas":
+        reason = pallas_unsupported_reason(cfg, fad)
+        if reason is not None:
+            raise ValueError(
+                f"backend='pallas' cannot express this configuration: "
+                f"{reason}")
+        use_pallas = True
+    elif backend == "auto":
+        use_pallas = pallas_supported(cfg, fad) and pallas_available()
+    if use_pallas:
+        if fad is None and fading_key is not None and cfg.rayleigh_fading:
+            fad = draw_fading(cfg, fading_key, n_ue, n_cell)
+        return _forward_pallas(static, positions, P, fad=fad)
     if fad is None:
         if fading_key is not None and cfg.rayleigh_fading:
             fad = draw_fading(cfg, fading_key, n_ue, n_cell)

@@ -88,9 +88,7 @@ def test_fused_kernel_matches_crrm_sectored():
 def test_fused_backend_parity_with_radio_forward(name):
     """The fused-kernel dense backend (interpret mode on CPU) reproduces
     the XLA branch of ``radio_forward`` on every registry scenario's
-    unfaded chain -- the configuration class the kernel expresses (the
-    per-link fading tensors it cannot ingest fall back to XLA, tested
-    below)."""
+    unfaded chain."""
     sim = CRRM(scenarios.make_scenario(name, n_ues=24, n_cells=6))
     rs = sim.radio_static()
     U = sim.U._data
@@ -108,17 +106,42 @@ def test_fused_backend_parity_with_radio_forward(name):
                                   np.asarray(out_x.se))
 
 
-def test_pallas_backend_rejects_faded_configurations():
-    """Explicit backend='pallas' with a per-link fading tensor must raise
-    (the kernel cannot ingest an (N, M) tensor without the O(N*M) HBM
-    traffic it exists to avoid); backend='auto' silently stays on XLA."""
+@pytest.mark.parametrize("name", scenarios.scenario_names())
+def test_fused_backend_parity_on_faded_chain(name):
+    """Per-link fading (ISSUE 9): the kernel streams the fading tensor
+    through its tile pipeline -- explicit ``backend="pallas"`` with a
+    ``fad`` tensor (wideband or per-RB, including the
+    ``attach_ignores_fading`` association regime) now reproduces the XLA
+    branch instead of raising."""
+    sim = CRRM(scenarios.make_scenario(name, n_ues=24, n_cells=6))
+    rs = sim.radio_static()
+    U = sim.U._data
+    fad = sim.fading._data
+    out_x = radio.radio_forward(rs, U, fad=fad, backend="xla")
+    out_p = radio.radio_forward(rs, U, fad=fad, backend="pallas")
+    assert out_p.G is None and out_p.rsrp is None
+    np.testing.assert_array_equal(np.asarray(out_p.a), np.asarray(out_x.a))
+    np.testing.assert_allclose(np.asarray(out_p.gamma),
+                               np.asarray(out_x.gamma), rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(out_p.cqi),
+                                  np.asarray(out_x.cqi))
+    np.testing.assert_array_equal(np.asarray(out_p.se),
+                                  np.asarray(out_x.se))
+
+
+def test_pallas_backend_rejects_nonstock_antenna():
+    """The remaining kernel gap: a non-stock sector pattern (the kernel
+    inlines the 3GPP 65-deg/30-dB pattern).  Explicit backend='pallas'
+    raises with a diagnostic naming the offending knob; backend='auto'
+    silently stays on XLA."""
+    from repro.sim.antenna import Antenna_gain
     sim = CRRM(scenarios.make_scenario("dense_urban", n_ues=12, n_cells=6))
     rs = sim.radio_static()
-    with pytest.raises(ValueError, match="pallas"):
-        radio.radio_forward(rs, sim.U._data, fad=sim.fading._data,
-                            backend="pallas")
-    out = radio.radio_forward(rs, sim.U._data, fad=sim.fading._data,
-                              backend="auto")
+    odd = rs.cfg._replace(antenna=Antenna_gain(phi_3dB_deg=70.0))
+    rs_odd = radio.RadioStatic(rs.C, rs.P, rs.bore, odd)
+    with pytest.raises(ValueError, match="phi_3dB_deg"):
+        radio.radio_forward(rs_odd, sim.U._data, backend="pallas")
+    out = radio.radio_forward(rs_odd, sim.U._data, backend="auto")
     assert out.G is not None                        # XLA branch ran
 
 

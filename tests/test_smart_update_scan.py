@@ -220,6 +220,93 @@ def test_window_movers_exact_count_and_bounds():
     np.testing.assert_array_equal(np.asarray(disp[~np.asarray(mask)]), 0.0)
 
 
+# ---------------------------------------- fused dirty-row backend (ISSUE 9)
+@pytest.mark.parametrize("name", scenarios.scenario_names())
+def test_fused_rows_match_xla_rows_across_scenarios(name):
+    """The dirty-row Pallas kernel variant (interpret mode on CPU) patches
+    rows bitwise-identically to ``radio_update_rows`` on every registry
+    scenario's O(n_ue) chain -- same gather, same scatter, the gain/RSRP
+    math fused into VMEM tiles in between."""
+    sim = CRRM(_shrink(name))
+    rs = sim.radio_static()
+    U, fad = sim.U._data, sim.fading._data
+    st = radio.radio_init(rs.cfg, U, rs.C, rs.bore, fad, rs.P)
+    idx = jnp.array([3, 7, 11, 19, 19, 0, 0, 0], jnp.int32)  # padded
+    U2 = U.at[jnp.array([3, 7, 11, 19])].add(
+        jnp.array([30.0, -12.0, 0.0], U.dtype))
+    got_x = radio.radio_update_rows(rs.cfg, st, U2, rs.C, rs.bore, fad,
+                                    rs.P, idx)
+    got_f = radio.radio_update_rows_fused(rs.cfg, st, U2, rs.C, rs.bore,
+                                          fad, rs.P, idx)
+    for field, x, f in zip(radio.RadioState._fields, got_x, got_f):
+        assert (x is None) == (f is None), field
+        if x is not None:
+            np.testing.assert_array_equal(np.asarray(f), np.asarray(x),
+                                          err_msg=field)
+
+
+def test_fused_rows_reject_table_and_gain_carries():
+    """HO tables / carried gains need O(n_cell)-per-row outputs the
+    streaming accumulator never materialises; the fused variant refuses
+    rather than silently dropping them."""
+    sim = CRRM(_shrink("handover_stress"))
+    rs = sim.radio_static()
+    U, fad = sim.U._data, sim.fading._data
+    idx = jnp.zeros(4, jnp.int32)
+    st = radio.radio_init(rs.cfg, U, rs.C, rs.bore, fad, rs.P,
+                          with_tables=True)
+    with pytest.raises(ValueError, match="se_all"):
+        radio.radio_update_rows_fused(rs.cfg, st, U, rs.C, rs.bore, fad,
+                                      rs.P, idx)
+
+
+def test_engine_inc_backend_pallas_matches_xla():
+    """inc_backend="pallas" (the fused dirty-row kernel, interpret mode on
+    CPU) rolls out bitwise-identically to the XLA row recompute; "pallas"
+    raises on inexpressible configurations (handover tables) with a
+    diagnostic, and "auto" falls back to XLA there instead."""
+    a, b = _pair(_shrink("dense_urban"))
+    kw = dict(mobility_step_m=25.0, mobility_move_frac=0.25)
+    key = jax.random.PRNGKey(0)
+    f1 = a.episode_fns(radio_mode="incremental", inc_backend="xla", **kw)
+    f2 = b.episode_fns(radio_mode="incremental", inc_backend="pallas", **kw)
+    s1, t1 = f1.rollout(a.episode_static(), a.init_episode_state(key), 8)
+    s2, t2 = f2.rollout(b.episode_static(), b.init_episode_state(key), 8)
+    np.testing.assert_array_equal(np.asarray(t2), np.asarray(t1))
+    np.testing.assert_array_equal(np.asarray(s2.U), np.asarray(s1.U))
+
+    ho = CRRM(_shrink("handover_stress"))
+    with pytest.raises(ValueError, match="cannot express"):
+        ho.episode_fns(radio_mode="incremental", inc_backend="pallas")
+    ho.episode_fns(radio_mode="incremental", inc_backend="auto")  # falls back
+
+
+def test_cell_axis_requires_mesh():
+    sim = CRRM(_shrink("dense_urban"))
+    with pytest.raises(ValueError, match="mesh"):
+        sim.episode_fns(cell_axis=("cell",))
+
+
+# ------------------------------------- donated rollout executable (ISSUE 9)
+def test_rollout_donated_matches_rollout_and_does_not_retrace():
+    """``rollout_donated`` is the same program with the state buffers
+    donated: bitwise-equal outputs, and re-invoking it with the returned
+    (same-shape) state compiles nothing new."""
+    from repro.obs.profile import CompileCounter
+    a, b = _pair(_shrink("dense_urban_twin"))
+    key = jax.random.PRNGKey(0)
+    fns = a.episode_fns()
+    static = a.episode_static()
+    _, t_ref = fns.rollout(static, a.init_episode_state(key), 8)
+    state, t1 = fns.rollout_donated(static, b.init_episode_state(key), 8)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t_ref))
+    with CompileCounter() as c:
+        state, t2 = fns.rollout_donated(static, state, 8)
+        jax.block_until_ready((state, t2))
+    if c.supported:
+        assert c.count == 0, f"donated rollout retraced: {c.count} compiles"
+
+
 # -------------------------------------------------- 2-device mesh equivalence
 _MESH_SCRIPT = r"""
 import os
@@ -270,6 +357,67 @@ def test_incremental_on_two_device_mesh_matches_single_device():
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
     out = subprocess.run([sys.executable, "-c", _MESH_SCRIPT],
+                         capture_output=True, text=True, timeout=900,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))), env=env)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "ALL_OK" in out.stdout
+
+
+# ----------------------------------------- UE x cell mesh (ISSUE 9 tentpole)
+_UECELL_MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import sys
+sys.path.insert(0, "src")
+import jax, numpy as np
+from repro.core.crrm import CRRM
+from repro.sim import scenarios
+
+mesh = jax.make_mesh((1, 2), ("ue", "cell"))
+kw = dict(mobility_step_m=20.0, mobility_move_frac=0.25)
+key = jax.random.PRNGKey(0)
+
+def roll(sim, n_tti, **ekw):
+    fns = sim.episode_fns(**ekw)
+    return fns.rollout(sim.episode_static(), sim.init_episode_state(key),
+                       n_tti)
+
+def check(name, mode, n_tti=8):
+    base = scenarios.make_scenario(name, n_ues=24, n_cells=6)
+    s1, t1 = roll(CRRM(base), n_tti, radio_mode=mode, **kw)
+    s2, t2 = roll(CRRM(base), n_tti, radio_mode=mode, mesh=mesh,
+                  cell_axis=("cell",), **kw)
+    np.testing.assert_allclose(np.asarray(t2), np.asarray(t1),
+                               rtol=1e-5, atol=1e-2)
+    np.testing.assert_array_equal(np.asarray(s2.U), np.asarray(s1.U))
+    np.testing.assert_array_equal(np.asarray(s2.serving),
+                                  np.asarray(s1.serving))
+    for l1, l2 in zip(jax.tree_util.tree_leaves(s1),
+                      jax.tree_util.tree_leaves(s2)):
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   rtol=1e-5, atol=1e-3)
+    print("OK", name, mode)
+
+# the tentpole contract: every registry scenario, incremental (the
+# dirty-row chain runs radio_init AND radio_update_rows under cell
+# sharding); one dense case covers the dense cell-sharded chain
+for name in scenarios.scenario_names():
+    check(name, "incremental")
+check("dense_urban", "dense")
+print("ALL_OK")
+"""
+
+
+@pytest.mark.slow
+def test_episode_on_ue_by_cell_mesh_matches_single_device():
+    """ISSUE 9 acceptance: a UE x cell mesh episode (cells sharded over a
+    2-device host mesh) reproduces the single-device rollout on every
+    registry scenario within the established equivalence contract
+    (throughput/state 1e-5, attachment/serving/positions bitwise)."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _UECELL_MESH_SCRIPT],
                          capture_output=True, text=True, timeout=900,
                          cwd=os.path.dirname(os.path.dirname(
                              os.path.abspath(__file__))), env=env)
