@@ -48,6 +48,7 @@ def _reruns():
         "twin_serve": pb.twin_serve,
         "million_episode": pb.million_episode,
         "rl_learning": pb.rl_learning,
+        "fault_storm": pb.fault_storm,
     }
 
 

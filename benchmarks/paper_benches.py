@@ -980,7 +980,118 @@ def million_episode(n_ues=1_000_000, n_cells=127, n_tti=5,
     return "million_episode_us_per_tti", us_inc_1m, speedup
 
 
+# -- fault injection + self-healing (ISSUE 10) -----------------------------------
+#: the ``outage_storm`` rollout (in-scan Markov cell outages + A3
+#: reattachment) vs the identical scenario with faults off.  The fault
+#: machinery is one uniform draw, two selects and a tx-power mask per
+#: TTI riding a dense mobility chain that recomputes anyway, so the
+#: storm must stay near-free; >1.5x means the fault path fell off the
+#: fused program (e.g. a host sync or a per-transition retrace).  Smoke
+#: shapes are dispatch-dominated, hence the looser smoke bound.
+FAULT_STORM_MAX_OVERHEAD = 1.5
+FAULT_STORM_MAX_OVERHEAD_SMOKE = 2.5
+
+#: the watchdog checkpoints every chunk in this recipe, so recovering
+#: from a poisoned carry must cost exactly one re-run chunk of work
+#: (rollback target = the previous chunk boundary) -- asserted, and the
+#: measured recovery latency is recorded in the seeded record.
+FAULT_RECOVERY_MAX_CHUNKS = 1
+
+
+def fault_storm(n_ues=20_000, n_cells=57, n_tti=200, chunk_tti=50):
+    """Fault-injection overhead + self-healing recovery latency (ISSUE 10).
+
+    Times the ``outage_storm`` scenario (cells walking the in-scan
+    outage/sleep Markov chain, A3 reattachment compensating) against the
+    same scenario with ``faults=None`` and gates the ratio.  Then drills
+    the self-healing serving path: a watchdog-armed ``TwinServer`` gets
+    a NaN injected into its carry and must recover by rollback, losing
+    at most ``FAULT_RECOVERY_MAX_CHUNKS`` chunks of re-run work; the
+    recovery wall-clock is recorded in units of a healthy chunk.
+    Seeds/updates ``benchmarks/BENCH_faults.json`` (full mode only)."""
+    import jax.numpy as jnp
+
+    from repro.robust.watchdog import WatchdogConfig
+    from repro.sim.mobility import ChurnConfig
+    from repro.sim.scenarios import make_scenario
+    from repro.twin import TwinServer
+
+    if SMOKE:
+        n_ues, n_cells, n_tti, chunk_tti = 2048, 19, 30, 10
+    gate = FAULT_STORM_MAX_OVERHEAD_SMOKE if SMOKE \
+        else FAULT_STORM_MAX_OVERHEAD
+    key = jax.random.PRNGKey(0)
+
+    def rollout_us(faulted):
+        sim = CRRM(make_scenario(
+            "outage_storm", n_ues=n_ues, n_cells=n_cells,
+            **({} if faulted else {"faults": None})))
+        return _episode_us_per_tti(sim, n_tti, key, reps=3)
+
+    us_plain = rollout_us(False)
+    us_storm = rollout_us(True)
+    overhead = us_storm / us_plain
+
+    # the self-healing drill: healthy chunk timing, then a poisoned
+    # carry -> guard trip -> rollback -> bitwise re-run, timed.  The
+    # drill runs hotter fault rates than the preset so even its short
+    # smoke chunks see outage TTIs.
+    from repro.sim.faults import FaultConfig
+    sim = CRRM(make_scenario(
+        "outage_storm", n_ues=n_ues, n_cells=n_cells,
+        faults=FaultConfig(outage_rate_hz=20.0, mean_outage_s=0.05,
+                           sleep_rate_hz=20.0, mean_sleep_s=0.05)))
+    churn = ChurnConfig(arrival_rate_hz=0.35 * n_ues, mean_lifetime_s=2.0,
+                        max_arrivals_per_tti=max(8, n_ues // 512))
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        srv = TwinServer(sim, churn, chunk_tti=chunk_tti, ckpt_dir=td,
+                         watchdog=WatchdogConfig(max_retries=2,
+                                                 backoff_s=0.0,
+                                                 ckpt_every_chunks=1))
+        down = srv.step_chunk()["mean_cells_down"]    # compile + warm
+        t0 = time.perf_counter()
+        down += srv.step_chunk()["mean_cells_down"]
+        us_chunk = time.perf_counter() - t0
+        t_before = srv.t
+        srv.state = srv.state._replace(
+            U=srv.state.U.at[:, 0].set(jnp.nan))      # poison the carry
+        t0 = time.perf_counter()
+        down += srv.step_chunk()["mean_cells_down"]   # guarded recovery
+        recovery_s = time.perf_counter() - t0
+        assert srv.t == t_before + chunk_tti, "recovery lost TTIs"
+        rollbacks = sum("rolled back" in s for s in srv.fault_history)
+        assert rollbacks <= FAULT_RECOVERY_MAX_CHUNKS, (
+            f"recovery took {rollbacks} rollbacks (max "
+            f"{FAULT_RECOVERY_MAX_CHUNKS}): the per-chunk checkpoint "
+            f"cadence stopped bounding lost work")
+        assert down > 0.0, "storm produced no outages across the drill"
+    recovery_chunks = recovery_s / us_chunk
+
+    print(f"# fault_storm: {n_ues} UEs x {n_cells} cells x {n_tti} TTIs: "
+          f"fault-free {us_plain:.1f} us/TTI, storm {us_storm:.1f} "
+          f"us/TTI -> x{overhead:.2f} overhead (gate {gate}x); recovery "
+          f"from poisoned carry: {recovery_s * 1e3:.0f} ms = "
+          f"{recovery_chunks:.1f} healthy chunks ({rollbacks} rollback)")
+    assert overhead < gate, (
+        f"outage storm x{overhead:.2f} vs fault-free (gate {gate}x)")
+    if not SMOKE:
+        _write_record("BENCH_faults.json", {
+            "bench": "fault_storm", "n_ues": n_ues, "n_cells": n_cells,
+            "n_tti": n_tti, "chunk_tti": chunk_tti,
+            "us_per_tti_plain": round(us_plain, 2),
+            "us_per_tti_storm": round(us_storm, 2),
+            "fault_overhead": round(overhead, 3),
+            "recovery_rollbacks": rollbacks,
+            "recovery_latency_chunks": round(recovery_chunks, 2),
+            "gated_metric": "fault_overhead", "gate_direction": "max",
+            "gate": FAULT_STORM_MAX_OVERHEAD,
+            "smoke_gate": FAULT_STORM_MAX_OVERHEAD_SMOKE})
+    return "fault_storm_overhead", us_storm, overhead
+
+
 ALL = [fig2_pathloss_throughput, fig3_sectors, fig4_fairness,
        fig5_ppp_validation, tab_smart_update, tab_mobility_sweep,
        kernel_fused_sinr, mac_episode, env_episode, sharded_episode,
-       smart_update_scan, twin_serve, million_episode, rl_learning]
+       smart_update_scan, twin_serve, million_episode, rl_learning,
+       fault_storm]

@@ -320,7 +320,8 @@ class CRRM:
                     use_harq=None, mesh=None, ue_axis=("ue",),
                     cell_axis=None, radio_mode=None,
                     mobility_move_frac=None, inc_backend=None,
-                    telemetry: bool = False, churn=None, relax=None):
+                    telemetry: bool = False, churn=None, relax=None,
+                    faults=None):
         """The pure ``(step, rollout)`` episode functions for this
         simulator's topology and MAC parameters (``EpisodeFns``), cached
         per trace-time switch combination.  Both are jit-compiled and
@@ -344,8 +345,11 @@ class CRRM:
         of the digital-twin serving layer (DESIGN.md
         §Digital-twin-serving); ``relax`` a ``sim.radio.RelaxConfig``
         softening the chain's non-differentiable points for
-        gradient-based optimization (DESIGN.md §RL-and-differentiability)
-        -- all off, the exact legacy program."""
+        gradient-based optimization (DESIGN.md §RL-and-differentiability);
+        ``faults`` a ``sim.faults.FaultConfig`` in-scan cell fault
+        process (DESIGN.md §Fault-injection-and-self-healing; defaults
+        to ``params.faults``, ``0`` forces off) -- all off, the exact
+        legacy program."""
         from repro.mac import engine as mac_engine
         return mac_engine.episode_fns_for(
             self, mobility_step_m=mobility_step_m,
@@ -354,7 +358,7 @@ class CRRM:
             radio_mode=radio_mode,
             mobility_move_frac=mobility_move_frac,
             inc_backend=inc_backend, telemetry=telemetry,
-            churn=churn, relax=relax)
+            churn=churn, relax=relax, faults=faults)
 
     def sync_episode_state(self, state, positions: bool = False) -> None:
         """Write a final ``EpisodeState`` back into the graph (legacy

@@ -115,6 +115,13 @@ class CRRM_parameters:
     #: §Smart-update-in-scan).  Equivalent within 1e-5 (bit-exact in the
     #: non-handover regimes); incompatible with per-TTI fading.
     radio_mode: str = "dense"
+    #: in-scan cell fault process (a ``sim.faults.FaultConfig``): each cell
+    #: walks a per-TTI Markov outage/sleep chain inside the episode engine,
+    #: masking its tx power while DOWN/SLEEPing (DESIGN.md
+    #: §Fault-injection-and-self-healing).  ``None`` = no faults (the exact
+    #: legacy program); an explicit ``faults`` argument to
+    #: ``episode_fns``/``run_episode`` overrides it (``0`` forces off).
+    faults: Optional[Any] = None
     #: A3-style handover inside the episode engine.  Disabled (False), the
     #: serving cell is the instantaneous strongest cell, recomputed per TTI
     #: when the channel is dynamic -- the legacy PR-1 behaviour.
@@ -171,6 +178,26 @@ class CRRM_parameters:
             raise ValueError(
                 f"radio_mode must be 'dense' or 'incremental'; "
                 f"got {self.radio_mode!r}")
+        if self.faults is not None:
+            from repro.sim.faults import FaultConfig
+            if not isinstance(self.faults, FaultConfig):
+                raise ValueError(
+                    f"faults must be a sim.faults.FaultConfig (or None); "
+                    f"got {type(self.faults).__name__}")
+            f = self.faults
+            if f.outage_rate_hz < 0.0 or f.sleep_rate_hz < 0.0:
+                raise ValueError("fault rates must be >= 0")
+            if f.mean_outage_s <= 0.0 or f.mean_sleep_s <= 0.0:
+                raise ValueError("fault dwell means must be > 0")
+            for p in (f.outage_rate_hz * self.tti_s,
+                      f.sleep_rate_hz * self.tti_s,
+                      self.tti_s / f.mean_outage_s,
+                      self.tti_s / f.mean_sleep_s):
+                if p > 1.0:
+                    raise ValueError(
+                        "fault transition probability exceeds 1 per TTI: "
+                        "lower the rate or raise the dwell mean "
+                        f"(tti_s={self.tti_s})")
         if self.ho_hysteresis_db < 0.0:
             raise ValueError("ho_hysteresis_db must be >= 0")
         if self.ho_ttt_tti < 1:

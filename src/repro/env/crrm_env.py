@@ -183,6 +183,13 @@ class CrrmEnv:
         ``active`` mask rides the threaded state), and the telemetry
         KPIs gain ``mean_active_ues`` (DESIGN.md §Digital-twin-serving).
         Incompatible with ``resample_topology``.
+    faults:
+        A ``sim.faults.FaultConfig``: the in-scan cell fault process
+        (DESIGN.md §Fault-injection-and-self-healing) -- cells drop in
+        and out of outage inside every decision window, and the
+        telemetry KPIs gain ``mean_cells_down`` / ``reattach_events``.
+        Defaults to ``params.faults`` (the ``outage_storm`` preset
+        bakes one in); pass ``0`` to force the fault-free program.
     mesh, ue_axis:
         Shard the UE axis of the episode engine over a device mesh
         (``episode_fns(mesh=)``).  The sharded program spans the
@@ -198,7 +205,7 @@ class CrrmEnv:
                  per_tti_fading: bool = False,
                  resample_topology: bool = False, reward_fn=None,
                  radio_mode: Optional[str] = None,
-                 telemetry: bool = False, churn=None,
+                 telemetry: bool = False, churn=None, faults=None,
                  mesh=None, ue_axis=("ue",)):
         if (params is None) == (scenario is None):
             raise ValueError("pass exactly one of params= or scenario=")
@@ -226,12 +233,13 @@ class CrrmEnv:
         self._reward_fn = reward_fn or buffer_aware_reward
         self.telemetry = bool(telemetry)
         self.churn = churn
+        self.faults = faults
         self.mesh = mesh
         self._fns = self.sim.episode_fns(per_tti_fading=per_tti_fading,
                                          radio_mode=radio_mode,
                                          telemetry=self.telemetry,
-                                         churn=churn, mesh=mesh,
-                                         ue_axis=ue_axis)
+                                         churn=churn, faults=faults,
+                                         mesh=mesh, ue_axis=ue_axis)
         self._static = self.sim.episode_static()
         self._radio_static = self.sim.radio_static()
         # the reset template: PF EWMA seeded at the stationary alpha-fair

@@ -100,7 +100,7 @@ from repro.core.distributed import (_axis_index, _global_best, _pvary,
                                     _shard_map)
 from repro.mac import scheduler as mac_sched
 from repro.obs.telemetry import Telemetry, tti_telemetry
-from repro.sim import deploy, mobility, radio
+from repro.sim import deploy, faults as sim_faults, mobility, radio
 
 
 class EpisodeState(NamedTuple):
@@ -122,6 +122,14 @@ class EpisodeState(NamedTuple):
     -- with churn off (or per-TTI fading on) fading stays in
     :class:`EpisodeStatic` exactly as before.  Seed both leaves with
     :func:`seed_churn_state`.
+
+    ``cell_state`` exists only under the in-scan cell fault process
+    (``make_episode_fns(..., faults=FaultConfig(...))`` -- DESIGN.md
+    §Fault-injection-and-self-healing) and defaults to ``None``
+    otherwise, same trace-time-treedef discipline.  It auto-seeds to
+    all-UP at the jit boundary (``step``/``rollout`` attach it when the
+    engine needs it), so legacy callers never touch it; seed a custom
+    initial fault pattern with :func:`seed_fault_state`.
     """
 
     U: Any           # (n_ues, 3) positions
@@ -136,6 +144,7 @@ class EpisodeState(NamedTuple):
     t: Any           # i32 scalar: TTI index (drives PRNG folds + traffic)
     active: Any = None   # (n_ues,) bool live-UE mask | None (no churn)
     fad: Any = None      # carried fading factor | None (no churn)
+    cell_state: Any = None   # (n_cells,) i32 fault codes | None (no faults)
 
 
 class EpisodeStatic(NamedTuple):
@@ -286,6 +295,20 @@ def seed_churn_state(state, static, params, *, per_tti_fading: bool = False,
     return state._replace(active=active, fad=fad)
 
 
+def seed_fault_state(state, n_cells: int = None,
+                     cell_state=None) -> EpisodeState:
+    """Attach the fault leaf to a legacy :class:`EpisodeState`.
+
+    ``cell_state`` seeds the per-cell fault codes (``sim.faults.UP`` /
+    ``SLEEP`` / ``DOWN``); default all-UP.  Only needed for a *custom*
+    initial fault pattern (e.g. a test seeding a dark cell): a ``None``
+    leaf auto-seeds to all-UP inside ``step``/``rollout``.
+    """
+    if cell_state is None:
+        cell_state = sim_faults.init_cell_state(n_cells)
+    return state._replace(cell_state=jnp.asarray(cell_state, jnp.int32))
+
+
 def make_episode_fns(params, n_ues: int, n_cells: int,
                      radio_cfg: "radio.RadioConfig", traffic_step, *,
                      mobility_step_m=None, per_tti_fading: bool = False,
@@ -293,7 +316,7 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
                      cell_axis=None, radio_mode: str = "dense",
                      mobility_move_frac=None, inc_backend=None,
                      telemetry: bool = False, churn=None,
-                     relax=None) -> EpisodeFns:
+                     relax=None, faults=None) -> EpisodeFns:
     """Build the pure ``step``/``rollout`` functions for one configuration.
 
     ``params`` is a ``CRRM_parameters``; ``radio_cfg`` the hashable pure-
@@ -394,6 +417,23 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
     i.e. they are meaningful with a power ``action`` (or per-TTI fading /
     mobility); single-device dense mode only -- ``mesh``, ``churn`` and
     ``radio_mode="incremental"`` raise.
+
+    ``faults`` (a ``sim.faults.FaultConfig``) is the in-scan cell fault
+    switch (DESIGN.md §Fault-injection-and-self-healing): each cell
+    walks a per-TTI Markov outage/sleep chain (its own PRNG lineage,
+    ``radio.fault_keys``, so fault-free trajectories stay bitwise) and
+    the per-TTI tx power is masked by the per-cell fault multiplier --
+    a DOWN cell's RSRP column is an exact zero, so attachment, A3 and
+    SINR route around it through the unmodified radio chain.  The
+    per-cell codes ride the carry as ``EpisodeState.cell_state``
+    (auto-seeded all-UP; :func:`seed_fault_state` for custom patterns).
+    Composes with churn, ``vmap``, handover, both radio modes and the
+    UE×cell mesh; in incremental mode fault transitions re-derive the
+    per-UE outputs from the carried gain matrices
+    (``radio.radio_update_cells``) under a real ``lax.cond`` -- a
+    fault-free TTI pays only the transition draw.  Incompatible with
+    ``relax`` (the outage mask is a hard discontinuity) and with the
+    fused Pallas backend (which never materialises the carried gains).
     """
     p = params
     cfg = radio_cfg
@@ -422,6 +462,13 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
     n_move = (max(1, int(round(mobility_move_frac * n_ues))) if frac_on
               else n_ues)
     churn_on = churn is not None
+    faults_on = faults is not None
+    if faults_on and relax is not None:
+        raise ValueError(
+            "faults= is incompatible with relax=: the outage tx mask is a "
+            "hard discontinuity (a dark cell's RSRP column is exactly "
+            "zero), so there is no useful gradient through a fault "
+            "transition; differentiate a fault-free configuration instead")
     if churn_on and mesh is not None:
         raise ValueError(
             "episode_fns(mesh=..., churn=...) is unsupported: birth-death "
@@ -465,8 +512,11 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
         it (mobility or churn); a static-geometry action chain is
         loop-invariant and rides the hoisted constants instead (a
         pass-through carry would defeat XLA's loop-invariant hoisting
-        of the downstream MAC subexpressions -- measured 2x per TTI)."""
-        return incremental and (not static_geom or power_act or churn_on)
+        of the downstream MAC subexpressions -- measured 2x per TTI).
+        Fault transitions mutate the state too (radio_update_cells), so
+        faults always carry it."""
+        return incremental and (not static_geom or power_act or churn_on
+                                or faults_on)
 
     # -- mesh layout (None = single device, the exact legacy program) ------
     if mesh is not None:
@@ -506,6 +556,10 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
         if ho_on:
             reason = ("handover regimes carry per-candidate-cell tables "
                       "(se_all) the streaming kernel never materialises")
+        elif faults_on:
+            reason = ("cell fault transitions re-derive per-UE outputs "
+                      "from carried gain matrices (G) the streaming "
+                      "kernel never materialises")
         elif cell_axes is not None:
             reason = ("the fused kernel's attachment argmax spans all "
                       "cells, but a cell-sharded shard holds only its "
@@ -651,18 +705,24 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
         ones gather/multiply is pure profit on the 100k-row hot path)."""
         return static.fad if p.rayleigh_fading else None
 
-    def init_rs(static, U, action, fad=None):
+    def init_rs(static, U, action, fad=None, pmul=None):
         """Prepare-time ``radio.RadioState``: the everything-dirty base
         case, computed once outside the scan.  A power ``action`` is
         scan-constant, so this is also where its cell dirt is absorbed
         (the scan body then only patches mobility rows).  ``fad``
         overrides the static fading tensor (the churn regimes' carried
-        leaf)."""
+        leaf); ``pmul`` the *seeded* fault multiplier (a custom-seeded
+        dark cell must be dark from TTI 0, before its first
+        transition).  Fault regimes keep the gain matrices
+        (``with_gain``) so a fault transition can re-derive every
+        per-UE output without re-running geometry+pathloss."""
         P = static.P if action is None else action
+        if pmul is not None:
+            P = P * local_cols(pmul, axis=0)[:, None]
         f = fad if fad is not None else inc_fad(static)
         return radio.radio_init(cfg, U, static.C, static.bore,
                                 f, P, with_tables=ho_on,
-                                cell_axis=cell_axes)
+                                with_gain=faults_on, cell_axis=cell_axes)
 
     def walk_displacements(k_mob):
         """This TTI's per-row displacement + the window start (local rows).
@@ -792,11 +852,14 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
         if churn_on:
             # births move rows: nothing U-dependent is loop-invariant
             return h
-        if static_geom and (per_tti_fading or ho_on or power_act):
+        if static_geom and (per_tti_fading or ho_on or power_act
+                            or faults_on):
             # static geometry: one unfaded gain/attachment pass, hoisted
             # out of the scan; only the fading factor varies per TTI.
+            # Fault regimes hoist the gain too, but the P-dependent
+            # tables cannot hoist: the fault mask changes P per TTI.
             h["G"] = unfaded_gain(U, static.C, static.bore)
-            if not power_act:
+            if not power_act and not faults_on:
                 R_mean = radio.rsrp(h["G"], static.P)
                 h["R_mean"] = R_mean
                 h["a"] = attach(R_mean) if attach_on_mean else None
@@ -869,6 +932,17 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
                     fad_c, born_idx,
                     radio.draw_fading(cfg, k_fadc, max_birth, n_cells),
                     n_born)
+        # -- cell faults: one Markov transition per TTI (radio.fault_keys
+        # -- its own stream lineage, so fault-free trajectories are
+        # bit-untouched), then the per-cell tx mask.  The draw is global
+        # and replicated (every shard folds the same key), so cell_state
+        # agrees across a mesh; only the P columns are local.
+        cs, changed = state.cell_state, None
+        if faults_on:
+            cs, changed = sim_faults.fault_step(
+                radio.fault_keys(key, t), cs, tti_s, faults)
+            pmul = sim_faults.tx_multiplier(cs, faults)
+            P = P * local_cols(pmul, axis=0)[:, None]
         # -- channel: incremental state (carried or hoisted), per-TTI
         # recompute, or the hoisted dense constants -------------------------
         r = rs if rs is not None else h.get("rs")
@@ -883,6 +957,23 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
                                                 static.bore, f_inc, P,
                                                 born_idx)
                     n_dirty = n_dirty + n_born
+                if faults_on:
+                    # a fault transition re-prices every UE against the
+                    # masked P from the carried gains -- no geometry, no
+                    # pathloss.  Single device: a real lax.cond, so a
+                    # fault-free TTI pays only the transition draw (the
+                    # predicate is a replicated scalar; under vmap the
+                    # cond lowers to a select).  Mesh: call branch-free
+                    # (radio_update_cells where-selects internally) --
+                    # collectives inside a cond branch are avoided.
+                    def cell_upd(s):
+                        return radio.radio_update_cells(
+                            cfg, s, P, changed, cell_axis=cell_axes)
+                    if mesh is None:
+                        r = jax.lax.cond(jnp.any(changed), cell_upd,
+                                         lambda s: s, r)
+                    else:
+                        r = cell_upd(r)
                 rs = r
             if ho_on:
                 if churn_on:
@@ -909,10 +1000,13 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
             R = faded_rsrp(G0, P, fad)
             R_meas = radio.rsrp(G0, P) if attach_on_mean else R
             a_inst = attach(R_meas)
-        elif per_tti_fading or power_act:
+        elif per_tti_fading or power_act or faults_on:
             fad = draw_fading(k_fad) if per_tti_fading else static.fad
             R = faded_rsrp(h["G"], P, fad)
-            if power_act:
+            if power_act or faults_on:
+                # the fault mask (like a power action) changes P per
+                # TTI, so measurement and attachment recompute from the
+                # hoisted gain
                 R_meas = radio.rsrp(h["G"], P) if attach_on_mean else R
                 a_inst = attach(R_meas)
             else:
@@ -946,6 +1040,11 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
                                             meas=R_meas.sum(axis=-1))
             else:
                 se, cqi, a_use = static.se, static.cqi, static.a
+        if faults_on and not ho_on:
+            # track the instantaneous attachment in the serving leaf so
+            # outage-driven reattachment is observable (telemetry's
+            # reattach_events) and survives chunk boundaries
+            a_srv = a_use
 
         # -- MAC: traffic -> grant -> HARQ -> drain ------------------------
         arrivals = local_rows(traffic_step(k_tr, t))
@@ -978,7 +1077,7 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
         avg = (1.0 - beta) * avg + beta * tput
         state = EpisodeState(U, buf, avg, cursor + rb_chunk, key,
                              hbits, hretx, a_srv, ttt, t + 1,
-                             active=act, fad=fad_c)
+                             active=act, fad=fad_c, cell_state=cs)
         telem = None
         if telemetry:
             # KPIs only from values computed above: no PRNG, no carry.
@@ -990,9 +1089,17 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
             ho_fired = ((a_srv != prev_srv).sum().astype(jnp.int32)
                         if ho_on else jnp.int32(0))
             n_act = act.sum().astype(jnp.int32) if churn_on else None
+            # cells_down is computed from the *replicated* cell_state --
+            # identical on every shard, so tti_telemetry must not psum
+            # it; reattach_events is a per-UE count (psums over ue_axes)
+            n_down = ((cs == sim_faults.DOWN).sum().astype(jnp.int32)
+                      if faults_on else None)
+            reatt = ((a_srv != prev_srv).sum().astype(jnp.int32)
+                     if faults_on else None)
             telem = tti_telemetry(n_cells, n_ues, a_use, alloc, bits, tput,
                                   buf, hstats, ho_fired, n_dirty, ue_axes,
-                                  n_act)
+                                  n_act, cells_down=n_down,
+                                  reattached=reatt)
         return state, tput, rs, telem
 
     def setup(static, state, action):
@@ -1007,22 +1114,37 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
         h = prepare(static, state.U, action is not None)
         rs0 = None
         if use_rs(action is not None):
-            if static_geom and not churn_on:
+            if static_geom and not churn_on and not faults_on:
                 h["rs"] = init_rs(static, state.U, action)
             else:
+                pmul0 = (sim_faults.tx_multiplier(state.cell_state, faults)
+                         if faults_on else None)
                 rs0 = init_rs(static, state.U, action,
-                              fad=state.fad if fad_carried else None)
+                              fad=state.fad if fad_carried else None,
+                              pmul=pmul0)
         return h, rs0
+
+    def norm_state(state):
+        """Auto-seed the fault leaf at the jit boundary: a fault-enabled
+        engine fed a legacy state (``cell_state=None``) starts all-UP --
+        trace-time, so legacy treedefs keep compiling the legacy program
+        and callers never thread the leaf by hand."""
+        if faults_on and state.cell_state is None:
+            return state._replace(
+                cell_state=sim_faults.init_cell_state(n_cells))
+        return state
 
     # ------------------------------------------------------- single device
     if mesh is None:
         def step(static, state, action=None, fairness_p=None):
+            state = norm_state(state)
             h, rs0 = setup(static, state, action)
             state, tput, _, telem = tti_step(h, static, state, action, rs0,
                                              fairness_p)
             return (state, tput, telem) if telemetry else (state, tput)
 
         def rollout(static, state, n_tti, action=None, fairness_p=None):
+            state = norm_state(state)
             h, rs0 = setup(static, state, action)
 
             def body(carry, _):
@@ -1060,7 +1182,11 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
     state_specs = EpisodeState(
         U=PSpec(ue_axes, None), backlog=ue, pf_avg=ue, rr_cursor=PSpec(),
         key=PSpec(None), harq_bits=ue, harq_retx=ue, serving=ue, ttt=ue,
-        t=PSpec())
+        t=PSpec(),
+        # the fault codes are replicated (every shard draws the identical
+        # transition from the replicated key); None leaves stay None --
+        # shard_map matches treedefs exactly
+        cell_state=PSpec(None) if faults_on else None)
     # telemetry leaves leave the shard_map fully replicated: every KPI is
     # psum-reduced inside tti_telemetry, so each shard holds the global
     # value.  The None leaf (dirty_rows outside incremental mode) must be
@@ -1069,14 +1195,18 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
         served_bits=PSpec(None), granted_rb=PSpec(None),
         harq_acks=PSpec(), harq_nacks=PSpec(), harq_retx=PSpec(),
         dropped_bits=PSpec(), ho_events=PSpec(), buffer_bits=PSpec(),
-        jain=PSpec(), dirty_rows=PSpec() if incremental else None)
+        jain=PSpec(), dirty_rows=PSpec() if incremental else None,
+        cells_down=PSpec() if faults_on else None,
+        reattach_events=PSpec() if faults_on else None)
     # stacked (n_tti, ...) variant for the rollout's scan output
     telem_stack_specs = Telemetry(
         served_bits=PSpec(None, None), granted_rb=PSpec(None, None),
         harq_acks=PSpec(None), harq_nacks=PSpec(None),
         harq_retx=PSpec(None), dropped_bits=PSpec(None),
         ho_events=PSpec(None), buffer_bits=PSpec(None),
-        jain=PSpec(None), dirty_rows=PSpec(None) if incremental else None)
+        jain=PSpec(None), dirty_rows=PSpec(None) if incremental else None,
+        cells_down=PSpec(None) if faults_on else None,
+        reattach_events=PSpec(None) if faults_on else None)
 
     def revar(state):
         """Re-establish the claimed replication of the scalar carry slots.
@@ -1088,8 +1218,11 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
         on jax versions without varying-type tracking.
         """
         fix = lambda x: jax.lax.pmax(x, mesh_axes)
-        return state._replace(rr_cursor=fix(state.rr_cursor),
-                              key=fix(state.key), t=fix(state.t))
+        out = state._replace(rr_cursor=fix(state.rr_cursor),
+                             key=fix(state.key), t=fix(state.t))
+        if faults_on:   # identical on every shard, same as the scalars
+            out = out._replace(cell_state=fix(out.cell_state))
+        return out
 
     def sharded(fn, in_specs, out_specs):
         # replication checking must be off: the traffic models' poisson
@@ -1137,7 +1270,7 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
                      else (state_specs, ue))
         f = sharded(one, (static_specs, state_specs) + extra_specs,
                     out_specs)
-        return f(static, state, *extra_args)
+        return f(static, norm_state(state), *extra_args)
 
     def rollout(static, state, n_tti, action=None, fairness_p=None):
         has_act = action is not None
@@ -1165,7 +1298,7 @@ def make_episode_fns(params, n_ues: int, n_cells: int,
                      if telemetry else (state_specs, PSpec(None, ue_axes)))
         f = sharded(roll, (static_specs, state_specs) + extra_specs,
                     out_specs)
-        return f(static, state, *extra_args)
+        return f(static, norm_state(state), *extra_args)
 
     return EpisodeFns(
         step=jax.jit(step),
@@ -1179,7 +1312,7 @@ def episode_fns_for(sim, *, mobility_step_m=None, per_tti_fading=False,
                     cell_axis=None, radio_mode=None,
                     mobility_move_frac=None, inc_backend=None,
                     telemetry: bool = False, churn=None,
-                    relax=None) -> EpisodeFns:
+                    relax=None, faults=None) -> EpisodeFns:
     """The :func:`make_episode_fns` bundle for ``sim``, cached on it.
 
     Keyed by the trace-time switches only -- ``n_tti`` and the presence of
@@ -1188,8 +1321,9 @@ def episode_fns_for(sim, *, mobility_step_m=None, per_tti_fading=False,
     ``mobility_step_m=None`` falls back to the simulator's
     ``params.mobility_step_m`` (scenario presets with a baked-in mobility
     trajectory); pass ``0`` to force the static-geometry program.
-    ``radio_mode``/``mobility_move_frac`` fall back to the corresponding
-    ``CRRM_parameters`` fields the same way.
+    ``radio_mode``/``mobility_move_frac``/``faults`` fall back to the
+    corresponding ``CRRM_parameters`` fields the same way (``faults=0``
+    forces the fault-free program on a faulted preset).
     """
     if mobility_step_m is None:
         mobility_step_m = getattr(sim.params, "mobility_step_m", None)
@@ -1199,6 +1333,10 @@ def episode_fns_for(sim, *, mobility_step_m=None, per_tti_fading=False,
         radio_mode = getattr(sim.params, "radio_mode", "dense")
     if mobility_move_frac is None:
         mobility_move_frac = getattr(sim.params, "mobility_move_frac", None)
+    if faults is None:
+        faults = getattr(sim.params, "faults", None)
+    if not faults:                   # 0 / False -> fault-free program
+        faults = None
     ue_axis = (ue_axis,) if isinstance(ue_axis, str) else tuple(ue_axis)
     if isinstance(cell_axis, str):
         cell_axis = (cell_axis,)
@@ -1206,7 +1344,7 @@ def episode_fns_for(sim, *, mobility_step_m=None, per_tti_fading=False,
         cell_axis = tuple(cell_axis)
     cache_key = (mobility_step_m, per_tti_fading, use_harq, mesh, ue_axis,
                  cell_axis, radio_mode, mobility_move_frac, inc_backend,
-                 telemetry, churn, relax)
+                 telemetry, churn, relax, faults)
     cache = sim.__dict__.setdefault("_episode_fns_cache", {})
     if cache_key not in cache:
         cache[cache_key] = make_episode_fns(
@@ -1216,7 +1354,7 @@ def episode_fns_for(sim, *, mobility_step_m=None, per_tti_fading=False,
             mesh=mesh, ue_axis=ue_axis, cell_axis=cell_axis,
             radio_mode=radio_mode, mobility_move_frac=mobility_move_frac,
             inc_backend=inc_backend, telemetry=telemetry,
-            churn=churn, relax=relax)
+            churn=churn, relax=relax, faults=faults)
     return cache[cache_key]
 
 
@@ -1224,7 +1362,7 @@ def run_episode(sim, n_tti: int, key=None, mobility_step_m=None,
                 per_tti_fading: bool = False, sync_state: bool = True,
                 use_harq=None, mesh=None, radio_mode=None,
                 mobility_move_frac=None, telemetry: bool = False,
-                churn=None):
+                churn=None, faults=None):
     """Run ``n_tti`` TTIs; returns (n_tti, n_ues) delivered throughput
     (bits/s) -- or ``(tput, telem)`` with ``telemetry=True``, where
     ``telem`` is the stacked per-TTI :class:`repro.obs.telemetry.Telemetry`
@@ -1245,7 +1383,7 @@ def run_episode(sim, n_tti: int, key=None, mobility_step_m=None,
                           per_tti_fading=per_tti_fading, use_harq=use_harq,
                           mesh=mesh, radio_mode=radio_mode,
                           mobility_move_frac=mobility_move_frac,
-                          telemetry=telemetry, churn=churn)
+                          telemetry=telemetry, churn=churn, faults=faults)
     state = sim.init_episode_state(key)
     static = sim.episode_static()
     if churn is not None:

@@ -56,11 +56,14 @@ class Telemetry(NamedTuple):
     jain: Any           # f32 Jain fairness of per-UE delivered throughput
     dirty_rows: Any     # i32 radio rows recomputed | None (dense modes)
     active_ues: Any = None   # i32 live UEs this TTI | None (no churn)
+    cells_down: Any = None   # i32 cells in outage this TTI | None (no faults)
+    reattach_events: Any = None  # i32 serving/attachment changes | None
 
 
 def tti_telemetry(n_cells: int, n_ues: int, a, alloc, bits, tput, backlog,
                   harq_stats, ho_events, n_dirty, ue_axes=None,
-                  active_count=None) -> Telemetry:
+                  active_count=None, cells_down=None,
+                  reattached=None) -> Telemetry:
     """Assemble one TTI's :class:`Telemetry` from step intermediates.
 
     Pure: reads the serving attachment ``a``, the allocation matrix, the
@@ -74,6 +77,12 @@ def tti_telemetry(n_cells: int, n_ues: int, a, alloc, bits, tput, backlog,
     episode: KPIs normalised per UE (Jain) then count the active
     population instead of the padded slot capacity, and the count itself
     is published as the ``active_ues`` leaf (None = fixed population).
+
+    ``cells_down`` / ``reattached`` are the fault-process KPIs
+    (DESIGN.md §Fault-injection-and-self-healing): the outage count is
+    computed from the *replicated* cell fault state, so it must NOT psum
+    (every shard already holds the global number); the reattachment
+    count is a per-UE event count and psums like the other per-UE KPIs.
 
     Jain's fairness index over the per-UE delivered throughput:
     ``(sum x)^2 / (n * sum x^2)`` -- 1.0 when perfectly equal, ``1/n``
@@ -98,13 +107,17 @@ def tti_telemetry(n_cells: int, n_ues: int, a, alloc, bits, tput, backlog,
             n_dirty = psum(n_dirty)
         if active_count is not None:
             active_count = psum(active_count)
+        if reattached is not None:
+            reattached = psum(reattached)
+        # cells_down intentionally NOT psummed: replicated global value
     denom = n_ues if active_count is None else jnp.maximum(active_count, 1)
     jain = jnp.where(ss > 0.0, s * s / (denom * ss), 0.0)
     return Telemetry(served_bits=served, granted_rb=granted,
                      harq_acks=acks, harq_nacks=nacks, harq_retx=retx,
                      dropped_bits=dropped, ho_events=ho_events,
                      buffer_bits=occupancy, jain=jain, dirty_rows=n_dirty,
-                     active_ues=active_count)
+                     active_ues=active_count, cells_down=cells_down,
+                     reattach_events=reattached)
 
 
 def summarize(telem: Telemetry, tti_s: float | None = None) -> dict:
@@ -142,6 +155,10 @@ def summarize(telem: Telemetry, tti_s: float | None = None) -> dict:
         out["mean_dirty_rows"] = float(t.dirty_rows.mean())
     if t.active_ues is not None:
         out["mean_active_ues"] = float(t.active_ues.mean())
+    if t.cells_down is not None:
+        out["mean_cells_down"] = float(t.cells_down.mean())
+    if t.reattach_events is not None:
+        out["reattach_events"] = float(t.reattach_events.sum())
     return out
 
 

@@ -1,0 +1,30 @@
+"""Self-healing harness: carry guards, watchdog policy, chaos drills.
+
+The fault-injection layer (``sim.faults``) makes the *simulated network*
+fail on purpose; this package makes the *serving process* survive failure
+-- its own and the simulator's (DESIGN.md §Fault-injection-and-self-healing):
+
+* :mod:`repro.robust.guard` -- a fused, jit-compiled invariant check over
+  the episode carry (NaN-free, finite positions, non-negative queues/
+  averages), with a host-side diagnostic that names what broke.
+* :mod:`repro.robust.watchdog` -- the recovery policy pytree
+  (:class:`~repro.robust.watchdog.WatchdogConfig`), the fault taxonomy
+  (timeout / guard violation / terminal
+  :class:`~repro.robust.watchdog.TwinServerDown`), and a thread-based
+  chunk timeout.  ``twin.server.TwinServer`` consumes these to roll back
+  to the last valid checkpoint and retry with exponential backoff.
+* :mod:`repro.robust.chaos` -- the chaos drill CI runs: a twin under a
+  cell-fault storm with an injected NaN, a forced chunk exception and a
+  corrupted latest checkpoint, asserting the server recovers and the
+  resumed trajectory is the uninterrupted one.
+"""
+from repro.robust.guard import carry_ok, carry_violations, tree_has_nan
+from repro.robust.watchdog import (ChunkTimeout, GuardViolation,
+                                   TwinServerDown, WatchdogConfig,
+                                   run_with_timeout)
+
+__all__ = [
+    "carry_ok", "carry_violations", "tree_has_nan",
+    "WatchdogConfig", "ChunkTimeout", "GuardViolation", "TwinServerDown",
+    "run_with_timeout",
+]

@@ -1,0 +1,106 @@
+"""Fused invariant guard over the episode carry.
+
+A digital twin that serves for hours will eventually meet a state its
+authors never rolled: a pathological control update, a numerical edge of
+the SINR chain, a bad checkpoint.  The failure mode that matters is the
+*silent* one -- a NaN born in one TTI propagates through every EWMA and
+backlog it touches and the twin keeps streaming garbage KPIs.  This module
+is the tripwire: one jit-compiled, fused reduction over the whole
+:class:`~repro.mac.engine.EpisodeState` that the twin server checks once
+per chunk (one scalar readback, no per-leaf host sync).
+
+Invariants checked (:func:`carry_ok`):
+
+* no float leaf anywhere in the carry contains NaN;
+* UE positions ``U`` are finite;
+* the PF average ``pf_avg`` and pending HARQ bits ``harq_bits`` are
+  finite and non-negative;
+* ``backlog`` is non-negative -- ``+inf`` is *legal* there (the engine's
+  full-buffer sentinel), which is why the guard is NaN-centric rather
+  than a blanket ``isfinite``;
+* the TTI counter ``t`` is non-negative.
+
+:func:`carry_violations` is the host-side post-mortem: slow, per-leaf,
+and it names exactly which invariant broke where -- what the watchdog
+puts in the diagnostic when it gives up.  :func:`tree_has_nan` is the
+checkpoint layer's pre-write refusal check for arbitrary pytrees.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _float_leaves(tree):
+    return [x for x in jax.tree_util.tree_leaves(tree)
+            if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)]
+
+
+@jax.jit
+def _any_nan(leaves) -> jax.Array:
+    bad = jnp.bool_(False)
+    for x in leaves:
+        bad = bad | jnp.isnan(x).any()
+    return bad
+
+
+def tree_has_nan(tree) -> bool:
+    """True iff any float leaf of ``tree`` contains NaN (host bool).
+
+    ``+inf``/``-inf`` do NOT trip it: the engine uses ``+inf`` as the
+    full-buffer backlog sentinel, so infinities can be legitimate state.
+    """
+    leaves = _float_leaves(tree)
+    if not leaves:
+        return False
+    return bool(_any_nan(leaves))
+
+
+@jax.jit
+def carry_ok(state) -> jax.Array:
+    """Scalar bool: the episode carry satisfies every engine invariant.
+
+    Fused and jitted: one compiled program per carry treedef, one device
+    scalar out.  Works on a vmapped (batched) carry too -- the ``.all()``
+    reductions span every axis, so a single False anywhere fails the
+    whole batch (a twin never serves a half-poisoned batch).
+    """
+    ok = ~_any_nan(_float_leaves(state))
+    ok &= jnp.isfinite(state.U).all()
+    ok &= jnp.isfinite(state.pf_avg).all() & (state.pf_avg >= 0).all()
+    ok &= jnp.isfinite(state.harq_bits).all() & (state.harq_bits >= 0).all()
+    ok &= (state.backlog >= 0).all()     # +inf legal: full-buffer sentinel
+    ok &= (state.t >= 0).all()
+    return ok
+
+
+def carry_violations(state) -> list:
+    """Host-side diagnostic: one human-readable line per broken invariant.
+
+    The slow path -- pulls every leaf to host -- run only after
+    :func:`carry_ok` already said the carry is bad, to build the
+    watchdog's failure report.  Empty list means the carry is clean.
+    """
+    out = []
+    flat = jax.tree_util.tree_flatten_with_path(state)[0]
+    for path, leaf in flat:
+        x = np.asarray(leaf)
+        if np.issubdtype(x.dtype, np.floating) and np.isnan(x).any():
+            out.append("%s: %d NaN values"
+                       % (jax.tree_util.keystr(path), int(np.isnan(x).sum())))
+
+    def check(name, cond, what):
+        x = np.asarray(getattr(state, name))
+        bad = ~cond(x)
+        if bad.any():
+            out.append("%s: %d values %s" % (name, int(bad.sum()), what))
+
+    check("U", np.isfinite, "not finite")
+    check("pf_avg", lambda x: np.isfinite(x) & (x >= 0),
+          "not finite and non-negative")
+    check("harq_bits", lambda x: np.isfinite(x) & (x >= 0),
+          "not finite and non-negative")
+    check("backlog", lambda x: ~np.isnan(x) & (x >= 0), "negative or NaN")
+    check("t", lambda x: x >= 0, "negative")
+    return out

@@ -1,0 +1,110 @@
+"""Watchdog policy: the twin server's recovery contract, as data.
+
+Recovery behaviour belongs in a config pytree, not scattered constants:
+the same :class:`WatchdogConfig` that a production twin runs with is what
+the chaos drill (``repro.robust.chaos``) and the kill-mid-chunk tests
+shrink for CI.  ``twin.server.TwinServer`` consumes it as the policy of
+its guarded serving loop (DESIGN.md §Fault-injection-and-self-healing):
+
+1. run one chunk (optionally under :func:`run_with_timeout`);
+2. check the carry with ``robust.guard.carry_ok``;
+3. on success, auto-checkpoint every ``ckpt_every_chunks`` chunks;
+4. on *any* failure -- :class:`ChunkTimeout`, :class:`GuardViolation`,
+   or a raised exception from the compiled chunk -- degrade the
+   incremental backend if one is armed (``pallas -> xla``), roll back to
+   the newest checkpoint that still validates
+   (``train.checkpoint.restore_latest_valid``), sleep an exponentially
+   backed-off delay, and retry;
+5. after ``max_retries`` failed recoveries, stop gracefully with
+   :class:`TwinServerDown` carrying the full failure history.
+
+Rollback + the absolute-TTI PRNG folds mean a successful retry resumes
+*bitwise* on the uninterrupted trajectory -- recovery never perturbs the
+twin, it only re-runs lost work.
+"""
+from __future__ import annotations
+
+import threading
+from typing import NamedTuple, Optional
+
+
+class WatchdogConfig(NamedTuple):
+    """Recovery policy of a guarded :class:`~repro.twin.server.TwinServer`.
+
+    ``max_retries`` bounds *consecutive* failed chunks: each successful
+    chunk resets the budget.  ``backoff_s`` is the sleep before the first
+    retry, multiplied by ``backoff_factor`` per subsequent attempt.
+    ``chunk_timeout_s`` arms the wall-clock watchdog on each chunk (None
+    = never time out).  ``ckpt_every_chunks`` is the auto-checkpoint
+    cadence -- also the maximum work a rollback can lose.
+    """
+
+    max_retries: int = 3
+    backoff_s: float = 0.05
+    backoff_factor: float = 2.0
+    chunk_timeout_s: Optional[float] = None
+    ckpt_every_chunks: int = 1
+
+
+class TwinFault(RuntimeError):
+    """Base of the recoverable per-chunk failures the watchdog handles."""
+
+
+class ChunkTimeout(TwinFault):
+    """A chunk exceeded ``WatchdogConfig.chunk_timeout_s`` wall-clock."""
+
+
+class GuardViolation(TwinFault):
+    """The post-chunk carry failed ``robust.guard.carry_ok``."""
+
+
+class TwinServerDown(RuntimeError):
+    """Terminal: recovery exhausted ``max_retries`` consecutive attempts.
+
+    ``history`` is the chronological list of failure lines (one per
+    failed attempt, including backend degradations and rollback targets)
+    -- the diagnostic a graceful stop hands to the operator.
+    """
+
+    def __init__(self, message: str, history=None):
+        super().__init__(message)
+        self.history = list(history or [])
+
+    def __str__(self):
+        base = super().__str__()
+        if not self.history:
+            return base
+        return base + "\nfailure history:\n" + "\n".join(
+            "  " + line for line in self.history)
+
+
+def run_with_timeout(fn, timeout_s: Optional[float]):
+    """Run ``fn()``; raise :class:`ChunkTimeout` after ``timeout_s``.
+
+    Thread-based: the work runs on a daemon worker joined with a timeout.
+    A timed-out computation cannot be killed (XLA holds the GIL-released
+    device work), so the worker is *abandoned* -- it finishes (or hangs)
+    in the background while the watchdog proceeds to rollback.  That is
+    the right trade for a serving loop: the rolled-back state is rebuilt
+    from checkpointed host arrays, never from the abandoned attempt's
+    donated buffers.  ``timeout_s=None`` calls ``fn`` inline (zero
+    overhead, no extra thread).
+    """
+    if timeout_s is None:
+        return fn()
+    box = {}
+
+    def _worker():
+        try:
+            box["value"] = fn()
+        except BaseException as e:          # propagate to the caller thread
+            box["error"] = e
+
+    th = threading.Thread(target=_worker, daemon=True)
+    th.start()
+    th.join(timeout_s)
+    if th.is_alive():
+        raise ChunkTimeout(f"chunk exceeded {timeout_s:g}s wall-clock")
+    if "error" in box:
+        raise box["error"]
+    return box["value"]

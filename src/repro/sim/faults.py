@@ -1,0 +1,112 @@
+"""In-scan cell fault model: a per-cell Markov outage/sleep process.
+
+Digital twins exist to answer resilience what-ifs -- "which UEs lose
+service when site 7 goes dark, and how fast does A3 compensation pick
+them up?" (the simulators-to-digital-twins survey; Ericsson's calibrated
+simulator names fault scenarios as first-class test inputs).  This module
+is the *process*: each cell walks a three-state Markov chain
+
+    UP --outage_rate_hz--> DOWN --1/mean_outage_s--> UP
+    UP --sleep_rate_hz--> SLEEP --1/mean_sleep_s--> UP
+
+evaluated once per TTI *inside* the compiled scan (``mac.engine``).  A
+DOWN cell transmits nothing (tx power column masked to exactly 0.0, so
+its RSRP column is an exact linear zero: no UE attaches to it and an
+attached UE's serving SINR collapses, driving A3 reattachment through
+the unmodified radio/MAC chain).  A SLEEP cell is a soft degradation:
+its tx power is attenuated by ``sleep_atten_db`` (energy-saving milli-
+sleep), shrinking but not killing its footprint.
+
+Design rules (the same discipline as ``sim.mobility.ChurnConfig``):
+
+* :class:`FaultConfig` is a hashable NamedTuple of python floats -- a
+  trace-time switch.  ``faults=None`` in the engine compiles the exact
+  legacy program (the fault-free bitwise pin of tests/test_faults.py).
+* The per-TTI transition draw comes from its own PRNG lineage
+  (``radio.fault_keys``, tag ``FAULT_KEY_TAG``), never from the four
+  legacy ``radio.tti_keys`` streams or the churn lineage -- enabling
+  faults cannot perturb mobility/fading/traffic/HARQ/churn randomness,
+  and the fold is on the *absolute* TTI index, so chunked serving and
+  checkpoint/restore stay bitwise (DESIGN.md
+  §Fault-injection-and-self-healing).
+* All transition probabilities are trace-time constants; the step is one
+  uniform draw + selects -- branch-free, so it composes with ``vmap``,
+  ``lax.scan`` and ``shard_map`` (every shard draws the identical
+  replicated transition from the replicated key).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+#: cell fault states (i32 codes carried in ``EpisodeState.cell_state``)
+UP, SLEEP, DOWN = 0, 1, 2
+
+
+class FaultConfig(NamedTuple):
+    """The per-cell Markov fault process parameters (trace-time switch).
+
+    Rates are per-cell Poisson intensities in events/second; dwell times
+    are means of the geometric (per-TTI) holding distribution.  With
+    ``tti_s`` the engine's TTI length, the per-TTI transition
+    probabilities are ``rate * tti_s`` (entry) and ``tti_s / mean_s``
+    (exit) -- keep both well under 1.  The stationary DOWN occupancy of
+    one cell is ``r*m / (1 + r*m)`` for ``r = outage_rate_hz``,
+    ``m = mean_outage_s``.
+    """
+
+    #: UP -> DOWN transition intensity per cell (events/s); 0 = no outages
+    outage_rate_hz: float = 0.0
+    #: mean DOWN dwell (s) before the cell is repaired back to UP
+    mean_outage_s: float = 0.05
+    #: UP -> SLEEP transition intensity per cell (events/s); 0 = no sleeps
+    sleep_rate_hz: float = 0.0
+    #: mean SLEEP dwell (s) before the cell wakes back to UP
+    mean_sleep_s: float = 0.05
+    #: tx power attenuation while SLEEPing, in dB (soft degradation)
+    sleep_atten_db: float = 10.0
+
+
+def init_cell_state(n_cells: int):
+    """The all-UP initial per-cell fault state (i32 codes)."""
+    return jnp.zeros((n_cells,), jnp.int32)
+
+
+def fault_step(key, cell_state, tti_s: float, cfg: FaultConfig):
+    """One TTI of every cell's Markov chain: ``(new_state, changed)``.
+
+    One (n_cells,) uniform draw decides all transitions; the thresholds
+    are trace-time constants, so the step is a handful of selects --
+    branch-free, shape-static, replicated-identical on every shard of a
+    mesh (the draw comes from the replicated episode key).  ``changed``
+    flags cells whose state moved this TTI -- what the engine's
+    incremental path uses as its dirty-cell mask.
+    """
+    p_down = cfg.outage_rate_hz * tti_s
+    p_sleep = cfg.sleep_rate_hz * tti_s
+    p_repair = tti_s / cfg.mean_outage_s if cfg.mean_outage_s > 0 else 1.0
+    p_wake = tti_s / cfg.mean_sleep_s if cfg.mean_sleep_s > 0 else 1.0
+    u = jax.random.uniform(key, cell_state.shape)
+    from_up = jnp.where(u < p_down, DOWN,
+                        jnp.where(u < p_down + p_sleep, SLEEP, UP))
+    from_down = jnp.where(u < p_repair, UP, DOWN)
+    from_sleep = jnp.where(u < p_wake, UP, SLEEP)
+    new = jnp.where(cell_state == DOWN, from_down,
+                    jnp.where(cell_state == SLEEP, from_sleep, from_up))
+    new = new.astype(jnp.int32)
+    return new, new != cell_state
+
+
+def tx_multiplier(cell_state, cfg: FaultConfig):
+    """Per-cell linear tx-power multiplier for the current fault state.
+
+    UP -> 1.0 (bitwise: ``P * 1.0 == P``), SLEEP -> the linear
+    ``sleep_atten_db`` attenuation, DOWN -> exactly 0.0 (a zeroed RSRP
+    column: no attachment, no interference -- the cell is dark).
+    """
+    atten = 10.0 ** (-cfg.sleep_atten_db / 10.0)
+    return jnp.where(cell_state == DOWN, 0.0,
+                     jnp.where(cell_state == SLEEP, atten, 1.0)
+                     ).astype(jnp.float32)

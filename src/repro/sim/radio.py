@@ -644,7 +644,7 @@ def radio_update_rows_fused(cfg: RadioConfig, state: RadioState, U, C, bore,
 
 
 def radio_update_cells(cfg: RadioConfig, state: RadioState, P,
-                       dirty_cell_mask) -> RadioState:
+                       dirty_cell_mask, *, cell_axis=None) -> RadioState:
     """Apply a per-cell power delta from the carried gain matrices.
 
     A dirty cell column changes *every* UE's interference sum, so all
@@ -656,22 +656,51 @@ def radio_update_cells(cfg: RadioConfig, state: RadioState, P,
     composes with ``vmap``/``shard_map`` (no data-dependent control
     flow).  In the episode engine the power plan is scan-constant, so
     cell dirt collapses into the prepare-time :func:`radio_init`; this
-    entry point serves callers that mutate ``P`` mid-stream.
+    entry point serves callers that mutate ``P`` mid-stream -- the
+    in-scan cell fault process (``sim.faults``) above all, whose
+    outage mask changes ``P`` at fault transitions.
+
+    ``cell_axis`` shards the cell dimension exactly as in
+    :func:`_chain_rows`: the carried gains and ``P`` are local cell
+    blocks, attachment runs through the cross-shard argmax and the
+    interference totals psum.  ``dirty_cell_mask`` may be global or
+    local -- only its ``any()`` is read, and the fault process computes
+    it replicated on every shard.
     """
     R = rsrp(state.G, P)
     if cfg.rayleigh_fading and cfg.attach_ignores_fading:
         meas = rsrp(state.G0, P).sum(axis=2)
     else:
         meas = R.sum(axis=2)
-    a = jnp.argmax(meas, axis=1).astype(jnp.int32)
+    if cell_axis is None:
+        a = jnp.argmax(meas, axis=1).astype(jnp.int32)
+        mine = my = m_loc = None
+    else:
+        from repro.core.distributed import _axis_index, _global_best
+        m_loc = meas.shape[1]
+        _, a, mine = _global_best(meas.max(axis=1),
+                                  meas.argmax(axis=1).astype(jnp.int32),
+                                  m_loc, cell_axis)
+        my = _axis_index(cell_axis)
     se = cqi = se_all = cqi_all = None
     if state.se_all is not None:
         total = R.sum(axis=1)
+        if cell_axis is not None:
+            total = jax.lax.psum(total, cell_axis)
         gamma_all = R / (cfg.noise_w + (total[:, None, :] - R))
         se_all, cqi_all = se_chain(cfg, gamma_all)
         a = None
     else:
-        gamma, _, _ = sinr(R, a, cfg.noise_w)
+        if cell_axis is None:
+            gamma, _, _ = sinr(R, a, cfg.noise_w)
+        else:
+            local_col = jnp.clip(a - my * m_loc, 0, m_loc - 1)
+            w_loc = jnp.take_along_axis(
+                R, local_col[:, None, None], axis=1)[:, 0, :]
+            w = jax.lax.psum(
+                jnp.where(mine[:, None], w_loc, 0.0), cell_axis)
+            total = jax.lax.psum(R.sum(axis=1), cell_axis)
+            gamma = sinr_from_wu(w, total - w, cfg.noise_w)
         se, cqi = se_chain(cfg, gamma)
     new = RadioState(meas=meas, a=a, se=se, cqi=cqi, se_all=se_all,
                      cqi_all=cqi_all, G=state.G, G0=state.G0)
@@ -770,6 +799,25 @@ def churn_keys(key, t):
     """
     k = jax.random.fold_in(key, CHURN_KEY_TAG)
     return tuple(jax.random.fold_in(k, 4 * t + i) for i in range(4))
+
+
+#: fold_in tag deriving the cell-fault key lineage from the episode key --
+#: its own lineage like :data:`CHURN_KEY_TAG`, so enabling the fault
+#: process cannot perturb the four legacy per-TTI streams or the churn
+#: streams (every fault-free trajectory stays bitwise intact).
+FAULT_KEY_TAG = 0x666c74   # "flt"
+
+
+def fault_keys(key, t):
+    """The per-TTI cell-fault transition key.
+
+    ``fold_in(fold_in(key, FAULT_KEY_TAG), t)`` -- one stream per TTI,
+    hung off its own tag (see :func:`churn_keys` for the lineage
+    discipline).  Depends only on the episode key and the *absolute*
+    TTI index, so chunked digital-twin serving and checkpoint/restore
+    at any chunk boundary bitwise reproduce an uninterrupted run.
+    """
+    return jax.random.fold_in(jax.random.fold_in(key, FAULT_KEY_TAG), t)
 
 
 def draw_fading(cfg: RadioConfig, key, n_ues: int, n_cells: int,

@@ -26,6 +26,7 @@ from __future__ import annotations
 from typing import Callable, Dict
 
 from repro.core.params import CRRM_parameters
+from repro.sim.faults import FaultConfig
 
 #: name -> (description, factory(**overrides) -> CRRM_parameters)
 _REGISTRY: Dict[str, tuple] = {}
@@ -159,6 +160,29 @@ _preset(
     power_W=0.25,                      # 24 dBm pico BS
     rayleigh_fading=True, n_rb_subbands=6, coherence_rb=1,
     scheduler_policy="max_cqi", traffic_model="full_buffer", seed=0)
+
+_preset(
+    "outage_storm",
+    "Resilience what-if: the handover_stress deployment under a cell "
+    "fault storm -- every cell walks a Markov outage/sleep chain inside "
+    "the compiled scan (sim.faults), so dark cells appear and recover "
+    "mid-episode and A3 reattachment compensates through the unmodified "
+    "radio chain.  Mobility keeps the A3 machine hot; the fault rates "
+    "put ~13%% of cells in outage at stationarity (DESIGN.md "
+    "§Fault-injection-and-self-healing; benchmarks/BENCH_faults.json "
+    "gates the storm's overhead vs the fault-free twin).",
+    n_ues=150, n_cells=19, n_sectors=1, extent_m=1500.0,
+    pathloss_model_name="UMa", fc_GHz=3.5, h_bs_m=25.0, power_W=10.0,
+    rayleigh_fading=True, attach_ignores_fading=True,
+    mobility_step_m=5.0,
+    ho_enabled=True, ho_hysteresis_db=3.0, ho_ttt_tti=4,
+    faults=FaultConfig(outage_rate_hz=5.0, mean_outage_s=0.03,
+                       sleep_rate_hz=5.0, mean_sleep_s=0.02,
+                       sleep_atten_db=10.0),
+    harq_bler=0.1, scheduler_policy="pf",
+    traffic_model="poisson",
+    traffic_params=dict(arrival_rate_hz=300.0, packet_size_bits=12_000.0),
+    seed=0)
 
 _preset(
     "handover_stress",

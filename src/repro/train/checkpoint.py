@@ -1,16 +1,27 @@
-"""Checkpointing: atomic, keep-last-k, async, elastic.
+"""Checkpointing: atomic, keep-last-k, async, elastic, self-validating.
 
 Layout:  <dir>/step_<n>/ {manifest.msgpack, <leaf_id>.npy ...}
 
 * atomic     -- written to ``step_<n>.tmp`` then ``os.replace``d, so a crash
                 mid-write can never produce a half checkpoint that restore
                 would pick up.
-* keep-k     -- old steps garbage-collected after a successful write.
+* keep-k     -- old steps garbage-collected after a successful write, so a
+                bad latest step never costs the good ones behind it.
 * async      -- ``save_async`` snapshots to host memory synchronously (cheap)
                 and writes in a daemon thread off the training critical path.
 * elastic    -- leaves are stored *unsharded*; restore re-device_puts onto
                 whatever mesh/sharding the resumed job uses, so the cluster
                 size can change across restarts.
+* validating -- the manifest records a CRC-32 per leaf; :func:`restore`
+                verifies bytes, dtype and shape and raises
+                :class:`CheckpointCorrupt` on any mismatch (or unreadable
+                file), and :func:`restore_latest_valid` walks steps newest-
+                first past corrupt ones to the newest that still validates.
+                The save path refuses to persist a tree containing NaN
+                (``ValueError`` before any byte is written), so a poisoned
+                state can never overwrite a good checkpoint inside the
+                keep-k window.  ``+inf`` is allowed -- the engine's legal
+                full-buffer sentinel (``robust.guard.tree_has_nan``).
 """
 from __future__ import annotations
 
@@ -18,11 +29,18 @@ import os
 import re
 import shutil
 import threading
+import zlib
 from typing import Any, Optional
 
 import jax
 import msgpack
 import numpy as np
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A checkpoint step failed validation: missing/truncated files, a
+    CRC/dtype/shape mismatch against its manifest, or a manifest that does
+    not match the target tree's structure."""
 
 
 def _flatten(tree):
@@ -32,10 +50,27 @@ def _flatten(tree):
     return keys, [leaf for _, leaf in flat], treedef
 
 
+def _refuse_nan(keys, host_leaves):
+    """Never persist NaN: a corrupt tree must not enter the keep-k window.
+
+    Checked on the host snapshot (already off-device), leaf-by-leaf so
+    the error names the poisoned leaves.  NaN-only by design -- ``+inf``
+    is legitimate state (full-buffer backlog sentinel).
+    """
+    bad = [k for k, x in zip(keys, host_leaves)
+           if np.issubdtype(x.dtype, np.floating) and np.isnan(x).any()]
+    if bad:
+        raise ValueError(
+            "refusing to checkpoint a tree containing NaN "
+            f"(leaves: {', '.join(bad)}); a corrupt snapshot must never "
+            "displace a valid one -- roll back instead")
+
+
 def save(ckpt_dir: str, step: int, tree: Any, keep_last: int = 3,
          extra: Optional[dict] = None) -> str:
     keys, leaves, _ = _flatten(tree)
     host = [np.asarray(x) for x in leaves]
+    _refuse_nan(keys, host)
     return _write(ckpt_dir, step, keys, host, keep_last, extra or {})
 
 
@@ -44,15 +79,25 @@ _save_lock = threading.Lock()
 
 def save_async(ckpt_dir: str, step: int, tree: Any, keep_last: int = 3,
                extra: Optional[dict] = None) -> threading.Thread:
-    """Snapshot to host now; write to disk in the background."""
+    """Snapshot to host now; write to disk in the background.
+
+    The NaN refusal also happens *now*, on the calling thread -- the
+    caller must learn synchronously that its state is poisoned, not from
+    a daemon thread's lost exception.
+    """
     keys, leaves, _ = _flatten(tree)
     host = [np.asarray(x) for x in leaves]   # sync point, off-device copy
+    _refuse_nan(keys, host)
 
     t = threading.Thread(
         target=_write, args=(ckpt_dir, step, keys, host, keep_last,
                              extra or {}), daemon=True)
     t.start()
     return t
+
+
+def _crc(x: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(x).tobytes())
 
 
 def _write(ckpt_dir, step, keys, host_leaves, keep_last, extra):
@@ -62,7 +107,8 @@ def _write(ckpt_dir, step, keys, host_leaves, keep_last, extra):
         os.makedirs(tmp, exist_ok=True)
         manifest = {"step": step, "keys": keys, "extra": extra,
                     "dtypes": [str(x.dtype) for x in host_leaves],
-                    "shapes": [list(x.shape) for x in host_leaves]}
+                    "shapes": [list(x.shape) for x in host_leaves],
+                    "crc": [_crc(x) for x in host_leaves]}
         for i, x in enumerate(host_leaves):
             np.save(os.path.join(tmp, f"{i:05d}.npy"), x)
         with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
@@ -100,19 +146,72 @@ def latest_step(ckpt_dir) -> Optional[int]:
 def restore(ckpt_dir: str, step: int, target_tree: Any,
             shardings: Any = None) -> tuple[Any, dict]:
     """Restore into the *structure* of target_tree, resharding onto
-    ``shardings`` (a matching pytree of NamedSharding) if given."""
+    ``shardings`` (a matching pytree of NamedSharding) if given.
+
+    Validates every leaf against the manifest -- CRC-32 over the raw
+    bytes, dtype, shape -- and raises :class:`CheckpointCorrupt` if the
+    step is unreadable, truncated or tampered with.  Checkpoints written
+    before CRCs existed (no ``crc`` manifest entry) restore with dtype/
+    shape checks only.
+    """
     path = os.path.join(ckpt_dir, f"step_{step:010d}")
-    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
-        manifest = msgpack.unpackb(f.read())
+    try:
+        with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+            manifest = msgpack.unpackb(f.read())
+    except (OSError, msgpack.UnpackException, ValueError) as e:
+        raise CheckpointCorrupt(
+            f"step {step}: unreadable manifest ({e})") from e
     keys, leaves, treedef = _flatten(target_tree)
-    assert keys == manifest["keys"], "checkpoint/model structure mismatch"
+    if keys != manifest.get("keys"):
+        raise CheckpointCorrupt(
+            f"step {step}: checkpoint/model structure mismatch")
+    crcs = manifest.get("crc") or [None] * len(leaves)
     shard_flat = (jax.tree_util.tree_leaves(shardings)
                   if shardings is not None else [None] * len(leaves))
     out = []
     for i, (tgt, shd) in enumerate(zip(leaves, shard_flat)):
-        arr = np.load(os.path.join(path, f"{i:05d}.npy"))
+        leaf_path = os.path.join(path, f"{i:05d}.npy")
+        try:
+            arr = np.load(leaf_path)
+        except (OSError, ValueError, EOFError) as e:
+            raise CheckpointCorrupt(
+                f"step {step}: leaf {manifest['keys'][i]} "
+                f"({os.path.basename(leaf_path)}) unreadable ({e})") from e
+        if (str(arr.dtype) != manifest["dtypes"][i]
+                or list(arr.shape) != manifest["shapes"][i]):
+            raise CheckpointCorrupt(
+                f"step {step}: leaf {manifest['keys'][i]} is "
+                f"{arr.dtype}{arr.shape}, manifest says "
+                f"{manifest['dtypes'][i]}{tuple(manifest['shapes'][i])}")
+        if crcs[i] is not None and _crc(arr) != crcs[i]:
+            raise CheckpointCorrupt(
+                f"step {step}: leaf {manifest['keys'][i]} CRC mismatch "
+                "(bytes corrupted on disk)")
         if shd is not None:
             out.append(jax.device_put(arr, shd))
         else:
             out.append(jax.device_put(arr))
     return jax.tree_util.tree_unflatten(treedef, out), manifest["extra"]
+
+
+def restore_latest_valid(ckpt_dir: str, target_tree: Any,
+                         shardings: Any = None) -> tuple[Any, dict, int]:
+    """Restore the newest step that passes validation.
+
+    Walks ``all_steps`` newest-first, skipping any step whose manifest,
+    bytes, dtypes or shapes fail :func:`restore`'s checks -- the recovery
+    primitive behind the twin server's rollback (a truncated or corrupt
+    latest step silently falls back to the previous good one).  Returns
+    ``(tree, extra, step)``; raises :class:`CheckpointCorrupt` when no
+    step validates (including an empty directory).
+    """
+    failures = []
+    for step in reversed(all_steps(ckpt_dir)):
+        try:
+            tree, extra = restore(ckpt_dir, step, target_tree, shardings)
+            return tree, extra, step
+        except CheckpointCorrupt as e:
+            failures.append(str(e))
+    detail = ("; ".join(failures)) if failures else "no step_* directories"
+    raise CheckpointCorrupt(
+        f"no valid checkpoint under {ckpt_dir}: {detail}")

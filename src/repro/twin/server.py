@@ -28,14 +28,42 @@ the existing pure episode engine (DESIGN.md §Digital-twin-serving):
   trajectory -- the resume-equivalence contract (tested in
   tests/test_twin.py, smoke-checked in CI via ``python -m
   repro.twin.server --smoke``).
+* **Fault injection** -- pass ``faults=sim.faults.FaultConfig(...)`` (or
+  bake it into the scenario preset, e.g. ``outage_storm``) and cells walk
+  a Markov outage/sleep chain *inside* the compiled chunk; the twin's
+  KPI summaries then carry ``mean_cells_down`` / ``reattach_events``.
+* **Self-healing** -- arm ``watchdog=WatchdogConfig(...)`` (or ``True``)
+  and :meth:`step_chunk` becomes a guarded loop
+  (DESIGN.md §Fault-injection-and-self-healing): each chunk runs under an
+  optional wall-clock timeout, the resulting carry is validated by the
+  fused ``robust.guard.carry_ok`` check, and success auto-checkpoints on
+  a cadence.  On NaN, exception or timeout the server recovers: if the
+  failure is a genuine chunk exception (not a guard/timeout verdict)
+  and a fused incremental backend is armed, it first degrades
+  ``pallas -> xla``, rebuilding the chunk program (the capability probe
+  passed but the kernel failed at runtime); it then rolls back to the
+  newest checkpoint that still validates (``restore_latest_valid`` -- a
+  corrupted latest step falls through to the previous good one), sleeps
+  an exponential backoff and retries; ``max_retries`` consecutive failures stop the server
+  gracefully with a :class:`~repro.robust.watchdog.TwinServerDown`
+  carrying the full failure history.  Because every per-TTI PRNG stream
+  folds on the absolute TTI counter, a recovered twin resumes *bitwise*
+  on the uninterrupted trajectory (tests/test_faults.py; chaos drill:
+  ``python -m repro.robust.chaos --smoke``).
 """
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.mac import engine as mac_engine
 from repro.obs import telemetry as obs_telemetry
+from repro.robust import guard as robust_guard
+from repro.robust.watchdog import (GuardViolation, TwinFault,
+                                   TwinServerDown, WatchdogConfig,
+                                   run_with_timeout)
 from repro.sim.mobility import ChurnConfig
 from repro.train import checkpoint as ckpt
 
@@ -48,25 +76,73 @@ class TwinServer:
     budget).  ``chunk_tti`` sets the serving granularity: KPI summaries
     stream once per chunk, and control updates land at chunk boundaries.
     ``ckpt_dir`` enables :meth:`checkpoint` / :meth:`restore`.
+
+    ``faults`` arms the in-scan cell fault process (defaults to the
+    scenario's ``params.faults``; pass ``0`` to force it off).
+    ``inc_backend`` routes the incremental radio mode's dirty-row
+    recompute exactly as in ``episode_fns``; under a watchdog it is also
+    the degradation ladder's starting rung.  ``watchdog`` (a
+    :class:`~repro.robust.watchdog.WatchdogConfig`, or ``True`` for the
+    defaults) turns :meth:`step_chunk` into the guarded self-healing loop
+    -- it requires ``ckpt_dir`` (rollback needs somewhere to roll back
+    to) and writes an initial checkpoint at t=0.
     """
 
     def __init__(self, sim, churn: ChurnConfig, *, chunk_tti: int = 100,
                  ckpt_dir=None, keep_last: int = 3,
-                 per_tti_fading: bool = False, radio_mode=None, key=None):
+                 per_tti_fading: bool = False, radio_mode=None, key=None,
+                 faults=None, inc_backend=None, watchdog=None):
         self.sim, self.churn, self.chunk_tti = sim, churn, int(chunk_tti)
         self.ckpt_dir, self.keep_last = ckpt_dir, keep_last
-        self.fns = sim.episode_fns(per_tti_fading=per_tti_fading,
-                                   radio_mode=radio_mode, telemetry=True,
-                                   churn=churn)
+        if faults is None:
+            faults = getattr(sim.params, "faults", None)
+        self.faults = faults or None
+        self._fns_kw = dict(per_tti_fading=per_tti_fading,
+                            radio_mode=radio_mode, telemetry=True,
+                            churn=churn, faults=faults)
+        self.inc_backend = inc_backend
+        self._build(inc_backend)
         self.static = sim.episode_static()
         state = sim.init_episode_state(key)
-        self.state = mac_engine.seed_churn_state(
+        state = mac_engine.seed_churn_state(
             state, self.static, sim.params, per_tti_fading=per_tti_fading)
+        if self.faults is not None:
+            # seed the fault leaf eagerly so every checkpoint of this
+            # server shares one tree structure (restore reads structure)
+            state = mac_engine.seed_fault_state(state, sim.params.n_cells)
+        self.state = state
         # live controls, always traced chunk inputs: updating them swaps
         # an array, never the compiled program
         self.power = jnp.asarray(self.static.P)
         self.fairness = jnp.float32(sim.params.fairness_p)
 
+        if watchdog is True:
+            watchdog = WatchdogConfig()
+        self.watchdog = watchdog
+        self.fault_history: list = []
+        self._chunks_since_ckpt = 0
+        # bumped by every rollback/restore: a timed-out chunk abandoned
+        # on its worker thread must never commit a result computed from
+        # pre-rollback state
+        self._gen = 0
+        if watchdog is not None:
+            if ckpt_dir is None:
+                raise ValueError("watchdog requires ckpt_dir: rollback "
+                                 "needs a checkpoint to roll back to")
+            self.checkpoint()            # the t=0 rollback target
+
+    def _build(self, inc_backend) -> None:
+        """(Re)build the episode fns + chunk program for ``inc_backend``.
+
+        Called at construction and again by the watchdog's degradation
+        ladder (``pallas -> xla``): the serving state is untouched, only
+        the compiled program changes, so a degraded twin continues the
+        same trajectory (dense == incremental == fused is an engine
+        equivalence contract).
+        """
+        self.inc_backend = inc_backend
+        self.fns = self.sim.episode_fns(inc_backend=inc_backend,
+                                        **self._fns_kw)
         rollout, n = self.fns.rollout, self.chunk_tti
 
         def _chunk(static, state, power, fairness):
@@ -89,14 +165,89 @@ class TwinServer:
         per-TTI telemetry stack plus the serving counters (``t``,
         ``active_ues``).  The returned dict is plain host data -- what a
         dashboard or calibration loop consumes.
+
+        With a ``watchdog`` armed this is the guarded loop: timeout-
+        wrapped chunk, fused carry validation, auto-checkpoint cadence,
+        and on failure the degrade/rollback/backoff/retry ladder
+        (module docstring) -- raising
+        :class:`~repro.robust.watchdog.TwinServerDown` only after
+        ``max_retries`` consecutive recoveries also failed.
         """
-        self.state, tput, telem = self._chunk(
+        if self.watchdog is None:
+            return self._step_chunk_raw()
+        return self._step_chunk_guarded()
+
+    def _step_chunk_raw(self):
+        gen = self._gen
+        state, tput, telem = self._chunk(
             self.static, self.state, self.power, self.fairness)
+        if gen != self._gen:
+            # a rollback superseded this attempt while it ran (it timed
+            # out and was abandoned): its result must not clobber the
+            # restored state the retry is serving from
+            raise RuntimeError("stale chunk result discarded "
+                               "(superseded by a rollback)")
+        self.state = state
         kpis = obs_telemetry.summarize(telem, tti_s=self.sim.params.tti_s)
         kpis["t"] = float(self.state.t)
         kpis["active_ues"] = float(self.state.active.sum())
         self.last_tput, self.last_telem = tput, telem
         return kpis
+
+    def _step_chunk_guarded(self):
+        wd = self.watchdog
+        delay = wd.backoff_s
+        for attempt in range(wd.max_retries + 1):
+            try:
+                kpis = run_with_timeout(self._step_chunk_raw,
+                                        wd.chunk_timeout_s)
+                if not bool(robust_guard.carry_ok(self.state)):
+                    raise GuardViolation(
+                        "carry invariants violated after chunk: "
+                        + "; ".join(robust_guard.carry_violations(self.state)
+                                    or ["(guard tripped, no host detail)"]))
+            except Exception as e:  # noqa: BLE001 -- the watchdog's job
+                self.fault_history.append(
+                    f"attempt {attempt}: {type(e).__name__}: {e}")
+                if (not isinstance(e, TwinFault)
+                        and self.inc_backend in ("pallas", "auto")):
+                    # degradation ladder: the fused kernel failed outside
+                    # the capability probe -- rebuild on the XLA route
+                    # before retrying (same trajectory, slower program)
+                    self.fault_history.append(
+                        f"degrading inc_backend={self.inc_backend!r} "
+                        "-> 'xla'")
+                    self._build("xla")
+                step = self._rollback()
+                self.fault_history.append(f"rolled back to t={step}")
+                if attempt < wd.max_retries:
+                    time.sleep(delay)
+                    delay *= wd.backoff_factor
+            else:
+                self._chunks_since_ckpt += 1
+                if self._chunks_since_ckpt >= wd.ckpt_every_chunks:
+                    self.checkpoint()
+                    self._chunks_since_ckpt = 0
+                return kpis
+        raise TwinServerDown(
+            f"{wd.max_retries + 1} consecutive chunk attempts failed at "
+            f"t={self.t}; stopping gracefully", history=self.fault_history)
+
+    def _rollback(self) -> int:
+        """Restore the newest *valid* checkpoint (skipping corrupt steps).
+
+        Only the current tree's structure is read, never its leaf values,
+        so rolling back over buffers invalidated by a failed donated
+        chunk is safe -- restore rebuilds fresh device arrays from the
+        host snapshot.
+        """
+        tree, _, step = ckpt.restore_latest_valid(
+            self.ckpt_dir, self._tree())
+        self._gen += 1
+        self.state, self.power = tree["state"], tree["power"]
+        self.fairness = tree["fairness"]
+        self._chunks_since_ckpt = 0
+        return step
 
     def serve(self, n_chunks: int):
         """Generator: stream ``n_chunks`` KPI summaries, one per chunk."""
@@ -144,21 +295,28 @@ class TwinServer:
                                keep_last=self.keep_last, extra=extra)
 
     def restore(self, step=None) -> int:
-        """Rewind to a checkpointed TTI (default: the latest).
+        """Rewind to a checkpointed TTI (default: the newest valid one).
 
         Restores state *and* controls, so the resumed trajectory is
         bitwise the uninterrupted one -- including any control updates
         that were live at checkpoint time.  Only the current tree's
         *structure* is read (never its leaf values), so restoring over
-        donated buffers is safe.
+        donated buffers is safe.  With ``step=None`` a corrupt or
+        truncated latest step falls back to the previous valid one
+        (``train.checkpoint.restore_latest_valid``); an explicit ``step``
+        raises ``CheckpointCorrupt`` if that step fails validation.
         """
         if self.ckpt_dir is None:
             raise ValueError("TwinServer built without ckpt_dir")
         if step is None:
-            step = ckpt.latest_step(self.ckpt_dir)
-        tree, _ = ckpt.restore(self.ckpt_dir, step, self._tree())
+            tree, _, step = ckpt.restore_latest_valid(
+                self.ckpt_dir, self._tree())
+        else:
+            tree, _ = ckpt.restore(self.ckpt_dir, step, self._tree())
+        self._gen += 1
         self.state, self.power = tree["state"], tree["power"]
         self.fairness = tree["fairness"]
+        self._chunks_since_ckpt = 0
         return step
 
 
